@@ -1,0 +1,135 @@
+//! END-TO-END DRIVER (DESIGN.md §4): serve next-word prediction from the
+//! *trained* LM artifacts, all three layers composed:
+//!
+//!   L1/L2  the AOT HLO (Pallas gate/expert kernels + LSTM step) built by
+//!          `make artifacts`, executed through PJRT;
+//!   L3     the Rust coordinator: routing, per-expert dynamic batching,
+//!          metrics.
+//!
+//! The driver replays the held-out token stream through the LSTM to get
+//! real decoder contexts, serves batched top-10 queries against both the
+//! DS-Softmax engine and the exact full softmax, and reports accuracy,
+//! agreement, latency percentiles and throughput.  Results are recorded
+//! in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example lm_serve
+
+use std::sync::Arc;
+
+use ds_softmax::artifacts::{artifacts_root, Manifest};
+use ds_softmax::coordinator::engine::PjrtBatchEngine;
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
+use ds_softmax::eval::AgreementCounter;
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::runtime::{PjrtDsEngine, Runtime};
+use ds_softmax::util::cli::Args;
+use ds_softmax::util::stats::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let root = args
+        .get("artifacts-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_root);
+    let m = Manifest::load(root.join("lm"))?;
+    let lstm_info = m.lstm.clone().ok_or_else(|| anyhow::anyhow!("no lstm in artifact"))?;
+    println!(
+        "== LM serving: vocab={} d={} K={} p={} (trained; theoretical speedup {:.2}x) ==",
+        m.n_classes, m.d, m.k, m.p, m.speedup_theoretical
+    );
+
+    // --- stage 1: real decoder contexts from the held-out stream -------
+    let rt = Runtime::cpu()?;
+    let engine = PjrtDsEngine::new(rt, m.clone())?;
+    let lstm = engine.lstm_weights()?;
+    let tokens = m.load_i32("eval_tokens")?;
+    let bucket = *m.buckets.iter().max().unwrap();
+    let hidden = lstm_info.hidden;
+    let steps = args.usize_or("steps", 40).min(tokens.len() / bucket - 1);
+    let mut state = vec![0.0f32; 2 * 2 * bucket * hidden];
+    let mut contexts: Vec<Vec<f32>> = Vec::new();
+    let mut targets: Vec<u32> = Vec::new();
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let toks: Vec<i32> = (0..bucket).map(|b| tokens[b * (tokens.len() / bucket) + s]).collect();
+        let next: Vec<i32> = (0..bucket).map(|b| tokens[b * (tokens.len() / bucket) + s + 1]).collect();
+        let (hs, ns) = engine.lstm_step(&lstm, &toks, &state, bucket)?;
+        state = ns;
+        for r in 0..bucket {
+            contexts.push(hs[r * hidden..(r + 1) * hidden].to_vec());
+            targets.push(next[r] as u32);
+        }
+    }
+    println!(
+        "LSTM (AOT HLO via PJRT): {} decode steps x batch {bucket} -> {} contexts in {:?}",
+        steps,
+        contexts.len(),
+        t0.elapsed()
+    );
+
+    // --- stage 2: serve through the coordinator ------------------------
+    let set = m.expert_set()?;
+    let reference_full = FullSoftmax::new(m.full_weights()?);
+    let reference_ds = DsSoftmax::new(set.clone());
+    let engine: Arc<dyn ds_softmax::coordinator::BatchEngine> = if args.flag("pjrt") {
+        println!("expert softmax backend: PJRT (AOT HLO)");
+        Arc::new(PjrtBatchEngine::new(m.clone())?)
+    } else {
+        println!("expert softmax backend: native");
+        Arc::new(NativeBatchEngine::new(DsSoftmax::with_utilization(
+            set,
+            m.utilization.clone(),
+        )))
+    };
+    let c = Coordinator::start(engine, CoordinatorConfig::default());
+
+    let t0 = std::time::Instant::now();
+    let pend: Vec<_> = contexts
+        .iter()
+        .map(|h| c.submit(h.clone(), 10).unwrap())
+        .collect();
+    let mut ds_acc = AgreementCounter::new(&[1, 5, 10]);
+    let mut full_acc = AgreementCounter::new(&[1, 5, 10]);
+    let mut top1_agree = 0u64;
+    for ((h, &y), p) in contexts.iter().zip(&targets).zip(pend) {
+        let top = p.wait().map_err(|e| anyhow::anyhow!("{e}"))?;
+        ds_acc.observe(&top, y);
+        let exact = reference_full.query(h, 10);
+        full_acc.observe(&exact, y);
+        top1_agree += (top[0].0 == exact[0].0) as u64;
+    }
+    let dt = t0.elapsed();
+
+    // --- report ---------------------------------------------------------
+    let n_q = contexts.len();
+    println!("\n{} queries in {:?} -> {:.0} qps", n_q, dt, n_q as f64 / dt.as_secs_f64());
+    println!("{}", c.metrics.report());
+    let dr = ds_acc.rates();
+    let fr = full_acc.rates();
+    println!("\n               top1    top5    top10");
+    println!("DS-Softmax    {:.4}  {:.4}  {:.4}", dr[0], dr[1], dr[2]);
+    println!("Full softmax  {:.4}  {:.4}  {:.4}", fr[0], fr[1], fr[2]);
+    println!(
+        "top-1 agreement with exact softmax: {:.4}",
+        top1_agree as f64 / n_q as f64
+    );
+    let measured_u = c.metrics.utilization();
+    println!(
+        "\nmeasured utilization -> speedup {:.2}x (manifest: {:.2}x)",
+        reference_ds.set.speedup(&measured_u),
+        m.speedup_theoretical
+    );
+    let (p50, p95, p99) = {
+        let h = c.metrics.total_latency.lock().unwrap();
+        (h.percentile_ns(0.50), h.percentile_ns(0.95), h.percentile_ns(0.99))
+    };
+    println!(
+        "p50/p95/p99 total latency: {} / {} / {}",
+        fmt_ns(p50),
+        fmt_ns(p95),
+        fmt_ns(p99),
+    );
+    Ok(())
+}

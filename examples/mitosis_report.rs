@@ -1,0 +1,41 @@
+//! Mitosis-training memory report (paper §3.6 / Fig. 5a): prints the
+//! training-memory trajectory for growing 2 → 64 experts, in units of
+//! one full softmax, and compares the peak against naive (no-mitosis)
+//! training.
+//!
+//!     cargo run --release --example mitosis_report
+
+use ds_softmax::model::mitosis::MitosisSchedule;
+
+fn main() {
+    println!("== Mitosis training memory (Fig. 5a) ==\n");
+    // terminal sparsity from the paper's PTB DS-64 (~1/16 of classes per
+    // expert after pruning at 64 experts with m≈1.2 → 64·(1.2/64)=1.2x)
+    let floor = 1.2 / 64.0;
+    let s = MitosisSchedule::paper(2, 64, floor);
+    let (traj, peak) = s.trajectory();
+    println!("epoch  K   memory (full-softmax units)");
+    let mut epoch = 0;
+    for phase in &s.phases {
+        for e in 0..phase.epochs {
+            if e % 5 == 0 || e == phase.epochs - 1 {
+                println!(
+                    "{:>5}  {:>2}  {:>6.2}  {}",
+                    epoch,
+                    phase.k,
+                    traj[epoch],
+                    bar(traj[epoch], 4.0)
+                );
+            }
+            epoch += 1;
+        }
+    }
+    println!("\npeak memory: {peak:.2}x one full softmax");
+    println!("naive DS-64: {:.2}x  ({:.0}x saved)", s.naive_peak(), s.naive_peak() / peak);
+    println!("paper Fig. 5a reports: <= 3.25x  -> {}", if peak <= 3.5 { "REPRODUCED" } else { "NOT reproduced" });
+}
+
+fn bar(x: f64, max: f64) -> String {
+    let n = ((x / max) * 40.0) as usize;
+    "#".repeat(n.min(60))
+}

@@ -1,0 +1,80 @@
+//! Quickstart: build a synthetic DS-Softmax index, serve queries through
+//! the coordinator, and compare against the exact full softmax.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! No artifacts needed — everything is generated in-process.
+
+use std::sync::Arc;
+
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
+use ds_softmax::eval::AgreementCounter;
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::tensor::Matrix;
+use ds_softmax::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let (n, d, k) = (10_000, 200, 64);
+    println!("== DS-Softmax quickstart: N={n} d={d} K={k} ==\n");
+    let mut rng = Rng::new(0);
+
+    // 1. a doubly-sparse index (synthetic weights at paper scale)
+    let set = ExpertSet::synthetic(n, d, k, 1.2, &mut rng);
+    set.validate().map_err(anyhow::Error::msg)?;
+    let uniform = vec![1.0 / k as f64; k];
+    println!(
+        "expert sizes ≈ {} classes; mean redundancy m = {:.2}; theoretical speedup {:.1}x",
+        set.expert_sizes().iter().sum::<usize>() / k,
+        set.mean_redundancy(),
+        set.speedup(&uniform),
+    );
+
+    // 2. single queries: DS vs full softmax latency + FLOPs
+    let ds = DsSoftmax::new(set.clone());
+    let full = FullSoftmax::new(Matrix::random(n, d, &mut rng, 0.05));
+    let h = rng.normal_vec(d, 1.0);
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        std::hint::black_box(full.query(&h, 10));
+    }
+    let t_full = t0.elapsed() / 100;
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        std::hint::black_box(ds.query(&h, 10));
+    }
+    let t_ds = t0.elapsed() / 100;
+    println!(
+        "\nfull softmax: {t_full:?}/query ({} FLOPs)\nds-softmax:   {t_ds:?}/query ({} FLOPs)\nlatency speedup {:.1}x, FLOPs speedup {:.1}x",
+        full.flops_per_query(),
+        ds.flops_per_query(),
+        t_full.as_secs_f64() / t_ds.as_secs_f64(),
+        full.flops_per_query() as f64 / ds.flops_per_query() as f64,
+    );
+
+    // 3. the serving coordinator: batched queries with metrics
+    let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(set)));
+    let c = Coordinator::start(engine, CoordinatorConfig::default());
+    let queries: Vec<Vec<f32>> = (0..2000).map(|_| rng.normal_vec(d, 1.0)).collect();
+    let t0 = std::time::Instant::now();
+    let pend: Vec<_> = queries
+        .iter()
+        .map(|h| c.submit(h.clone(), 10).unwrap())
+        .collect();
+    let mut agree = AgreementCounter::new(&[1, 10]);
+    for (h, p) in queries.iter().zip(pend) {
+        let top = p.wait().unwrap();
+        agree.observe(&top, ds.query(h, 1)[0].0);
+    }
+    let dt = t0.elapsed();
+    println!(
+        "\ncoordinator: 2000 queries in {dt:?} ({:.0} qps)",
+        2000.0 / dt.as_secs_f64()
+    );
+    println!("{}", c.metrics.report());
+    let r = agree.rates();
+    println!("\nagreement with direct engine: top1={:.3} top10={:.3}", r[0], r[1]);
+    Ok(())
+}

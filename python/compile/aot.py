@@ -1,0 +1,326 @@
+"""AOT export: lower the inference graphs to HLO *text* and dump trained
+weights for the Rust runtime (`rust/src/artifacts`, `rust/src/runtime`).
+
+Interchange notes (see /opt/xla-example/README.md):
+  * HLO text, NOT HloModuleProto.serialize() — jax >= 0.5 emits 64-bit
+    instruction ids that xla_extension 0.5.1 rejects; the text parser
+    reassigns ids and round-trips cleanly.
+  * lowered with return_tuple=True; the Rust side unwraps the tuple.
+  * Pallas kernels lower with interpret=True so the HLO is plain ops the
+    CPU PJRT client can run.
+
+Artifact sets produced (under --out):
+
+  unit/   tiny random-pruned DS layer (N=64, d=16, K=4) — no training;
+          exists so `cargo test` integration tests are fast + hermetic.
+  lm/     the end-to-end LM artifact: 2-layer LSTM (from nets.py) trained
+          on the Zipf topic corpus, full-softmax head + DS-Softmax head
+          (K=8) retrained on frozen contexts, all inference graphs lowered
+          at batch buckets {1, 8, 32}.
+
+Each set carries manifest.json describing shapes, files, expert contents,
+measured utilization and the theoretical FLOPs speedup.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model as M, nets, train
+from .kernels import expert_softmax as es
+from .kernels import gating
+
+BUCKETS = (1, 8, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _write_bin(path: str, arr: np.ndarray):
+    arr = np.ascontiguousarray(arr)
+    arr.tofile(path)
+
+
+# ---------------------------------------------------------------------------
+# Graph lowering
+# ---------------------------------------------------------------------------
+def lower_gate(b: int, k: int, d: int) -> str:
+    """gate(h[b,d], u[k,d]) -> (probs[b,k], top1[b] i32)."""
+
+    def fn(h, u):
+        probs, top1 = gating.gate_topk(h, u, block_b=b)
+        return probs, top1
+
+    return to_hlo_text(jax.jit(fn).lower(_spec((b, d)), _spec((k, d))))
+
+
+def lower_expert(b: int, p: int, d: int, block_p: int) -> str:
+    """expert(h[b,d], w[p,d], gate[b], valid[] i32) -> (probs[b,p],)."""
+
+    def fn(h, w, g, valid):
+        return (es.expert_softmax(h, w, g, valid, block_b=b, block_p=block_p),)
+
+    return to_hlo_text(
+        jax.jit(fn).lower(
+            _spec((b, d)), _spec((p, d)), _spec((b,)), _spec((), jnp.int32)
+        )
+    )
+
+
+def lower_full(b: int, n: int, d: int) -> str:
+    """full(h[b,d], w[n,d]) -> (probs[b,n],)."""
+
+    def fn(h, w):
+        return (jax.nn.softmax(h @ w.T, axis=-1),)
+
+    return to_hlo_text(jax.jit(fn).lower(_spec((b, d)), _spec((n, d))))
+
+
+def lower_lstm_step(b: int, vocab: int, embed: int, hidden: int, layers: int) -> str:
+    """One LM decode step.
+
+    lstm_step(embed_tbl[v,e], wx0, wh0, b0, wx1, wh1, b1,
+              tokens[b] i32, state[layers,2,b,h]) -> (h_out[b,h], new_state)
+    """
+
+    def fn(embed_tbl, wx0, wh0, b0, wx1, wh1, b1, tokens, state):
+        params = {
+            "embed": embed_tbl,
+            "cells": [
+                {"wx": wx0, "wh": wh0, "b": b0},
+                {"wx": wx1, "wh": wh1, "b": b1},
+            ],
+        }
+        return nets.lstm_lm_step(params, tokens, state)
+
+    return to_hlo_text(
+        jax.jit(fn).lower(
+            _spec((vocab, embed)),
+            _spec((embed, 4 * hidden)),
+            _spec((hidden, 4 * hidden)),
+            _spec((4 * hidden,)),
+            _spec((hidden, 4 * hidden)),
+            _spec((hidden, 4 * hidden)),
+            _spec((4 * hidden,)),
+            _spec((b,), jnp.int32),
+            _spec((2, 2, b, hidden)),
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Artifact sets
+# ---------------------------------------------------------------------------
+def export_ds_artifacts(
+    out: str,
+    name: str,
+    packed: M.Packed,
+    w_full: np.ndarray,
+    utilization: np.ndarray,
+    extra: dict | None = None,
+    lstm: dict | None = None,
+    buckets=BUCKETS,
+    block_p: int = 128,
+    extra_weights: dict | None = None,
+):
+    """Write one artifact set: HLO graphs + weight blobs + manifest."""
+    adir = os.path.join(out, name)
+    os.makedirs(adir, exist_ok=True)
+    k, p, d = packed.weights.shape
+    n = w_full.shape[0]
+
+    files = {}
+    for b in buckets:
+        files[f"gate_b{b}"] = f"gate_b{b}.hlo.txt"
+        with open(os.path.join(adir, files[f"gate_b{b}"]), "w") as f:
+            f.write(lower_gate(b, k, d))
+        files[f"expert_b{b}"] = f"expert_b{b}.hlo.txt"
+        with open(os.path.join(adir, files[f"expert_b{b}"]), "w") as f:
+            f.write(lower_expert(b, p, d, block_p))
+        files[f"full_b{b}"] = f"full_b{b}.hlo.txt"
+        with open(os.path.join(adir, files[f"full_b{b}"]), "w") as f:
+            f.write(lower_full(b, n, d))
+
+    weights = {
+        "u": {"file": "u.bin", "shape": [k, d], "dtype": "f32"},
+        "packed": {"file": "packed.bin", "shape": [k, p, d], "dtype": "f32"},
+        "class_ids": {"file": "class_ids.bin", "shape": [k, p], "dtype": "i32"},
+        "valid": {"file": "valid.bin", "shape": [k], "dtype": "i32"},
+        "w_full": {"file": "w_full.bin", "shape": [n, d], "dtype": "f32"},
+    }
+    _write_bin(os.path.join(adir, "u.bin"), packed.u)
+    _write_bin(os.path.join(adir, "packed.bin"), packed.weights)
+    _write_bin(os.path.join(adir, "class_ids.bin"), packed.class_ids)
+    _write_bin(os.path.join(adir, "valid.bin"), packed.valid)
+    _write_bin(os.path.join(adir, "w_full.bin"), w_full.astype(np.float32))
+
+    if lstm is not None:
+        params = lstm["params"]
+        vocab, embed = params["embed"].shape
+        hidden = params["cells"][0]["wh"].shape[0]
+        for b in buckets:
+            files[f"lstm_step_b{b}"] = f"lstm_step_b{b}.hlo.txt"
+            with open(os.path.join(adir, files[f"lstm_step_b{b}"]), "w") as f:
+                f.write(lower_lstm_step(b, vocab, embed, hidden, 2))
+        lstm_names = ["lstm_embed", "wx0", "wh0", "b0", "wx1", "wh1", "b1"]
+        arrs = [
+            params["embed"],
+            params["cells"][0]["wx"], params["cells"][0]["wh"], params["cells"][0]["b"],
+            params["cells"][1]["wx"], params["cells"][1]["wh"], params["cells"][1]["b"],
+        ]
+        for nm, arr in zip(lstm_names, arrs):
+            arr = np.asarray(arr, np.float32)
+            weights[nm] = {
+                "file": f"{nm}.bin", "shape": list(arr.shape), "dtype": "f32",
+            }
+            _write_bin(os.path.join(adir, f"{nm}.bin"), arr)
+
+    weights.update(extra_weights or {})
+    manifest = {
+        "name": name,
+        "n_classes": n,
+        "d": d,
+        "k": k,
+        "p": p,
+        "buckets": list(buckets),
+        "block_p": block_p,
+        "files": files,
+        "weights": weights,
+        "utilization": [float(x) for x in utilization],
+        "expert_sizes": [int(x) for x in packed.valid],
+        "speedup_theoretical": float(M.ds_speedup(packed, utilization)),
+    }
+    if lstm is not None:
+        manifest["lstm"] = {
+            "vocab": int(lstm["params"]["embed"].shape[0]),
+            "embed": int(lstm["params"]["embed"].shape[1]),
+            "hidden": int(lstm["params"]["cells"][0]["wh"].shape[0]),
+            "layers": 2,
+        }
+    manifest.update(extra or {})
+    with open(os.path.join(adir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def build_unit(out: str):
+    """Tiny hermetic artifact for fast Rust integration tests."""
+    key = jax.random.PRNGKey(42)
+    n, d, k = 64, 16, 4
+    params, state = M.ds_init(key, k, n, d, scale=0.5)
+    # Deterministic random prune: keep ~25% of rows per expert + footnote-4.
+    params, state = M.ds_prune(params, state, gamma=float(jnp.percentile(
+        jnp.sqrt(jnp.sum(params.w**2, -1)), 75)))
+    packed = M.ds_pack(params, state, pad_to=8)
+    w_full = np.asarray(jax.random.normal(jax.random.PRNGKey(7), (n, d)), np.float32)
+    h = jax.random.normal(jax.random.PRNGKey(8), (256, d))
+    util = M.measure_utilization(packed, h)
+    return export_ds_artifacts(out, "unit", packed, w_full, util, block_p=8,
+                               extra={"kind": "unit"})
+
+
+def build_lm(out: str, *, vocab=2000, embed=64, hidden=64, k=8, quick=False):
+    """The end-to-end LM artifact (trained)."""
+    t0 = time.time()
+    corpus = data.zipf_topic_corpus(vocab, 60_000 if not quick else 12_000,
+                                    n_topics=16, seed=0)
+    cut = int(len(corpus) * 0.9)
+    xs, ys = data.lm_batches(corpus[:cut], batch=32, seq=20)
+    key = jax.random.PRNGKey(0)
+    params = nets.lstm_lm_init(key, vocab, embed, hidden)
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (vocab, hidden)) * 0.05
+
+    flat = xs.reshape(-1, 32, 20)
+    flat_y = ys.reshape(-1, 32, 20)
+    steps = 400 if not quick else 60
+    idxs = np.resize(np.arange(len(flat)), steps)
+    # Each "example" fed to pretrain_backbone is one whole (32, 20) LM batch.
+    def lm_apply(p, x):
+        return nets.lstm_lm_apply(p, x.reshape(-1, 20))
+
+    params, w_full, losses = train.pretrain_backbone(
+        lm_apply, params, w0,
+        flat[idxs], flat_y[idxs], steps=steps, batch=1, seed=0,
+    )
+    print(f"[aot] lm pretrain: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({time.time()-t0:.1f}s)")
+
+    # Frozen contexts for head retraining (footnote 2).
+    happly = jax.jit(nets.lstm_lm_apply)
+    hs, ys_flat = [], []
+    for i in range(min(len(flat), 60)):
+        h = np.asarray(happly(params, jnp.asarray(flat[i])))
+        hs.append(h.reshape(-1, hidden))
+        ys_flat.append(flat_y[i].reshape(-1))
+    h_train = np.concatenate(hs)
+    y_train = np.concatenate(ys_flat)
+
+    cfg = train.DsConfig(
+        k=k, steps=1500 if not quick else 200, lambda_lasso=0.01,
+        lambda_expert=0.01, lr=5e-3, prune_every=50,
+        task_threshold=losses[-1] * 1.6, batch=256, seed=0, pad_to=128,
+    )
+    res = train.train_ds(h_train, y_train, vocab, cfg)
+    packed = M.ds_pack(res.params, res.state, pad_to=128)
+    util = M.measure_utilization(packed, jnp.asarray(h_train[:4096]))
+    acc_ds = train.eval_topk_accuracy(packed, h_train[-8192:], y_train[-8192:])
+    acc_full = train.eval_full_topk_accuracy(w_full, h_train[-8192:], y_train[-8192:])
+    print(f"[aot] lm ds acc={acc_ds} full acc={acc_full} "
+          f"speedup={M.ds_speedup(packed, util):.2f}x ({time.time()-t0:.1f}s)")
+
+    eval_tokens = corpus[cut:].astype(np.int32)
+    os.makedirs(os.path.join(out, "lm"), exist_ok=True)
+    _write_bin(os.path.join(out, "lm", "eval_tokens.bin"), eval_tokens)
+    lstm = {"params": params}
+    manifest = export_ds_artifacts(
+        out, "lm", packed, w_full, util,
+        extra={
+            "kind": "lm",
+            "acc_ds": {k: float(v) for k, v in acc_ds.items()},
+            "acc_full": {k: float(v) for k, v in acc_full.items()},
+        },
+        lstm=lstm,
+        extra_weights={
+            "eval_tokens": {"file": "eval_tokens.bin",
+                            "shape": [len(eval_tokens)], "dtype": "i32"},
+        },
+    )
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny training budgets")
+    ap.add_argument("--only", choices=["unit", "lm"], default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    if args.only in (None, "unit"):
+        m = build_unit(args.out)
+        print(f"[aot] unit artifact: k={m['k']} p={m['p']} "
+              f"speedup={m['speedup_theoretical']:.2f}x")
+    if args.only in (None, "lm"):
+        build_lm(args.out, quick=args.quick)
+    # stamp for make
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Synthetic dataset generators — the data substrates (DESIGN.md §5).
+
+Each generator stands in for one of the paper's evaluation assets:
+
+  hierarchical_clusters   §3.1 synthetic two-level hierarchy (Eq. 7–9)
+  zipf_topic_corpus       PTB / WikiText-2 stand-in: Zipf marginals +
+                          latent topic co-occurrence structure
+  translation_pairs       IWSLT En-Ve stand-in: noisy lexicon mapping
+  glyphs                  CASIA stand-in: uniform-class prototype images
+
+All generators are deterministic in ``seed`` and return numpy arrays, so
+the Rust data mirrors (rust/src/data/) can replicate them bit-for-bit
+where needed (same algorithm, same PRNG recipe is NOT required — only the
+same distributional shape; cross-checked statistically in tests).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# §3.1 synthetic hierarchy (Eq. 7–9)
+# ---------------------------------------------------------------------------
+def hierarchical_clusters(
+    n_super: int,
+    n_sub_per: int,
+    *,
+    dim: int = 100,
+    d: float = 10.0,
+    n_per_sub: int = 50,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Two-level Gaussian hierarchy.
+
+    c_super ~ N(0, d³I); c_sub ~ N(c_super, d²I); x ~ N(c_sub, dI).
+
+    Returns:
+      (x, y, super_of): inputs (M, dim) f32, sub-cluster labels (M,) i32,
+      and the sub→super assignment (n_super*n_sub_per,) i32 used only for
+      evaluation (the model never sees it — Fig. 3 checks it is recovered).
+    """
+    rng = np.random.default_rng(seed)
+    n_sub = n_super * n_sub_per
+    sup = rng.normal(0.0, d**1.5, size=(n_super, dim))
+    sub = sup.repeat(n_sub_per, axis=0) + rng.normal(0.0, d, size=(n_sub, dim))
+    x = sub.repeat(n_per_sub, axis=0) + rng.normal(
+        0.0, d**0.5, size=(n_sub * n_per_sub, dim)
+    )
+    y = np.arange(n_sub, dtype=np.int32).repeat(n_per_sub)
+    super_of = np.arange(n_sub, dtype=np.int32) // n_sub_per
+    perm = rng.permutation(len(x))
+    return x[perm].astype(np.float32), y[perm], super_of
+
+
+# ---------------------------------------------------------------------------
+# LM corpus: Zipf marginals + latent topics (PTB / Wiki-2 stand-in)
+# ---------------------------------------------------------------------------
+def zipf_topic_corpus(
+    vocab: int,
+    n_tokens: int,
+    *,
+    n_topics: int = 20,
+    zipf_a: float = 1.05,
+    topic_sharpness: float = 8.0,
+    topic_persistence: float = 0.98,
+    seed: int = 0,
+) -> np.ndarray:
+    """Token stream with (a) Zipf-skewed unigram frequencies and (b) latent
+    topical co-occurrence clusters — the two properties DS-Softmax exploits
+    (frequent words acquire multi-expert redundancy; topical words cluster
+    into experts; see paper Fig. 5b and §3.7).
+
+    A hidden topic follows a sticky Markov chain; each topic boosts a
+    contiguous band of the (frequency-sorted) vocabulary.
+
+    Returns: (n_tokens,) int32 token ids in [0, vocab).
+    """
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    base = 1.0 / ranks**zipf_a
+    base /= base.sum()
+
+    # Topic t boosts band [t*vocab/n_topics, (t+1)*vocab/n_topics).
+    band = vocab // n_topics
+    topic_dists = np.empty((n_topics, vocab))
+    for t in range(n_topics):
+        boost = np.ones(vocab)
+        lo, hi = t * band, min(vocab, (t + 1) * band)
+        boost[lo:hi] = topic_sharpness
+        p = base * boost
+        topic_dists[t] = p / p.sum()
+    cum = topic_dists.cumsum(axis=1)
+
+    tokens = np.empty(n_tokens, dtype=np.int32)
+    topic = rng.integers(n_topics)
+    stay = rng.random(n_tokens)
+    u = rng.random(n_tokens)
+    for i in range(n_tokens):
+        if stay[i] > topic_persistence:
+            topic = rng.integers(n_topics)
+        tokens[i] = np.searchsorted(cum[topic], u[i])
+    return tokens
+
+
+def lm_batches(
+    tokens: np.ndarray, batch: int, seq: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Shape a token stream into (num, batch, seq) inputs/targets."""
+    per = len(tokens) // batch
+    data = tokens[: per * batch].reshape(batch, per)
+    num = (per - 1) // seq
+    xs = np.empty((num, batch, seq), np.int32)
+    ys = np.empty((num, batch, seq), np.int32)
+    for i in range(num):
+        xs[i] = data[:, i * seq : (i + 1) * seq]
+        ys[i] = data[:, i * seq + 1 : (i + 1) * seq + 1]
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# NMT pairs (IWSLT En-Ve stand-in)
+# ---------------------------------------------------------------------------
+def translation_pairs(
+    n_pairs: int,
+    *,
+    vocab_src: int = 4000,
+    vocab_tgt: int = 7709,
+    min_len: int = 4,
+    max_len: int = 16,
+    swap_prob: float = 0.15,
+    fertility_prob: float = 0.1,
+    zipf_a: float = 1.05,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Parallel corpus from a noisy 1:~1 lexicon.
+
+    Source tokens follow a Zipf distribution; each source id maps to a
+    deterministic target id (a fixed random permutation into the larger
+    target vocab) with local reordering (adjacent swaps) and occasional
+    one-to-two fertility — enough structure that a seq2seq learns a
+    near-deterministic alignment, so BLEU deltas across softmax variants
+    are attributable to the softmax, as in the paper's Table 2.
+
+    Returns (src, tgt) int32 arrays (n_pairs, max_len+2) — 0 = PAD,
+    1 = BOS, 2 = EOS; real ids start at 3.
+    """
+    rng = np.random.default_rng(seed)
+    usable_src = vocab_src - 3
+    usable_tgt = vocab_tgt - 3
+    lex = rng.permutation(usable_tgt)[:usable_src] + 3
+
+    ranks = np.arange(1, usable_src + 1, dtype=np.float64)
+    p = 1.0 / ranks**zipf_a
+    p /= p.sum()
+
+    src = np.zeros((n_pairs, max_len + 2), np.int32)
+    tgt = np.zeros((n_pairs, max_len + 2), np.int32)
+    for i in range(n_pairs):
+        ln = rng.integers(min_len, max_len + 1)
+        s = rng.choice(usable_src, size=ln, p=p) + 3
+        t = [lex[w - 3] for w in s]
+        # fertility: duplicate some target words
+        out = []
+        for w in t:
+            out.append(w)
+            if rng.random() < fertility_prob and len(out) < max_len:
+                out.append(w)
+        # local reordering
+        for j in range(len(out) - 1):
+            if rng.random() < swap_prob:
+                out[j], out[j + 1] = out[j + 1], out[j]
+        out = out[:max_len]
+        src[i, 0] = 1
+        src[i, 1 : 1 + ln] = s
+        src[i, 1 + ln] = 2
+        tgt[i, 0] = 1
+        tgt[i, 1 : 1 + len(out)] = out
+        tgt[i, 1 + len(out)] = 2
+    return src, tgt
+
+
+# ---------------------------------------------------------------------------
+# Glyph classification (CASIA stand-in, uniform class distribution)
+# ---------------------------------------------------------------------------
+def glyphs(
+    n_classes: int,
+    n_per_class: int,
+    *,
+    size: int = 12,
+    stroke_noise: float = 0.35,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Uniform-class synthetic 'handwriting': each class is a random binary
+    stroke prototype; samples are prototypes + Gaussian pixel noise +
+    small translations.  Uniformity is the property §3.4 needs (frequency-
+    based baselines like D-softmax cannot win here).
+
+    Returns (x, y): (M, size*size) f32 in [0,1]-ish, (M,) int32.
+    """
+    rng = np.random.default_rng(seed)
+    protos = (rng.random((n_classes, size, size)) < 0.3).astype(np.float32)
+    m = n_classes * n_per_class
+    xs = np.empty((m, size, size), np.float32)
+    ys = np.arange(n_classes, dtype=np.int32).repeat(n_per_class)
+    for c in range(n_classes):
+        for j in range(n_per_class):
+            img = protos[c]
+            # small random translation
+            dx, dy = rng.integers(-1, 2, size=2)
+            img = np.roll(np.roll(img, dx, axis=0), dy, axis=1)
+            xs[c * n_per_class + j] = img + rng.normal(0, stroke_noise, img.shape)
+    perm = rng.permutation(m)
+    return xs[perm].reshape(m, size * size), ys[perm]
+
+
+def train_test_split(
+    x: np.ndarray, y: np.ndarray, frac: float = 2 / 3, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Deterministic split (paper §3.4 uses 2/3 train)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(x))
+    cut = int(len(x) * frac)
+    tr, te = perm[:cut], perm[cut:]
+    return x[tr], y[tr], x[te], y[te]

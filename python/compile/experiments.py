@@ -1,0 +1,225 @@
+"""Experiment driver: regenerates the paper's training-side figures on
+real (small-scale) DS-Softmax training and writes JSON results to
+artifacts/experiments/ for EXPERIMENTS.md and the Rust side.
+
+  synthetic  Fig. 3  — 10x10 hierarchy recovery (expert–subcluster
+             incidence, purity), optional 100x100 with --big
+  ablation   Fig. 4  — drop L_lasso / L_expert / L_load, same world
+  mitosis    Fig. 5a — real mitosis training memory trajectory
+  lm         Table 1 (small scale) + Fig. 5b frequency↔redundancy
+
+Usage: python -m compile.experiments <name> [--out ../artifacts/experiments]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model as M, nets, train
+
+
+def _save(out: str, name: str, payload: dict):
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[experiments] wrote {path}")
+
+
+def _hierarchy_setup(n_super=10, n_sub=10, seed=0):
+    x, y, super_of = data.hierarchical_clusters(n_super, n_sub, n_per_sub=60, seed=seed)
+    n_classes = n_super * n_sub
+    key = jax.random.PRNGKey(seed)
+    p = nets.mlp_init(key, x.shape[1], 128, 64)
+    w0 = jax.random.normal(jax.random.PRNGKey(seed + 1), (n_classes, 64)) * 0.05
+    p, wf, losses = train.pretrain_backbone(nets.mlp_apply, p, w0, x, y, steps=600, batch=128)
+    h = np.asarray(nets.mlp_apply(p, jnp.asarray(x)))
+    return h, y, super_of, n_classes, wf, losses
+
+
+def _purity(mask: np.ndarray, super_of: np.ndarray, n_super: int) -> float:
+    purities = []
+    for k in range(mask.shape[0]):
+        ids = np.nonzero(mask[k])[0]
+        if len(ids):
+            purities.append(np.bincount(super_of[ids], minlength=n_super).max() / len(ids))
+    return float(np.mean(purities))
+
+
+def _ds_cfg(**over) -> train.DsConfig:
+    base = dict(
+        k=10, steps=4000, lambda_lasso=0.02, lambda_expert=0.02,
+        lambda_load=10.0, lr=5e-3, prune_every=50, task_threshold=0.75,
+    )
+    base.update(over)
+    return train.DsConfig(**base)
+
+
+def run_synthetic(out: str, big: bool = False):
+    """Fig. 3: the learned experts align with the hidden super clusters."""
+    sizes = [(10, 10)] + ([(100, 100)] if big else [])
+    results = {}
+    for n_super, n_sub in sizes:
+        h, y, super_of, n_classes, wf, losses = _hierarchy_setup(n_super, n_sub)
+        cfg = _ds_cfg(k=n_super)
+        res = train.train_ds(h, y, n_classes, cfg)
+        mask = np.asarray(res.state.mask)
+        packed = M.ds_pack(res.params, res.state)
+        util = M.measure_utilization(packed, jnp.asarray(h))
+        acc = train.eval_topk_accuracy(packed, h, y, ks=(1, 5))
+        acc_full = train.eval_full_topk_accuracy(wf, h, y, ks=(1, 5))
+        results[f"{n_super}x{n_sub}"] = {
+            "purity": _purity(mask, super_of, n_super),
+            "expert_sizes": mask.sum(1).tolist(),
+            "incidence": mask.astype(int).tolist() if n_super <= 10 else "omitted",
+            "acc_ds": acc,
+            "acc_full": acc_full,
+            "speedup": M.ds_speedup(packed, util),
+            "pretrain_loss_final": losses[-1],
+        }
+        print(f"[synthetic {n_super}x{n_sub}] purity={results[f'{n_super}x{n_sub}']['purity']:.3f} "
+              f"acc={acc} speedup={results[f'{n_super}x{n_sub}']['speedup']:.2f}x")
+    _save(out, "fig3_synthetic", results)
+
+
+def run_ablation(out: str):
+    """Fig. 4: remove each loss term on the 10x10 world."""
+    h, y, super_of, n_classes, _wf, _ = _hierarchy_setup()
+    variants = {
+        "full": {},
+        "no_lasso": {"lambda_lasso": 0.0},
+        "no_expert_lasso": {"lambda_expert": 0.0},
+        "no_load_balance": {"lambda_load": 0.0},
+    }
+    results = {}
+    for name, over in variants.items():
+        cfg = _ds_cfg(**over)
+        res = train.train_ds(h, y, n_classes, cfg)
+        mask = np.asarray(res.state.mask)
+        packed = M.ds_pack(res.params, res.state)
+        util = M.measure_utilization(packed, jnp.asarray(h))
+        acc = train.eval_topk_accuracy(packed, h, y, ks=(1,))
+        results[name] = {
+            "purity": _purity(mask, super_of, 10),
+            "alive_frac": float(mask.mean()),
+            "expert_sizes": mask.sum(1).tolist(),
+            "utilization": util.tolist(),
+            "util_cv": float(np.std(util) / (np.mean(util) + 1e-12)),
+            "acc_top1": acc["top1"],
+            "speedup": M.ds_speedup(packed, util),
+        }
+        print(f"[ablation {name}] purity={results[name]['purity']:.3f} "
+              f"alive={results[name]['alive_frac']:.3f} cv={results[name]['util_cv']:.2f} "
+              f"speedup={results[name]['speedup']:.2f}x")
+    _save(out, "fig4_ablation", results)
+
+
+def run_mitosis(out: str):
+    """Fig. 5a with *real* mitosis training on the 10x10 world, growing
+    2 → 16 experts (CPU budget); memory in full-softmax units."""
+    h, y, super_of, n_classes, _wf, _ = _hierarchy_setup()
+    cfg = _ds_cfg(k=16, steps=4800, task_threshold=1.0)
+    res, memory = train.train_ds_mitosis(h, y, n_classes, cfg, start_k=2, phase_steps=1200)
+    packed = M.ds_pack(res.params, res.state)
+    util = M.measure_utilization(packed, jnp.asarray(h))
+    acc = train.eval_topk_accuracy(packed, h, y, ks=(1,))
+    peak = max(m for _, m in memory)
+    # subsample trajectory for the JSON
+    traj = [(s, m) for s, m in memory if s % 50 == 0]
+    results = {
+        "k_final": 16,
+        "peak_memory_full_softmax_units": peak,
+        "naive_memory": 16.0,
+        "saving": 16.0 / peak,
+        "acc_top1": acc["top1"],
+        "speedup": M.ds_speedup(packed, util),
+        "trajectory": traj,
+    }
+    print(f"[mitosis] peak={peak:.2f}x (naive 16x) acc={acc} "
+          f"speedup={results['speedup']:.2f}x")
+    _save(out, "fig5a_mitosis", results)
+
+
+def run_lm(out: str):
+    """Small-scale Table 1 + Fig. 5b: train DS-{4,8,16} heads on the Zipf
+    topic corpus and record accuracy, speedup and the frequency↔
+    redundancy correlation."""
+    vocab = 2000
+    corpus = data.zipf_topic_corpus(vocab, 60_000, n_topics=16, seed=0)
+    xs, ys = data.lm_batches(corpus, batch=32, seq=20)
+    key = jax.random.PRNGKey(0)
+    params = nets.lstm_lm_init(key, vocab, 64, 64)
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (vocab, 64)) * 0.05
+    flat = xs.reshape(-1, 32, 20)
+    flat_y = ys.reshape(-1, 32, 20)
+
+    def lm_apply(p, x):
+        return nets.lstm_lm_apply(p, x.reshape(-1, 20))
+
+    idxs = np.resize(np.arange(len(flat)), 400)
+    params, w_full, losses = train.pretrain_backbone(
+        lm_apply, params, w0, flat[idxs], flat_y[idxs], steps=400, batch=1)
+    happly = jax.jit(nets.lstm_lm_apply)
+    hs, yl = [], []
+    for i in range(min(len(flat), 60)):
+        hh = np.asarray(happly(params, jnp.asarray(flat[i])))
+        hs.append(hh.reshape(-1, 64))
+        yl.append(flat_y[i].reshape(-1))
+    h_train = np.concatenate(hs)
+    y_train = np.concatenate(yl)
+    counts = np.bincount(corpus, minlength=vocab)
+
+    acc_full = train.eval_full_topk_accuracy(w_full, h_train[-8192:], y_train[-8192:])
+    results = {"full": {"acc": acc_full}, "pretrain_loss": losses[-1]}
+    for k in (4, 8, 16):
+        cfg = train.DsConfig(
+            k=k, steps=1500, lambda_lasso=0.01, lambda_expert=0.01, lr=5e-3,
+            prune_every=50, task_threshold=losses[-1] * 1.6, batch=256,
+            pad_to=8, seed=0)
+        res = train.train_ds(h_train, y_train, vocab, cfg)
+        packed = M.ds_pack(res.params, res.state, pad_to=8)
+        util = M.measure_utilization(packed, jnp.asarray(h_train[:4096]))
+        acc = train.eval_topk_accuracy(packed, h_train[-8192:], y_train[-8192:])
+        mask = np.asarray(res.state.mask)
+        redundancy = mask.sum(0)  # experts per word
+        # Fig. 5b: correlation between log-frequency and redundancy
+        freq = np.log1p(counts.astype(np.float64))
+        corr = float(np.corrcoef(freq, redundancy)[0, 1])
+        results[f"ds{k}"] = {
+            "acc": acc,
+            "speedup": M.ds_speedup(packed, util),
+            "expert_sizes": mask.sum(1).tolist(),
+            "freq_redundancy_corr": corr,
+            "mean_redundancy": float(redundancy.mean()),
+        }
+        print(f"[lm DS-{k}] acc={acc} speedup={results[f'ds{k}']['speedup']:.2f}x "
+              f"freq↔redundancy corr={corr:.3f}")
+    _save(out, "table1_lm_trained", results)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("which", choices=["synthetic", "ablation", "mitosis", "lm", "all"])
+    ap.add_argument("--out", default="../artifacts/experiments")
+    ap.add_argument("--big", action="store_true", help="include 100x100 synthetic")
+    args = ap.parse_args()
+    runs = {
+        "synthetic": lambda: run_synthetic(args.out, args.big),
+        "ablation": lambda: run_ablation(args.out),
+        "mitosis": lambda: run_mitosis(args.out),
+        "lm": lambda: run_lm(args.out),
+    }
+    if args.which == "all":
+        for fn in runs.values():
+            fn()
+    else:
+        runs[args.which]()
+
+
+if __name__ == "__main__":
+    main()

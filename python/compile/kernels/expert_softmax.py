@@ -1,0 +1,118 @@
+"""L1 Pallas kernels: packed sparse-expert softmax (Eq. 2, selected expert).
+
+Two kernels compose the expert hot path:
+
+  expert_logits   (B, d) × (P, d)ᵀ, scaled by the per-example gate value
+                  and masked past ``valid`` packed rows.  Tiled over both
+                  batch and packed-class blocks so each grid step streams a
+                  (block_p, d) tile of the expert table HBM→VMEM — this is
+                  the BlockSpec expression of what a CUDA kernel would do
+                  with threadblocks over class rows.
+  row_softmax     numerically-stable softmax over the packed logits row.
+                  P = |v_k| padded; at paper scale P ≲ 4096 so a full row
+                  fits VMEM comfortably (16 KiB @ f32).
+
+The fused wrapper ``expert_softmax`` is what L2 calls; the pieces are
+exposed for the kernel-level pytest sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 64
+DEFAULT_BLOCK_P = 512
+NEG_INF = -1e30
+
+
+def _logits_kernel(valid_ref, h_ref, w_ref, gate_ref, out_ref, *, block_p: int):
+    """One (batch, packed-class) tile of gate-scaled masked logits."""
+    h = h_ref[...]  # (bb, d)
+    w = w_ref[...]  # (bp, d)
+    g = gate_ref[...]  # (bb,)
+    logits = jax.lax.dot_general(
+        h, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bb, bp)
+    logits = logits * g[:, None]
+    # Mask packed rows past `valid` (padding) to -inf surrogate.
+    j = pl.program_id(1)
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) + j * block_p
+    logits = jnp.where(col < valid_ref[0], logits, NEG_INF)
+    out_ref[...] = logits.astype(out_ref.dtype)
+
+
+def _softmax_kernel(x_ref, out_ref):
+    """Row-wise stable softmax; NEG_INF-masked entries become exact 0."""
+    x = x_ref[...]  # (bb, P)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    e = jnp.where(x <= NEG_INF / 2, 0.0, e)
+    out_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_p"))
+def expert_logits(
+    h: jax.Array,
+    w: jax.Array,
+    gate: jax.Array,
+    valid: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_p: int = DEFAULT_BLOCK_P,
+) -> jax.Array:
+    """Gate-scaled masked logits (B, P) for one packed expert."""
+    b, d = h.shape
+    p = w.shape[0]
+    bb, bp = min(block_b, b), min(block_p, p)
+    if b % bb or p % bp:
+        raise ValueError(f"shape ({b},{p}) not divisible by blocks ({bb},{bp})")
+    grid = (b // bb, p // bp)
+    valid = jnp.asarray(valid, jnp.int32).reshape((1,))
+    kernel = functools.partial(_logits_kernel, block_p=bp)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bp), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, p), h.dtype),
+        interpret=True,
+    )(valid, h, w, gate)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def row_softmax(x: jax.Array, *, block_b: int = DEFAULT_BLOCK_B) -> jax.Array:
+    """Stable row softmax of (B, P) masked logits."""
+    b, p = x.shape
+    bb = min(block_b, b)
+    if b % bb:
+        raise ValueError(f"batch {b} not divisible by block {bb}")
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(b // bb,),
+        in_specs=[pl.BlockSpec((bb, p), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def expert_softmax(
+    h: jax.Array,
+    w: jax.Array,
+    gate: jax.Array,
+    valid: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_p: int = DEFAULT_BLOCK_P,
+) -> jax.Array:
+    """Fused packed-expert softmax: (B, P) probabilities, padding = 0."""
+    logits = expert_logits(h, w, gate, valid, block_b=block_b, block_p=block_p)
+    return row_softmax(logits, block_b=block_b)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: sparse gating network (Eq. 1).
+
+Computes, for a batch of context vectors ``h`` and gating weights ``u``:
+
+    probs = softmax(h @ u.T)      (B, K)
+    top1  = argmax(probs)         (B,)  int32
+
+TPU mapping (see DESIGN.md §6): ``u`` is (K, d) with K ≤ 64 and d ≤ 512 in
+all paper configurations, so the whole gating matrix fits VMEM; we tile the
+*batch* dimension only.  The matmul targets the MXU as a
+(block_b, d) × (d, K) contraction; softmax + argmax ride the VPU.
+
+interpret=True everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _gate_kernel(h_ref, u_ref, probs_ref, top1_ref):
+    """One batch tile: probs = softmax(h·uᵀ); top1 = argmax."""
+    h = h_ref[...]  # (bb, d)
+    u = u_ref[...]  # (K, d)
+    # MXU contraction: (bb, d) x (d, K).
+    logits = jax.lax.dot_general(
+        h, u, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    probs_ref[...] = probs.astype(probs_ref.dtype)
+    top1_ref[...] = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def gate_topk(
+    h: jax.Array, u: jax.Array, *, block_b: int = DEFAULT_BLOCK_B
+) -> tuple[jax.Array, jax.Array]:
+    """Gating forward: returns ((B, K) probs, (B,) int32 top-1 index).
+
+    ``B`` must be a multiple of ``block_b`` or smaller than it; callers pad
+    the batch (the Rust batcher pads to bucket sizes, see coordinator/).
+    """
+    b, d = h.shape
+    k = u.shape[0]
+    bb = min(block_b, b)
+    if b % bb != 0:
+        raise ValueError(f"batch {b} not divisible by block {bb}")
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _gate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), h.dtype),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,
+    )(h, u)

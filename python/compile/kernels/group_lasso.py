@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: group-lasso row norms + prune mask (Eq. 3–4).
+
+Used on the training path each time ``L_task`` drops below the pruning
+threshold: compute every class-row's ℓ2 norm in one expert, derive the
+keep mask (norm > γ), and the surviving-row lasso loss contribution.
+
+Tiled over class rows: each grid step reduces a (block_n, d) tile, so the
+expert table streams HBM→VMEM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+
+
+def _norms_kernel(w_ref, norms_ref, keep_ref, *, gamma: float):
+    w = w_ref[...]  # (bn, d)
+    sq = jnp.sum(w * w, axis=-1)
+    norms = jnp.sqrt(sq)
+    norms_ref[...] = norms.astype(norms_ref.dtype)
+    keep_ref[...] = (norms > gamma).astype(keep_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "block_n"))
+def group_lasso(
+    w: jax.Array, *, gamma: float, block_n: int = DEFAULT_BLOCK_N
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Row norms, keep mask and lasso loss for one (N, d) expert.
+
+    Returns:
+      (norms, keep, loss) — (N,), (N,) in {0,1}, scalar Σ norms·keep.
+    """
+    n, d = w.shape
+    bn = min(block_n, n)
+    if n % bn:
+        raise ValueError(f"rows {n} not divisible by block {bn}")
+    kernel = functools.partial(_norms_kernel, gamma=gamma)
+    norms, keep = pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((n,), w.dtype),
+        ],
+        interpret=True,
+    )(w)
+    return norms, keep, jnp.sum(norms * keep)

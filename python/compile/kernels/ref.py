@@ -1,0 +1,144 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an exact (up to float assoc.) counterpart
+here; pytest sweeps shapes/dtypes with hypothesis and asserts allclose.
+These are also the building blocks of the L2 training graph, so the
+oracles double as the *semantic definition* of DS-Softmax inference:
+
+  gate_ref            Eq. 1 — normalized gate values + top-1 index
+  expert_softmax_ref  Eq. 2 restricted to one packed expert
+  group_lasso_ref     Eq. 3/4 — row norms, prune mask, lasso loss
+  topk_ref            final top-k retrieval over packed probabilities
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gate_ref(h: jax.Array, u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Gating network (Eq. 1).
+
+    Args:
+      h: (B, d) context vectors.
+      u: (K, d) gating weights.
+
+    Returns:
+      (probs, top1): (B, K) normalized gate values and (B,) argmax index.
+    """
+    logits = h @ u.T  # (B, K)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    return probs, jnp.argmax(probs, axis=-1)
+
+
+def expert_softmax_ref(
+    h: jax.Array, w: jax.Array, gate: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """Packed-expert scaled softmax (Eq. 2, single selected expert).
+
+    The gate value acts as an inverse temperature on the chosen expert's
+    logits.  Padding rows (beyond ``valid``) are masked out.
+
+    Args:
+      h: (B, d) context vectors.
+      w: (P, d) packed expert embedding rows (padded to P).
+      gate: (B,) chosen expert's gate value G'_k(h).
+      valid: scalar int — number of real rows in ``w``.
+
+    Returns:
+      (B, P) probabilities; padded entries are exactly 0.
+    """
+    logits = (h @ w.T) * gate[:, None]  # (B, P)
+    mask = jnp.arange(w.shape[0])[None, :] < valid
+    logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    e = jnp.where(mask, e, 0.0)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def group_lasso_ref(
+    w: jax.Array, gamma: float
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Row-group lasso quantities (Eq. 3–4) for one expert.
+
+    Args:
+      w: (N, d) expert embedding matrix.
+      gamma: prune threshold on row ℓ2 norm.
+
+    Returns:
+      (norms, keep_mask, loss): (N,) row norms, (N,) {0,1} keep mask
+      (norm > gamma survives), and the scalar lasso loss Σ‖Ŵ_c‖₂ over
+      *surviving* rows (pruned rows contribute 0, matching Eq. 4).
+    """
+    norms = jnp.sqrt(jnp.sum(w * w, axis=-1))
+    keep = (norms > gamma).astype(w.dtype)
+    loss = jnp.sum(norms * keep)
+    return norms, keep, loss
+
+
+def expert_lasso_ref(ws: jax.Array) -> jax.Array:
+    """Expert-level group lasso (Eq. 6): Σ_k sqrt(Σ_c ‖W_c^{(k)}‖²).
+
+    Args:
+      ws: (K, N, d) stacked expert embeddings.
+    """
+    per_expert = jnp.sqrt(jnp.sum(ws * ws, axis=(1, 2)))
+    return jnp.sum(per_expert)
+
+
+def load_balance_ref(gate_top1_value: jax.Array, top1: jax.Array, k: int) -> jax.Array:
+    """Load-balance loss (Eq. 5): squared coefficient of variation of the
+    per-expert accumulated (sparse) gate mass over a batch.
+
+    Args:
+      gate_top1_value: (B,) the chosen expert's gate value per example.
+      top1: (B,) chosen expert index per example.
+      k: number of experts.
+    """
+    mass = jnp.zeros((k,), gate_top1_value.dtype).at[top1].add(gate_top1_value)
+    mean = jnp.mean(mass)
+    var = jnp.mean((mass - mean) ** 2)
+    return var / (mean**2 + 1e-10)
+
+
+def topk_ref(probs: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k values and indices over the last axis."""
+    return jax.lax.top_k(probs, k)
+
+
+def ds_softmax_infer_ref(
+    h: jax.Array,
+    u: jax.Array,
+    packed: jax.Array,
+    class_ids: jax.Array,
+    valid: jax.Array,
+    k: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Whole inference path: gate -> chosen packed expert -> top-k classes.
+
+    Args:
+      h: (B, d) contexts.
+      u: (K, d) gating weights.
+      packed: (K, P, d) per-expert packed rows (padded).
+      class_ids: (K, P) global class id of each packed row.
+      valid: (K,) number of real rows per expert.
+      k: top-k to return.
+
+    Returns:
+      (expert_idx, top_probs, top_classes): (B,), (B, k), (B, k).
+    """
+    gp, top1 = gate_ref(h, u)
+    gv = jnp.take_along_axis(gp, top1[:, None], axis=1)[:, 0]
+    w = packed[top1]  # (B, P, d)
+    logits = jnp.einsum("bd,bpd->bp", h, w) * gv[:, None]
+    mask = jnp.arange(packed.shape[1])[None, :] < valid[top1][:, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.where(mask, jnp.exp(logits - m), 0.0)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    tv, ti = jax.lax.top_k(probs, k)
+    tc = jnp.take_along_axis(class_ids[top1], ti, axis=1)
+    return top1, tv, tc

@@ -1,0 +1,195 @@
+"""L2: the DS-Softmax layer (paper §2) plus the interchangeable
+full-softmax head, in JAX.
+
+Training semantics follow Algorithm 1:
+
+  * gate (Eq. 1): softmax over K gating logits, hard top-1 selection with
+    gradients flowing through the *normalized* gate value;
+  * expert softmax (Eq. 2): the chosen expert's gate value scales its
+    logits (inverse temperature); pruned classes are masked out;
+  * L_lasso (Eq. 3–4): group lasso over surviving class rows;
+  * L_load (Eq. 5): CV² of per-expert accumulated gate mass;
+  * L_expert (Eq. 6): expert-level group lasso;
+  * pruning: a class row is removed from an expert when its ℓ2 norm drops
+    below γ — except that every class always survives in at least one
+    expert (footnote 4: "one copy for each word is required among all
+    experts during training").
+
+The packed/export format (``pack``) is the contract with the Rust side:
+per expert, a dense (P, d) row block + global class ids + valid count.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+class DsParams(NamedTuple):
+    """Trainable parameters of the DS-Softmax layer."""
+
+    u: jax.Array  # (K, d) gating weights
+    w: jax.Array  # (K, N, d) expert embeddings
+
+
+class DsState(NamedTuple):
+    """Non-trainable layer state: the pruning mask."""
+
+    mask: jax.Array  # (K, N) f32 in {0, 1}; 1 = class alive in expert
+
+
+def ds_init(key: jax.Array, k: int, n: int, d: int, scale: float = 0.05) -> tuple[DsParams, DsState]:
+    """Experts start as full softmaxes over all N classes (Fig. 1)."""
+    ku, kw = jax.random.split(key)
+    u = jax.random.normal(ku, (k, d)) * scale
+    w = jax.random.normal(kw, (k, n, d)) * scale
+    return DsParams(u, w), DsState(jnp.ones((k, n)))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def ds_train_forward(params: DsParams, state: DsState, h: jax.Array):
+    """Training forward (Eq. 1 + 2).
+
+    Args:
+      h: (B, d) context vectors.
+
+    Returns:
+      (logp, aux): (B, N) masked log-probabilities of the chosen expert and
+      a dict with gate probs / top1 / gate value for the loss terms.
+    """
+    gp, top1 = ref.gate_ref(h, params.u)
+    gv = jnp.take_along_axis(gp, top1[:, None], axis=1)[:, 0]  # (B,)
+    w_sel = params.w[top1]  # (B, N, d)
+    m_sel = state.mask[top1]  # (B, N)
+    logits = jnp.einsum("bd,bnd->bn", h, w_sel) * gv[:, None]
+    # Bounded mask value: keeps p(pruned) ≈ 0 while the CE of a misrouted
+    # example (label pruned from the chosen expert) stays finite, so its
+    # gradient still teaches the gate to route elsewhere.
+    logits = jnp.where(m_sel > 0, logits, -30.0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return logp, {"gate_probs": gp, "top1": top1, "gate_value": gv}
+
+
+def ds_losses(params: DsParams, state: DsState, aux: dict, gamma: float):
+    """Regularization losses over *surviving* rows."""
+    wm = params.w * state.mask[:, :, None]
+    norms = jnp.sqrt(jnp.sum(wm * wm, axis=-1) + 1e-12)  # (K, N)
+    alive = (norms > gamma).astype(wm.dtype) * state.mask
+    l_lasso = jnp.sum(norms * alive)
+    l_expert = jnp.sum(jnp.sqrt(jnp.sum(wm * wm, axis=(1, 2)) + 1e-12))
+    k = params.u.shape[0]
+    l_load = ref.load_balance_ref(aux["gate_value"], aux["top1"], k)
+    return l_lasso, l_load, l_expert
+
+
+def ds_task_loss(logp: jax.Array, y: jax.Array) -> jax.Array:
+    """Cross entropy −log p(y | h) under the chosen expert."""
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def full_softmax_loss(w_full: jax.Array, h: jax.Array, y: jax.Array) -> jax.Array:
+    """Baseline full-softmax CE; w_full (N, d)."""
+    logits = h @ w_full.T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Pruning (Eq. 4 + footnote-4 protection) and mitosis (§2.3)
+# ---------------------------------------------------------------------------
+def ds_prune(params: DsParams, state: DsState, gamma: float) -> tuple[DsParams, DsState]:
+    """Remove class rows whose ℓ2 norm fell under γ; every class keeps its
+    strongest expert alive regardless, so no class becomes unreachable."""
+    wm = params.w * state.mask[:, :, None]
+    norms = jnp.sqrt(jnp.sum(wm * wm, axis=-1))  # (K, N)
+    keep = (norms > gamma) & (state.mask > 0)
+    # Footnote-4 protection: class c must survive somewhere.
+    best = jnp.argmax(jnp.where(state.mask > 0, norms, -1.0), axis=0)  # (N,)
+    protect = jax.nn.one_hot(best, params.u.shape[0], dtype=bool).T  # (K, N)
+    orphan = ~jnp.any(keep, axis=0)  # (N,)
+    keep = keep | (protect & orphan[None, :])
+    new_mask = keep.astype(params.w.dtype)
+    return DsParams(params.u, params.w * new_mask[:, :, None]), DsState(new_mask)
+
+
+def ds_mitosis_split(
+    params: DsParams, state: DsState, key: jax.Array, noise: float = 0.02
+) -> tuple[DsParams, DsState]:
+    """Clone every expert into two (Fig. 2).  Children inherit the parent's
+    sparsity pattern; weights get symmetric ±noise jitter so the pair can
+    specialize apart."""
+    ku, kw = jax.random.split(key)
+    du = jax.random.normal(ku, params.u.shape) * noise
+    dw = jax.random.normal(kw, params.w.shape) * noise * state.mask[:, :, None]
+    u2 = jnp.concatenate([params.u + du, params.u - du], axis=0)
+    w2 = jnp.concatenate([params.w + dw, params.w - dw], axis=0)
+    m2 = jnp.concatenate([state.mask, state.mask], axis=0)
+    return DsParams(u2, w2), DsState(m2)
+
+
+# ---------------------------------------------------------------------------
+# Packing — the export contract with rust/src/sparse
+# ---------------------------------------------------------------------------
+class Packed(NamedTuple):
+    u: np.ndarray  # (K, d) f32
+    weights: np.ndarray  # (K, P, d) f32, rows past valid[k] are zero
+    class_ids: np.ndarray  # (K, P) i32, padding = -1
+    valid: np.ndarray  # (K,) i32
+
+
+def ds_pack(params: DsParams, state: DsState, pad_to: int = 8) -> Packed:
+    """Convert masked dense experts to the packed inference layout."""
+    u = np.asarray(params.u, np.float32)
+    w = np.asarray(params.w, np.float32)
+    mask = np.asarray(state.mask) > 0
+    k, n, d = w.shape
+    sizes = mask.sum(axis=1)
+    p = int(max(1, sizes.max()))
+    p = ((p + pad_to - 1) // pad_to) * pad_to
+    weights = np.zeros((k, p, d), np.float32)
+    class_ids = np.full((k, p), -1, np.int32)
+    valid = sizes.astype(np.int32)
+    for i in range(k):
+        ids = np.nonzero(mask[i])[0]
+        weights[i, : len(ids)] = w[i, ids]
+        class_ids[i, : len(ids)] = ids
+    return Packed(u, weights, class_ids, valid)
+
+
+def ds_infer(packed: Packed, h: jax.Array, topk: int):
+    """Reference inference over the packed layout (used for eval; the Rust
+    engine and the Pallas kernels implement the same contract)."""
+    return ref.ds_softmax_infer_ref(
+        h,
+        jnp.asarray(packed.u),
+        jnp.asarray(packed.weights),
+        jnp.asarray(packed.class_ids),
+        jnp.asarray(packed.valid),
+        topk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Speedup accounting (paper: |V| / (Σ_k |v_k|·u_k + K))
+# ---------------------------------------------------------------------------
+def ds_speedup(packed: Packed, utilization: np.ndarray) -> float:
+    """FLOPs-ratio speedup of DS-Softmax vs full softmax given the measured
+    utilization u_k (fraction of queries routed to expert k)."""
+    n = int((np.concatenate([c[c >= 0] for c in packed.class_ids]).max()) + 1)
+    k = packed.u.shape[0]
+    expected = float((packed.valid * utilization).sum()) + k
+    return n / expected
+
+
+def measure_utilization(packed: Packed, h: jax.Array) -> np.ndarray:
+    """Empirical routing distribution over a workload of contexts."""
+    _, top1 = ref.gate_ref(h, jnp.asarray(packed.u))
+    k = packed.u.shape[0]
+    counts = np.bincount(np.asarray(top1), minlength=k).astype(np.float64)
+    return counts / counts.sum()

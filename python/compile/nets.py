@@ -1,0 +1,229 @@
+"""Substrate models (L2, from scratch in JAX) that produce the context
+vector ``h`` fed to the softmax layer under study.
+
+  mlp        §3.1 synthetic hierarchy task (2-layer MLP)
+  lstm_lm    §3.2 language modeling (2-layer LSTM, 200 hidden, from-scratch
+             cell — mirrors the TF PTB tutorial model the paper uses)
+  seq2seq    §3.3 NMT (GRU encoder/decoder with dot attention over source)
+  convnet    §3.4 glyph classification (2 conv + pool + dense)
+
+Every model is a pair (init(key, ...) -> params, apply(params, x) -> h).
+The softmax layer itself lives in model.py so that full-softmax and
+DS-Softmax heads are interchangeable over the same backbone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, n_in, n_out, scale=None):
+    scale = scale or (1.0 / jnp.sqrt(n_in))
+    kw, kb = jax.random.split(key)
+    return {
+        "w": jax.random.uniform(kw, (n_in, n_out), minval=-scale, maxval=scale),
+        "b": jnp.zeros((n_out,)),
+    }
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# MLP (synthetic task)
+# ---------------------------------------------------------------------------
+def mlp_init(key, dim_in: int, hidden: int, dim_out: int):
+    k1, k2 = jax.random.split(key)
+    return {"l1": _dense_init(k1, dim_in, hidden), "l2": _dense_init(k2, hidden, dim_out)}
+
+
+def mlp_apply(params, x):
+    """x (B, dim_in) -> h (B, dim_out)."""
+    return jnp.tanh(_dense(params["l2"], jnp.tanh(_dense(params["l1"], x))))
+
+
+# ---------------------------------------------------------------------------
+# LSTM language model
+# ---------------------------------------------------------------------------
+def lstm_cell_init(key, n_in, n_hidden):
+    scale = 1.0 / jnp.sqrt(n_hidden)
+    kx, kh = jax.random.split(key)
+    return {
+        "wx": jax.random.uniform(kx, (n_in, 4 * n_hidden), minval=-scale, maxval=scale),
+        "wh": jax.random.uniform(kh, (n_hidden, 4 * n_hidden), minval=-scale, maxval=scale),
+        # forget-gate bias starts at 1 (Gers et al. 1999)
+        "b": jnp.zeros((4 * n_hidden,)).at[n_hidden : 2 * n_hidden].set(1.0),
+    }
+
+
+def lstm_cell(p, carry, x):
+    """One LSTM step. carry = (c, h); x (B, n_in)."""
+    c, h = carry
+    z = x @ p["wx"] + h @ p["wh"] + p["b"]
+    nh = p["wh"].shape[0]
+    i, f, g, o = (
+        jax.nn.sigmoid(z[:, :nh]),
+        jax.nn.sigmoid(z[:, nh : 2 * nh]),
+        jnp.tanh(z[:, 2 * nh : 3 * nh]),
+        jax.nn.sigmoid(z[:, 3 * nh :]),
+    )
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    return (c, h), h
+
+
+def lstm_lm_init(key, vocab: int, embed: int, hidden: int, layers: int = 2):
+    keys = jax.random.split(key, layers + 1)
+    return {
+        "embed": jax.random.normal(keys[0], (vocab, embed)) * 0.05,
+        "cells": [
+            lstm_cell_init(keys[1 + i], embed if i == 0 else hidden, hidden)
+            for i in range(layers)
+        ],
+    }
+
+
+def lstm_lm_apply(params, tokens):
+    """tokens (B, T) int32 -> contexts h (B, T, hidden)."""
+    b, t = tokens.shape
+    x = params["embed"][tokens]  # (B, T, E)
+    for cell in params["cells"]:
+        nh = cell["wh"].shape[0]
+        carry = (jnp.zeros((b, nh)), jnp.zeros((b, nh)))
+
+        def step(carry, xt, cell=cell):
+            return lstm_cell(cell, carry, xt)
+
+        _, hs = jax.lax.scan(step, carry, jnp.swapaxes(x, 0, 1))
+        x = jnp.swapaxes(hs, 0, 1)  # (B, T, H)
+    return x
+
+
+def lstm_lm_step(params, tokens_t, state):
+    """Single decode step for serving: tokens_t (B,) int32, state is a list
+    of (c, h) per layer stacked as (layers, 2, B, H).  Returns (h_out, new
+    state).  This is the graph AOT-exported for the Rust LM server."""
+    x = params["embed"][tokens_t]  # (B, E)
+    new_states = []
+    for i, cell in enumerate(params["cells"]):
+        carry = (state[i, 0], state[i, 1])
+        (c, h), _ = lstm_cell(cell, carry, x)
+        new_states.append(jnp.stack([c, h]))
+        x = h
+    return x, jnp.stack(new_states)
+
+
+# ---------------------------------------------------------------------------
+# GRU seq2seq with dot attention (NMT)
+# ---------------------------------------------------------------------------
+def gru_cell_init(key, n_in, n_hidden):
+    scale = 1.0 / jnp.sqrt(n_hidden)
+    kx, kh = jax.random.split(key)
+    return {
+        "wx": jax.random.uniform(kx, (n_in, 3 * n_hidden), minval=-scale, maxval=scale),
+        "wh": jax.random.uniform(kh, (n_hidden, 3 * n_hidden), minval=-scale, maxval=scale),
+        "b": jnp.zeros((3 * n_hidden,)),
+    }
+
+
+def gru_cell(p, h, x):
+    nh = p["wh"].shape[0]
+    zx = x @ p["wx"] + p["b"]
+    zh = h @ p["wh"]
+    r = jax.nn.sigmoid(zx[:, :nh] + zh[:, :nh])
+    z = jax.nn.sigmoid(zx[:, nh : 2 * nh] + zh[:, nh : 2 * nh])
+    n = jnp.tanh(zx[:, 2 * nh :] + r * zh[:, 2 * nh :])
+    return (1 - z) * n + z * h
+
+
+def seq2seq_init(key, vocab_src: int, vocab_tgt: int, embed: int, hidden: int):
+    k = jax.random.split(key, 5)
+    return {
+        "src_embed": jax.random.normal(k[0], (vocab_src, embed)) * 0.05,
+        "tgt_embed": jax.random.normal(k[1], (vocab_tgt, embed)) * 0.05,
+        "enc": gru_cell_init(k[2], embed, hidden),
+        "dec": gru_cell_init(k[3], embed + hidden, hidden),
+        "out": _dense_init(k[4], 2 * hidden, hidden),
+    }
+
+
+def seq2seq_encode(params, src):
+    """src (B, S) -> encoder states (B, S, H)."""
+    b, s = src.shape
+    x = params["src_embed"][src]
+    h0 = jnp.zeros((b, params["enc"]["wh"].shape[0]))
+
+    def step(h, xt):
+        h = gru_cell(params["enc"], h, xt)
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def seq2seq_decode_contexts(params, enc_states, src_mask, tgt_in):
+    """Teacher-forced decode: returns contexts h (B, T, H) for the softmax
+    head.  Dot attention over encoder states each step."""
+    b, t = tgt_in.shape
+    hdim = params["dec"]["wh"].shape[0]
+    x = params["tgt_embed"][tgt_in]
+    h0 = enc_states[:, -1, :]
+
+    def step(h, xt):
+        att = jnp.einsum("bh,bsh->bs", h, enc_states)
+        att = jnp.where(src_mask, att, -1e30)
+        a = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bs,bsh->bh", a, enc_states)
+        h = gru_cell(params["dec"], h, jnp.concatenate([xt, ctx], -1))
+        out = jnp.tanh(_dense(params["out"], jnp.concatenate([h, ctx], -1)))
+        return h, out
+
+    _, outs = jax.lax.scan(step, h0, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(outs, 0, 1)
+
+
+def seq2seq_decode_step(params, enc_states, src_mask, h, token):
+    """Single greedy-decode step (used for BLEU eval + AOT export)."""
+    xt = params["tgt_embed"][token]
+    att = jnp.einsum("bh,bsh->bs", h, enc_states)
+    att = jnp.where(src_mask, att, -1e30)
+    a = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bs,bsh->bh", a, enc_states)
+    h = gru_cell(params["dec"], h, jnp.concatenate([xt, ctx], -1))
+    out = jnp.tanh(_dense(params["out"], jnp.concatenate([h, ctx], -1)))
+    return h, out
+
+
+# ---------------------------------------------------------------------------
+# Small conv net (glyphs)
+# ---------------------------------------------------------------------------
+def convnet_init(key, size: int, channels: int, hidden: int):
+    k = jax.random.split(key, 3)
+    return {
+        "c1": jax.random.normal(k[0], (3, 3, 1, channels)) * 0.1,
+        "c2": jax.random.normal(k[1], (3, 3, channels, channels)) * 0.1,
+        "fc": _dense_init(k[2], (size // 4) * (size // 4) * channels, hidden),
+        "size": size,
+    }
+
+
+def convnet_apply(params, x):
+    """x (B, size*size) -> h (B, hidden)."""
+    size = params["size"]
+    img = x.reshape(-1, size, size, 1)
+
+    def conv(img, w):
+        return jax.lax.conv_general_dilated(
+            img, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+
+    def pool(img):
+        return jax.lax.reduce_window(
+            img, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    y = pool(jax.nn.relu(conv(img, params["c1"])))
+    y = pool(jax.nn.relu(conv(y, params["c2"])))
+    y = y.reshape(y.shape[0], -1)
+    return jnp.tanh(_dense(params["fc"], y))

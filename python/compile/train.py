@@ -1,0 +1,281 @@
+"""Training loops (build-time only): Adam from scratch, Algorithm 1 for
+DS-Softmax (joint task CE + L_lasso + L_load + L_expert with iterative
+pruning), and mitosis training (§2.3).
+
+Recipe per the paper (§3 setup): pretrain the whole model with a
+conventional full softmax, then freeze the backbone, precompute contexts
+``h = H(x)`` and retrain only the DS-Softmax head on (h, y) pairs —
+footnote 2 makes this explicit.  That keeps build-time CPU training cheap
+and exactly matches the paper's protocol.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# Adam (from scratch, pytree-generic)
+# ---------------------------------------------------------------------------
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1.0
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# DS-Softmax head training (Algorithm 1)
+# ---------------------------------------------------------------------------
+@dataclass
+class DsConfig:
+    k: int = 8
+    gamma: float = 0.01  # prune threshold (paper: 0.01)
+    lambda_load: float = 10.0  # paper: 10
+    lambda_lasso: float = 0.05  # tuned per task (paper: exponential sweep)
+    lambda_expert: float = 0.05
+    lr: float = 3e-3
+    steps: int = 1500
+    batch: int = 128
+    prune_every: int = 50
+    task_threshold: float = 1e9  # prune whenever L_task < t (paper: t)
+    seed: int = 0
+    pad_to: int = 8
+    log_every: int = 200
+
+
+@dataclass
+class DsTrainResult:
+    params: M.DsParams
+    state: M.DsState
+    history: list = field(default_factory=list)
+    memory_trajectory: list = field(default_factory=list)  # (step, alive_frac)
+
+
+def _make_step(cfg: DsConfig):
+    @jax.jit
+    def step(params, state, opt, h, y):
+        def loss_fn(p):
+            logp, aux = M.ds_train_forward(p, state, h)
+            l_task = M.ds_task_loss(logp, y)
+            l_lasso, l_load, l_expert = M.ds_losses(p, state, aux, cfg.gamma)
+            total = (
+                l_task
+                + cfg.lambda_lasso * l_lasso
+                + cfg.lambda_load * l_load
+                + cfg.lambda_expert * l_expert
+            )
+            return total, l_task
+
+        (total, l_task), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        # Pruned rows stay pruned: mask their gradients.
+        grads = M.DsParams(grads.u, grads.w * state.mask[:, :, None])
+        params, opt = adam_update(params, grads, opt, cfg.lr)
+        return params, opt, total, l_task
+
+    return step
+
+
+def train_ds(
+    h_train: np.ndarray,
+    y_train: np.ndarray,
+    n_classes: int,
+    cfg: DsConfig,
+    params: M.DsParams | None = None,
+    state: M.DsState | None = None,
+) -> DsTrainResult:
+    """Algorithm 1: jointly minimize task + regularizers, prune when the
+    task loss is under threshold."""
+    key = jax.random.PRNGKey(cfg.seed)
+    d = h_train.shape[1]
+    if params is None:
+        params, state = M.ds_init(key, cfg.k, n_classes, d)
+    opt = adam_init(params)
+    step = _make_step(cfg)
+    rng = np.random.default_rng(cfg.seed)
+    res = DsTrainResult(params, state)
+    recent_task = []
+    h_train = jnp.asarray(h_train)
+    y_train = jnp.asarray(y_train)
+    n = len(h_train)
+    for it in range(cfg.steps):
+        idx = rng.integers(0, n, cfg.batch)
+        params, opt, total, l_task = step(params, state, opt, h_train[idx], y_train[idx])
+        recent_task.append(float(l_task))
+        if (it + 1) % cfg.prune_every == 0:
+            avg = float(np.mean(recent_task[-cfg.prune_every :]))
+            if avg < cfg.task_threshold:
+                params, state = M.ds_prune(params, state, cfg.gamma)
+                # Adam moments of pruned rows are stale; zero them.
+                opt["m"] = M.DsParams(opt["m"].u, opt["m"].w * state.mask[:, :, None])
+                opt["v"] = M.DsParams(opt["v"].u, opt["v"].w * state.mask[:, :, None])
+        if (it + 1) % cfg.log_every == 0 or it == 0:
+            alive = float(np.asarray(state.mask).mean())
+            res.history.append({"step": it + 1, "task": float(l_task), "alive": alive})
+        res.memory_trajectory.append(
+            (it, float(np.asarray(state.mask).sum()) / state.mask.shape[1])
+        )
+    res.params, res.state = params, state
+    return res
+
+
+def train_ds_mitosis(
+    h_train: np.ndarray,
+    y_train: np.ndarray,
+    n_classes: int,
+    cfg: DsConfig,
+    start_k: int = 2,
+    phase_steps: int | None = None,
+) -> tuple[DsTrainResult, list]:
+    """Mitosis training (§2.3/Fig. 5a): start with ``start_k`` experts and
+    double after each converged phase until ``cfg.k``.  Returns the final
+    result plus the memory trajectory in units of one full softmax
+    (K·alive_frac), the quantity Fig. 5a plots."""
+    assert cfg.k % start_k == 0 and (cfg.k // start_k) & (cfg.k // start_k - 1) == 0
+    phases = int(np.log2(cfg.k // start_k)) + 1
+    phase_steps = phase_steps or cfg.steps // phases
+    key = jax.random.PRNGKey(cfg.seed + 77)
+    params = state = None
+    memory = []
+    step_base = 0
+    res = None
+    k = start_k
+    while True:
+        sub = DsConfig(**{**cfg.__dict__, "k": k, "steps": phase_steps})
+        res = train_ds(h_train, y_train, n_classes, sub, params, state)
+        params, state = res.params, res.state
+        # memory_trajectory already records mask.sum()/N = K·alive_frac,
+        # i.e. units of one full softmax — exactly what Fig. 5a plots.
+        for s, frac in res.memory_trajectory:
+            memory.append((step_base + s, frac))
+        step_base += phase_steps
+        if k >= cfg.k:
+            break
+        key, sub_key = jax.random.split(key)
+        params, state = M.ds_mitosis_split(params, state, sub_key)
+        k *= 2
+    return res, memory
+
+
+# ---------------------------------------------------------------------------
+# Full-softmax head (baseline + pretraining head)
+# ---------------------------------------------------------------------------
+def train_full_head(
+    h_train: np.ndarray,
+    y_train: np.ndarray,
+    n_classes: int,
+    *,
+    lr: float = 3e-3,
+    steps: int = 1500,
+    batch: int = 128,
+    seed: int = 0,
+) -> np.ndarray:
+    """Train a dense (N, d) softmax head on fixed contexts."""
+    d = h_train.shape[1]
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (n_classes, d)) * 0.05
+    opt = adam_init(w)
+
+    @jax.jit
+    def step(w, opt, h, y):
+        loss, g = jax.value_and_grad(M.full_softmax_loss)(w, h, y)
+        w, opt = adam_update(w, g, opt, lr)
+        return w, opt, loss
+
+    rng = np.random.default_rng(seed)
+    h_train = jnp.asarray(h_train)
+    y_train = jnp.asarray(y_train)
+    for _ in range(steps):
+        idx = rng.integers(0, len(h_train), batch)
+        w, opt, _ = step(w, opt, h_train[idx], y_train[idx])
+    return np.asarray(w, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Generic backbone pretraining (task loss through backbone + full softmax)
+# ---------------------------------------------------------------------------
+def pretrain_backbone(
+    apply_fn,
+    params,
+    w_full: jax.Array,
+    xs: np.ndarray,
+    ys: np.ndarray,
+    *,
+    lr: float = 3e-3,
+    steps: int = 800,
+    batch: int = 64,
+    seed: int = 0,
+):
+    """Joint backbone+head pretraining.  ``apply_fn(params, x) -> h`` with
+    h of shape (B, d) or (B, T, d); ys matches h's leading shape."""
+    opt = adam_init((params, w_full))
+
+    @jax.jit
+    def step(pw, opt, x, y):
+        def loss_fn(pw):
+            p, w = pw
+            h = apply_fn(p, x)
+            hf = h.reshape(-1, h.shape[-1])
+            yf = y.reshape(-1)
+            return M.full_softmax_loss(w, hf, yf)
+
+        loss, g = jax.value_and_grad(loss_fn)(pw)
+        pw, opt = adam_update(pw, g, opt, lr)
+        return pw, opt, loss
+
+    rng = np.random.default_rng(seed)
+    pw = (params, w_full)
+    losses = []
+    for _ in range(steps):
+        idx = rng.integers(0, len(xs), batch)
+        pw, opt, loss = step(pw, opt, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        losses.append(float(loss))
+    return pw[0], pw[1], losses
+
+
+# ---------------------------------------------------------------------------
+# Evaluation helpers
+# ---------------------------------------------------------------------------
+def eval_topk_accuracy(
+    packed: M.Packed, h: np.ndarray, y: np.ndarray, ks=(1, 5, 10), batch: int = 512
+) -> dict:
+    """Top-k accuracy of the packed DS-Softmax on held-out contexts."""
+    kmax = max(ks)
+    hits = {k: 0 for k in ks}
+    for i in range(0, len(h), batch):
+        hb = jnp.asarray(h[i : i + batch])
+        _, _, tc = M.ds_infer(packed, hb, kmax)
+        tc = np.asarray(tc)
+        yb = y[i : i + batch, None]
+        for k in ks:
+            hits[k] += (tc[:, :k] == yb).any(axis=1).sum()
+    return {f"top{k}": hits[k] / len(h) for k in ks}
+
+
+def eval_full_topk_accuracy(
+    w_full: np.ndarray, h: np.ndarray, y: np.ndarray, ks=(1, 5, 10), batch: int = 512
+) -> dict:
+    kmax = max(ks)
+    hits = {k: 0 for k in ks}
+    wT = jnp.asarray(w_full).T
+    for i in range(0, len(h), batch):
+        logits = jnp.asarray(h[i : i + batch]) @ wT
+        _, idx = jax.lax.top_k(logits, kmax)
+        idx = np.asarray(idx)
+        yb = y[i : i + batch, None]
+        for k in ks:
+            hits[k] += (idx[:, :k] == yb).any(axis=1).sum()
+    return {f"top{k}": hits[k] / len(h) for k in ks}

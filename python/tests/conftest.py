@@ -1,0 +1,12 @@
+"""Shared pytest fixtures/settings for the kernel + model suites."""
+import os
+
+# Keep XLA quiet + single-threaded enough for CI-like determinism.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+# interpret-mode pallas is slow; keep sweeps tight but meaningful.
+settings.register_profile("kernels", max_examples=20, deadline=None)
+settings.load_profile("kernels")

@@ -1,0 +1,94 @@
+"""Data substrate generators (data.py)."""
+import numpy as np
+
+from compile import data
+
+
+def test_hierarchical_clusters_shapes():
+    x, y, sup = data.hierarchical_clusters(3, 5, n_per_sub=7, dim=10, seed=0)
+    assert x.shape == (3 * 5 * 7, 10) and y.shape == (105,)
+    assert sup.shape == (15,)
+    assert set(y.tolist()) == set(range(15))
+    assert (np.bincount(sup) == 5).all()
+
+
+def test_hierarchical_clusters_separation():
+    """Super-cluster scale dominates sub-cluster scale (Eq. 7-9)."""
+    x, y, sup = data.hierarchical_clusters(5, 5, n_per_sub=20, dim=50, seed=1)
+    # centroid distance between different super >> within same super
+    cents = np.stack([x[y == c].mean(0) for c in range(25)])
+    within, across = [], []
+    for a in range(25):
+        for b in range(a + 1, 25):
+            d = np.linalg.norm(cents[a] - cents[b])
+            (within if sup[a] == sup[b] else across).append(d)
+    assert np.mean(across) > 2 * np.mean(within)
+
+
+def test_zipf_corpus_skew_and_range():
+    toks = data.zipf_topic_corpus(500, 20000, seed=2)
+    assert toks.min() >= 0 and toks.max() < 500
+    counts = np.bincount(toks, minlength=500)
+    # Zipf: top-10% of words cover most of the mass
+    top = np.sort(counts)[::-1]
+    assert top[:50].sum() > 0.5 * counts.sum()
+
+
+def test_zipf_corpus_topic_structure():
+    """Consecutive tokens share a topic band far more than chance."""
+    vocab, n_topics = 400, 8
+    toks = data.zipf_topic_corpus(vocab, 20000, n_topics=n_topics, seed=3)
+    band = vocab // n_topics
+    t = toks // band
+    same = (t[1:] == t[:-1]).mean()
+    assert same > 0.3  # i.i.d. zipf would be much lower
+
+
+def test_lm_batches_shift():
+    toks = np.arange(1000, dtype=np.int32)
+    xs, ys = data.lm_batches(toks, batch=4, seq=10)
+    assert (ys == xs + 1).all()
+
+
+def test_translation_pairs_structure():
+    src, tgt = data.translation_pairs(100, vocab_src=200, vocab_tgt=300, seed=4)
+    assert src.shape == tgt.shape
+    assert (src[:, 0] == 1).all() and (tgt[:, 0] == 1).all()  # BOS
+    assert (src == 2).sum(axis=1).min() >= 1  # EOS present
+    assert src.max() < 200 and tgt.max() < 300
+
+
+def test_translation_deterministic_lexicon():
+    """Same source word maps to the same target word across pairs."""
+    src, tgt = data.translation_pairs(300, vocab_src=50, vocab_tgt=80,
+                                      swap_prob=0.0, fertility_prob=0.0, seed=5)
+    mapping = {}
+    for s_row, t_row in zip(src, tgt):
+        s = [w for w in s_row if w >= 3]
+        t = [w for w in t_row if w >= 3]
+        assert len(s) == len(t)
+        for a, b in zip(s, t):
+            assert mapping.setdefault(a, b) == b
+
+
+def test_glyphs_uniform_classes():
+    x, y = data.glyphs(20, 15, seed=6)
+    assert x.shape == (300, 144)
+    assert (np.bincount(y) == 15).all()
+
+
+def test_glyphs_classes_distinguishable():
+    """Nearest-prototype classification on clean data beats chance hugely."""
+    x, y = data.glyphs(10, 30, stroke_noise=0.1, seed=7)
+    cents = np.stack([x[y == c].mean(0) for c in range(10)])
+    pred = np.argmin(((x[:, None] - cents[None]) ** 2).sum(-1), axis=1)
+    assert (pred == y).mean() > 0.9
+
+
+def test_train_test_split_disjoint():
+    x = np.arange(90).reshape(30, 3).astype(np.float32)
+    y = np.arange(30, dtype=np.int32)
+    xtr, ytr, xte, yte = data.train_test_split(x, y, frac=2 / 3, seed=8)
+    assert len(xtr) == 20 and len(xte) == 10
+    assert set(ytr.tolist()) | set(yte.tolist()) == set(range(30))
+    assert not (set(ytr.tolist()) & set(yte.tolist()))

@@ -1,0 +1,106 @@
+"""Pallas packed-expert softmax kernels vs oracle (Eq. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import expert_softmax as es
+from compile.kernels import ref
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@given(
+    b=st.sampled_from([1, 4, 64, 128]),
+    d=st.sampled_from([16, 64, 200]),
+    p=st.sampled_from([128, 512, 1024]),
+    frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_expert_softmax_matches_ref(b, d, p, frac, seed):
+    h = _rand(seed, (b, d))
+    w = _rand(seed + 1, (p, d))
+    g = jax.nn.sigmoid(_rand(seed + 2, (b,)))
+    valid = max(1, int(p * frac))
+    got = es.expert_softmax(h, w, g, valid)
+    want = ref.expert_softmax_ref(h, w, g, jnp.int32(valid))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-6)
+
+
+def test_padding_rows_exactly_zero():
+    h = _rand(1, (8, 32))
+    w = _rand(2, (256, 32))
+    g = jnp.ones((8,))
+    probs = np.asarray(es.expert_softmax(h, w, g, 100))
+    assert (probs[:, 100:] == 0.0).all()
+    np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+
+
+def test_gate_value_acts_as_inverse_temperature():
+    """Larger gate value sharpens the distribution (paper §2.3)."""
+    h = _rand(3, (4, 32))
+    w = _rand(4, (128, 32))
+    cold = np.asarray(es.expert_softmax(h, w, jnp.full((4,), 0.1), 128))
+    hot = np.asarray(es.expert_softmax(h, w, jnp.full((4,), 5.0), 128))
+    # Entropy decreases as gate grows.
+    def entropy(p):
+        q = np.clip(p, 1e-12, 1.0)
+        return -(q * np.log(q)).sum(-1)
+    assert (entropy(hot) < entropy(cold)).all()
+
+
+def test_blocked_vs_unblocked_identical():
+    """Different block_p tilings must give bit-comparable results."""
+    h = _rand(5, (16, 64))
+    w = _rand(6, (1024, 64))
+    g = jnp.ones((16,)) * 0.7
+    a = es.expert_softmax(h, w, g, 900, block_p=1024)
+    b_ = es.expert_softmax(h, w, g, 900, block_p=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-5, atol=1e-7)
+
+
+def test_logits_masking_boundary():
+    """valid exactly on a block boundary."""
+    h = _rand(7, (4, 16))
+    w = _rand(8, (512, 16))
+    g = jnp.ones((4,))
+    probs = np.asarray(es.expert_softmax(h, w, g, 256, block_p=256))
+    assert (probs[:, 256:] == 0).all()
+    assert (probs[:, :256] > 0).any()
+
+
+def test_large_magnitude_stability():
+    h = _rand(9, (4, 16), scale=50.0)
+    w = _rand(10, (128, 16), scale=50.0)
+    g = jnp.ones((4,)) * 2.0
+    probs = np.asarray(es.expert_softmax(h, w, g, 128))
+    assert np.isfinite(probs).all()
+    np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+
+
+def test_indivisible_shapes_raise():
+    h = _rand(11, (5, 16))
+    w = _rand(12, (100, 16))
+    with pytest.raises(ValueError):
+        es.expert_logits(h, w, jnp.ones((5,)), 100, block_b=4, block_p=512)
+
+
+def test_topk_over_expert_probs_matches_dense():
+    """End-to-end inference oracle: packed top-k == dense top-k restricted
+    to the expert's classes."""
+    b, d, n, k_experts, p = 8, 32, 512, 4, 256
+    h = _rand(13, (b, d))
+    u = _rand(14, (k_experts, d))
+    packed = _rand(15, (k_experts, p, d))
+    class_ids = jnp.stack(
+        [jax.random.permutation(jax.random.PRNGKey(20 + i), n)[:p] for i in range(k_experts)]
+    ).astype(jnp.int32)
+    valid = jnp.full((k_experts,), p, jnp.int32)
+    top1, tv, tc = ref.ds_softmax_infer_ref(h, u, packed, class_ids, valid, 5)
+    assert tv.shape == (b, 5) and tc.shape == (b, 5)
+    # probabilities sorted descending
+    tvn = np.asarray(tv)
+    assert (np.diff(tvn, axis=-1) <= 1e-7).all()

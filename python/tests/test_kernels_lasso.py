@@ -1,0 +1,90 @@
+"""Pallas group-lasso kernel vs oracle (Eq. 3–4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import group_lasso as gl
+from compile.kernels import ref
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@given(
+    n=st.sampled_from([128, 512, 2048]),
+    d=st.sampled_from([8, 64, 200]),
+    gamma=st.sampled_from([0.001, 0.01, 0.1, 1.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_group_lasso_matches_ref(n, d, gamma, seed):
+    w = _rand(seed, (n, d), scale=0.05)
+    norms, keep, loss = gl.group_lasso(w, gamma=gamma)
+    rn, rk, rl = ref.group_lasso_ref(w, gamma)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(rn), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(rk))
+    np.testing.assert_allclose(float(loss), float(rl), rtol=1e-5)
+
+
+def test_all_pruned_when_gamma_huge():
+    w = _rand(1, (256, 16), scale=0.01)
+    _, keep, loss = gl.group_lasso(w, gamma=100.0)
+    assert np.asarray(keep).sum() == 0
+    assert float(loss) == 0.0
+
+
+def test_none_pruned_when_gamma_zero_negative():
+    w = _rand(2, (256, 16))
+    norms, keep, loss = gl.group_lasso(w, gamma=0.0)
+    # random normal rows have strictly positive norm
+    assert np.asarray(keep).sum() == 256
+    np.testing.assert_allclose(float(loss), float(np.asarray(norms).sum()), rtol=1e-5)
+
+
+def test_exact_zero_rows_pruned():
+    w = np.array(_rand(3, (128, 16)))  # writable copy
+    w[::2] = 0.0
+    _, keep, _ = gl.group_lasso(jnp.asarray(w), gamma=1e-6)
+    keep = np.asarray(keep)
+    assert (keep[::2] == 0).all() and (keep[1::2] == 1).all()
+
+
+def test_loss_monotone_in_surviving_rows():
+    """Pruning more rows (larger gamma) never increases the lasso loss."""
+    w = _rand(4, (512, 32), scale=0.05)
+    losses = [float(gl.group_lasso(w, gamma=g)[2]) for g in (0.0, 0.05, 0.2, 0.5)]
+    assert all(a >= b for a, b in zip(losses, losses[1:]))
+
+
+def test_block_tiling_irrelevant():
+    w = _rand(5, (1024, 64), scale=0.05)
+    a = gl.group_lasso(w, gamma=0.01, block_n=1024)
+    b = gl.group_lasso(w, gamma=0.01, block_n=128)
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_expert_lasso_ref_scaling():
+    """Eq. 6: scaling one expert by c scales its term by |c|."""
+    ws = _rand(6, (4, 64, 16))
+    base = float(ref.expert_lasso_ref(ws))
+    ws2 = ws.at[0].mul(2.0)
+    bigger = float(ref.expert_lasso_ref(ws2))
+    one = float(jnp.sqrt(jnp.sum(ws[0] ** 2)))
+    np.testing.assert_allclose(bigger - base, one, rtol=1e-4)
+
+
+def test_load_balance_zero_when_uniform():
+    g = jnp.ones((8,)) * 0.5
+    top1 = jnp.arange(8, dtype=jnp.int32)
+    cv2 = float(ref.load_balance_ref(g, top1, 8))
+    np.testing.assert_allclose(cv2, 0.0, atol=1e-6)
+
+
+def test_load_balance_positive_when_skewed():
+    g = jnp.ones((8,)) * 0.5
+    top1 = jnp.zeros((8,), jnp.int32)  # everything routed to expert 0
+    cv2 = float(ref.load_balance_ref(g, top1, 8))
+    assert cv2 > 1.0

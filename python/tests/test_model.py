@@ -1,0 +1,150 @@
+"""DS-Softmax layer semantics (model.py) — Eq. 1/2, pruning, packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def small():
+    key = jax.random.PRNGKey(0)
+    params, state = M.ds_init(key, k=4, n=64, d=16)
+    h = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    y = jax.random.randint(jax.random.PRNGKey(2), (32,), 0, 64)
+    return params, state, h, y
+
+
+def test_train_forward_is_logprob(small):
+    params, state, h, y = small
+    logp, aux = M.ds_train_forward(params, state, h)
+    p = np.exp(np.asarray(logp))
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+    assert aux["top1"].shape == (32,)
+    assert aux["gate_value"].shape == (32,)
+
+
+def test_gate_value_matches_gate_ref(small):
+    params, state, h, _ = small
+    _, aux = M.ds_train_forward(params, state, h)
+    gp, top1 = ref.gate_ref(h, params.u)
+    np.testing.assert_array_equal(np.asarray(aux["top1"]), np.asarray(top1))
+    gv = np.take_along_axis(np.asarray(gp), np.asarray(top1)[:, None], 1)[:, 0]
+    np.testing.assert_allclose(np.asarray(aux["gate_value"]), gv, rtol=1e-6)
+
+
+def test_masked_classes_get_zero_prob(small):
+    params, state, h, _ = small
+    mask = np.ones((4, 64), np.float32)
+    mask[:, 10] = 0.0  # class 10 pruned everywhere
+    logp, _ = M.ds_train_forward(params, M.DsState(jnp.asarray(mask)), h)
+    p = np.exp(np.asarray(logp))
+    assert (p[:, 10] < 1e-8).all()
+
+
+def test_prune_removes_small_rows(small):
+    params, state, _, _ = small
+    w = np.asarray(params.w).copy()
+    w[0, :32] *= 1e-4  # half of expert 0's rows get tiny
+    p2, s2 = M.ds_prune(M.DsParams(params.u, jnp.asarray(w)), state, gamma=0.01)
+    m = np.asarray(s2.mask)
+    assert m[0, :32].sum() <= 1  # possibly one protected orphan
+    assert m[0, 32:].sum() == 32
+
+
+def test_prune_footnote4_every_class_survives(small):
+    params, state, _, _ = small
+    # Make everything tiny: naive pruning would empty all experts.
+    p2, s2 = M.ds_prune(M.DsParams(params.u, params.w * 1e-6), state, gamma=0.01)
+    m = np.asarray(s2.mask)
+    assert (m.sum(axis=0) >= 1).all()  # each class alive in >= 1 expert
+
+
+def test_prune_idempotent(small):
+    params, state, _, _ = small
+    p1, s1 = M.ds_prune(params, state, gamma=0.02)
+    p2, s2 = M.ds_prune(p1, s1, gamma=0.02)
+    np.testing.assert_array_equal(np.asarray(s1.mask), np.asarray(s2.mask))
+
+
+def test_prune_zeroes_weights(small):
+    params, state, _, _ = small
+    p1, s1 = M.ds_prune(params, state, gamma=0.03)
+    w = np.asarray(p1.w)
+    m = np.asarray(s1.mask)
+    assert (np.abs(w[m == 0]).max() if (m == 0).any() else 0.0) == 0.0
+
+
+def test_mitosis_doubles_and_inherits(small):
+    params, state, _, _ = small
+    p1, s1 = M.ds_prune(params, state, gamma=0.03)
+    p2, s2 = M.ds_mitosis_split(p1, s1, jax.random.PRNGKey(3))
+    assert p2.u.shape[0] == 8 and p2.w.shape[0] == 8
+    m1, m2 = np.asarray(s1.mask), np.asarray(s2.mask)
+    np.testing.assert_array_equal(m2[:4], m1)
+    np.testing.assert_array_equal(m2[4:], m1)
+    # children differ but average to the parent
+    w = np.asarray(p2.w)
+    np.testing.assert_allclose((w[:4] + w[4:]) / 2, np.asarray(p1.w), atol=1e-6)
+
+
+def test_pack_roundtrip(small):
+    params, state, h, _ = small
+    p1, s1 = M.ds_prune(params, state, gamma=0.03)
+    packed = M.ds_pack(p1, s1, pad_to=8)
+    k, p, d = packed.weights.shape
+    assert p % 8 == 0
+    m = np.asarray(s1.mask)
+    for i in range(k):
+        ids = packed.class_ids[i]
+        v = packed.valid[i]
+        assert (ids[:v] >= 0).all() and (ids[v:] == -1).all()
+        assert set(ids[:v].tolist()) == set(np.nonzero(m[i])[0].tolist())
+        # packed rows equal the surviving dense rows
+        np.testing.assert_array_equal(
+            packed.weights[i, :v], np.asarray(p1.w)[i, ids[:v]]
+        )
+        assert (packed.weights[i, v:] == 0).all()
+
+
+def test_packed_inference_matches_dense_restricted(small):
+    """Packed top-k equals dense masked softmax top-k."""
+    params, state, h, _ = small
+    p1, s1 = M.ds_prune(params, state, gamma=0.03)
+    packed = M.ds_pack(p1, s1)
+    top1, tv, tc = M.ds_infer(packed, h, 5)
+    # dense path
+    logp, aux = M.ds_train_forward(p1, s1, h)
+    np.testing.assert_array_equal(np.asarray(top1), np.asarray(aux["top1"]))
+    dense_top = np.asarray(jax.lax.top_k(logp, 5)[1])
+    tc = np.asarray(tc)
+    for b in range(h.shape[0]):
+        assert set(tc[b]) == set(dense_top[b]), b
+
+
+def test_speedup_formula():
+    packed = M.Packed(
+        u=np.zeros((2, 4), np.float32),
+        weights=np.zeros((2, 8, 4), np.float32),
+        class_ids=np.stack([np.arange(8), np.arange(8, 16)]).astype(np.int32),
+        valid=np.array([8, 8], np.int32),
+    )
+    # N=16, uniform utilization: 16 / (8 + 2) = 1.6
+    s = M.ds_speedup(packed, np.array([0.5, 0.5]))
+    np.testing.assert_allclose(s, 1.6)
+
+
+def test_losses_gradients_flow(small):
+    params, state, h, y = small
+
+    def loss_fn(p):
+        logp, aux = M.ds_train_forward(p, state, h)
+        lt = M.ds_task_loss(logp, y)
+        ll, lb, le = M.ds_losses(p, state, aux, 0.01)
+        return lt + 0.1 * ll + 10.0 * lb + 0.1 * le
+
+    g = jax.grad(loss_fn)(params)
+    assert float(jnp.abs(g.u).sum()) > 0  # gate receives gradient
+    assert float(jnp.abs(g.w).sum()) > 0

@@ -1,0 +1,86 @@
+"""Training loop invariants (train.py) — Adam, Algorithm 1, mitosis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model as M, nets, train
+
+
+def test_adam_decreases_quadratic():
+    w = jnp.ones((8,)) * 5.0
+    opt = train.adam_init(w)
+    for _ in range(300):
+        g = 2 * w
+        w, opt = train.adam_update(w, g, opt, lr=0.05)
+    assert float(jnp.abs(w).max()) < 0.5
+
+
+@pytest.fixture(scope="module")
+def tiny_task():
+    """Tiny linearly separable task: contexts = class prototypes + noise."""
+    rng = np.random.default_rng(0)
+    n, d = 32, 16
+    protos = rng.normal(0, 1, (n, d)).astype(np.float32)
+    y = np.arange(n, dtype=np.int32).repeat(20)
+    h = protos[y] + rng.normal(0, 0.1, (len(y), d)).astype(np.float32)
+    return h, y, n
+
+
+def test_train_ds_learns_and_prunes(tiny_task):
+    h, y, n = tiny_task
+    cfg = train.DsConfig(
+        k=4, steps=800, lambda_lasso=0.05, lambda_expert=0.05, lr=1e-2,
+        prune_every=50, task_threshold=2.0, batch=64, seed=1,
+    )
+    res = train.train_ds(h, y, n, cfg)
+    mask = np.asarray(res.state.mask)
+    # pruning happened
+    assert mask.mean() < 0.9
+    # every class still reachable
+    assert (mask.sum(0) >= 1).all()
+    packed = M.ds_pack(res.params, res.state)
+    acc = train.eval_topk_accuracy(packed, h, y, ks=(1,))
+    assert acc["top1"] > 0.8
+
+
+def test_train_full_head_learns(tiny_task):
+    h, y, n = tiny_task
+    w = train.train_full_head(h, y, n, steps=500, lr=1e-2, seed=2)
+    acc = train.eval_full_topk_accuracy(w, h, y, ks=(1,))
+    assert acc["top1"] > 0.95
+
+
+def test_mitosis_reaches_target_k(tiny_task):
+    h, y, n = tiny_task
+    cfg = train.DsConfig(
+        k=8, steps=900, lambda_lasso=0.05, lambda_expert=0.05, lr=1e-2,
+        prune_every=50, task_threshold=2.0, batch=64, seed=3,
+    )
+    res, memory = train.train_ds_mitosis(h, y, n, cfg, start_k=2, phase_steps=300)
+    assert res.params.u.shape[0] == 8
+    # Fig 5a claim: peak training memory well below K x full softmax.
+    peak = max(m for _, m in memory)
+    assert peak < 8.0
+    # memory trajectory rises at cloning then shrinks via pruning
+    assert len(memory) == 900
+
+
+def test_eval_accuracy_consistency(tiny_task):
+    """DS accuracy can never exceed 1; top-k monotone in k."""
+    h, y, n = tiny_task
+    cfg = train.DsConfig(k=2, steps=200, batch=64, seed=4)
+    res = train.train_ds(h, y, n, cfg)
+    packed = M.ds_pack(res.params, res.state)
+    acc = train.eval_topk_accuracy(packed, h, y, ks=(1, 5, 10))
+    assert 0 <= acc["top1"] <= acc["top5"] <= acc["top10"] <= 1.0
+
+
+def test_pretrain_backbone_mlp():
+    x, y, _ = data.hierarchical_clusters(4, 4, n_per_sub=30, dim=20, seed=5)
+    p = nets.mlp_init(jax.random.PRNGKey(0), 20, 32, 16)
+    w0 = jax.random.normal(jax.random.PRNGKey(1), (16, 16)) * 0.05
+    p, wf, losses = train.pretrain_backbone(
+        nets.mlp_apply, p, w0, x, y, steps=300, batch=64
+    )
+    assert losses[-1] < losses[0] * 0.5

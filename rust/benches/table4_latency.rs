@@ -1,0 +1,172 @@
+//! Regenerates **Table 4**: real-device latency of Full softmax, DS-64,
+//! SVD-softmax (5% / 10% refinement, width-16 preview) and D-softmax on
+//! all four task shapes — every method re-implemented in one language
+//! (Rust) exactly as the paper re-implemented all in NumPy (§3.5).
+//!
+//! Reported per method: task value proxy (top-1 agreement with the exact
+//! softmax), FLOPs speedup, and measured per-query latency.
+//!
+//!     cargo bench --bench table4_latency
+
+use ds_softmax::benchlib::{bench, fmt_speedup, Table};
+use ds_softmax::data::ClusteredWorld;
+use ds_softmax::flops;
+use ds_softmax::model::dsoftmax::DSoftmax;
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::svd::SvdSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::tensor::Matrix;
+use ds_softmax::util::rng::Rng;
+
+/// Paper Table 4 latency rows (ms) for orientation.
+const PAPER: &[(&str, &str, &str, &str, &str, &str)] = &[
+    ("PTB", "0.73", "0.05 (15.99x)", "0.12 (6.67x)", "0.18 (5.00x)", "0.36 (2.00x)"),
+    ("Wiki-2", "3.07", "0.15 (23.86x)", "0.43 (7.35x)", "0.60 (5.38x)", "1.59 (2.00x)"),
+    ("En-Ve", "1.91", "0.13 (15.08x)", "0.32 (6.77x)", "0.42 (5.06x)", "0.98 (2.00x)"),
+    ("CASIA", "1.61", "0.25 (6.91x)", "0.59 (3.00x)", "0.68 (2.61x)", "-"),
+];
+
+struct TaskSpec {
+    name: &'static str,
+    n: usize,
+    d: usize,
+    zipf: f64,
+    paper_row: usize,
+}
+
+/// SVD over a row subsample when N is large: V comes from the sampled
+/// Gram structure, B = W·V over all rows.  O(d²·N/stride) instead of
+/// O(d²·N) per sweep; agreement is checked in the table output.
+fn svd_engine(w: &Matrix, window: usize, refine: f64) -> SvdSoftmax {
+    if w.rows <= 8_000 {
+        return SvdSoftmax::new(w, window, refine);
+    }
+    let stride = w.rows / 4_000;
+    let mut sample = Matrix::zeros(w.rows / stride, w.cols);
+    for r in 0..sample.rows {
+        sample
+            .row_mut(r)
+            .copy_from_slice(w.row(r * stride));
+    }
+    let (_bs, v, s) = ds_softmax::model::svd::jacobi_svd(&sample, 20, 1e-7);
+    // B = W · V for all rows
+    let d = w.cols;
+    let mut b = Matrix::zeros(w.rows, d);
+    for i in 0..w.rows {
+        let row = w.row(i);
+        for j in 0..d {
+            let mut acc = 0.0f32;
+            for t in 0..d {
+                acc += row[t] * v.row(t)[j];
+            }
+            b.row_mut(i)[j] = acc;
+        }
+    }
+    SvdSoftmax { b, v, window, refine_frac: refine, singular_values: s }
+}
+
+fn main() {
+    println!("Reproducing paper Table 4 (per-query latency, single thread, one impl discipline)");
+    println!("note: SVD-softmax 'Top1 agree' is depressed by the synthetic world's flat");
+    println!("singular spectrum (64 equal cluster directions ≫ window 16); on matrices with");
+    println!("trained-like decaying spectra the engine is near-exact (see unit test");
+    println!("svd_softmax_small_window_mostly_right). Latency/FLOPs are spectrum-independent.");
+    println!("paper rows (ms):");
+    for p in PAPER {
+        println!("  {:8} full={} ds64={} svd5={} svd10={} dsm={}", p.0, p.1, p.2, p.3, p.4, p.5);
+    }
+
+    let tasks = [
+        TaskSpec { name: "PTB", n: 10_048, d: 200, zipf: 1.05, paper_row: 0 },
+        TaskSpec { name: "Wiki-2", n: 33_280, d: 200, zipf: 1.05, paper_row: 1 },
+        TaskSpec { name: "En-Ve", n: 7_744, d: 512, zipf: 1.05, paper_row: 2 },
+        TaskSpec { name: "CASIA", n: 3_776, d: 256, zipf: 1e-9, paper_row: 3 },
+    ];
+
+    for t in &tasks {
+        let mut rng = Rng::new(3);
+        let world =
+            ClusteredWorld::with_head_redundancy(t.n, t.d, 64, t.zipf, 1.0, t.n / 25, &mut rng);
+        let full = FullSoftmax::new(world.w.clone());
+        let ds = DsSoftmax::new(world.set.clone());
+        let svd5 = svd_engine(&world.w, 16, 0.05);
+        let svd10 = svd_engine(&world.w, 16, 0.10);
+        let dsm = (t.zipf > 0.5).then(|| DSoftmax::new(&world.w, &DSoftmax::paper_plan(t.n, t.d)));
+
+        // agreement workload
+        let mut wl = Rng::new(5);
+        let queries: Vec<Vec<f32>> = (0..300).map(|_| world.sample(&mut wl).0).collect();
+        let truth: Vec<u32> = queries.iter().map(|h| full.query(h, 1)[0].0).collect();
+        let agree = |e: &dyn SoftmaxEngine| -> f64 {
+            let hits = queries
+                .iter()
+                .zip(&truth)
+                .filter(|(h, &y)| e.query(h, 1)[0].0 == y)
+                .count();
+            hits as f64 / queries.len() as f64
+        };
+
+        // latency: median over iterations, round-robin through queries
+        let mut qi = 0usize;
+        let mut lat = |e: &dyn SoftmaxEngine| -> f64 {
+            let m = bench(e.name(), 5, 60, || {
+                qi = (qi + 1) % queries.len();
+                std::hint::black_box(e.query(&queries[qi], 10));
+            });
+            m.per_iter_ms()
+        };
+
+        let mut table = Table::new(
+            &format!("Table 4 — {} (N={}, d={})", t.name, t.n, t.d),
+            &["Method", "Top1 agree", "FLOPs speedup", "latency ms", "paper ms (speedup)"],
+        );
+        let p = PAPER[t.paper_row];
+        let full_flops = flops::full_softmax(t.n, t.d) as f64;
+        table.row(vec![
+            "Full".into(),
+            "1.000".into(),
+            "-".into(),
+            format!("{:.3}", lat(&full)),
+            p.1.into(),
+        ]);
+        table.row(vec![
+            "DS-64".into(),
+            format!("{:.3}", agree(&ds)),
+            fmt_speedup(full_flops / ds.flops_per_query() as f64),
+            format!("{:.3}", lat(&ds)),
+            p.2.into(),
+        ]);
+        table.row(vec![
+            "SVD-5".into(),
+            format!("{:.3}", agree(&svd5)),
+            fmt_speedup(full_flops / svd5.flops_per_query() as f64),
+            format!("{:.3}", lat(&svd5)),
+            p.3.into(),
+        ]);
+        table.row(vec![
+            "SVD-10".into(),
+            format!("{:.3}", agree(&svd10)),
+            fmt_speedup(full_flops / svd10.flops_per_query() as f64),
+            format!("{:.3}", lat(&svd10)),
+            p.4.into(),
+        ]);
+        match &dsm {
+            Some(dsm) => table.row(vec![
+                "D-softmax".into(),
+                format!("{:.3}", agree(dsm)),
+                fmt_speedup(full_flops / dsm.flops_per_query() as f64),
+                format!("{:.3}", lat(dsm)),
+                p.5.into(),
+            ]),
+            None => table.row(vec![
+                "D-softmax".into(),
+                "-".into(),
+                "- (no speedup on uniform classes)".into(),
+                "-".into(),
+                p.5.into(),
+            ]),
+        }
+        table.print();
+    }
+}

@@ -1,0 +1,196 @@
+//! Regenerates **Table 5**: composing DS-Softmax with post-approximation
+//! — SVD-softmax applied *inside* each learned expert (each expert is an
+//! independent small softmax, §3.8).  Wiki-2 scale.
+//!
+//!   paper:  DS-2 = 1.83x, SVD-10 = 5.38x, DS-2 & SVD-10 = 9.64x,
+//!           DS-64 = 23.86x, SVD-50 = 1.72x, DS-64 & SVD-50 = 32.77x
+//!
+//!     cargo bench --bench table5_postapprox
+
+use ds_softmax::benchlib::{fmt_speedup, Table};
+use ds_softmax::data::ClusteredWorld;
+use ds_softmax::flops;
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::svd::SvdSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::tensor::Matrix;
+use ds_softmax::util::rng::Rng;
+use ds_softmax::util::topk::TopK;
+
+/// DS gate → chosen expert → SVD-softmax within the expert's packed
+/// matrix (applied only to experts above `svd_threshold` classes, paper
+/// §3.8).  Smaller experts run the plain packed softmax.
+struct DsSvd {
+    gate: DsSoftmax,
+    per_expert_svd: Vec<Option<SvdSoftmax>>,
+    svd_window: usize,
+    refine: f64,
+}
+
+impl DsSvd {
+    fn new(ds: DsSoftmax, window: usize, refine: f64, svd_threshold: usize) -> Self {
+        let per_expert_svd = ds
+            .set
+            .experts
+            .iter()
+            .map(|e| {
+                (e.valid > svd_threshold).then(|| {
+                    let mut w = Matrix::zeros(e.valid, e.weights.cols);
+                    for r in 0..e.valid {
+                        w.row_mut(r).copy_from_slice(e.weights.row(r));
+                    }
+                    SvdSoftmax::new(&w, window, refine)
+                })
+            })
+            .collect();
+        Self { gate: ds, per_expert_svd, svd_window: window, refine }
+    }
+
+    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let dec = self.gate.route(h);
+        let e = &self.gate.set.experts[dec.expert];
+        match &self.per_expert_svd[dec.expert] {
+            Some(svd) => {
+                // gate value scales logits; SVD engine is unscaled — the
+                // ranking is invariant to a positive scalar, and the probs
+                // differ only by temperature, so top-k ids match.
+                svd.query(h, k)
+                    .into_iter()
+                    .map(|(c, p)| (e.class_ids[c as usize] as u32, p))
+                    .collect()
+            }
+            None => {
+                let mut scratch =
+                    ds_softmax::model::dssoftmax::DsScratch::new(&self.gate.set, k);
+                self.gate.expert_topk(h, dec, &mut scratch)
+            }
+        }
+    }
+
+    fn expected_flops(&self, utilization: &[f64], d: usize) -> f64 {
+        let k = self.gate.set.k();
+        let gate = (2 * k * d + 3 * k) as f64;
+        let expert: f64 = self
+            .gate
+            .set
+            .experts
+            .iter()
+            .zip(&self.per_expert_svd)
+            .zip(utilization)
+            .map(|((e, svd), &u)| {
+                let cost = match svd {
+                    Some(_) => {
+                        flops::svd_softmax(e.valid, d, self.svd_window, self.refine) as f64
+                    }
+                    None => (2 * e.valid * d + 3 * e.valid) as f64,
+                };
+                u * cost
+            })
+            .sum();
+        gate + expert
+    }
+}
+
+fn main() {
+    println!("Reproducing paper Table 5 (post-approximation stacks on learned experts)");
+    let (n, d) = (33_280usize, 200usize);
+    let n_eval = 300;
+
+    let mut table = Table::new(
+        &format!("Table 5 — Wiki-2 composition (N={n}, d={d})"),
+        &["Method", "Top1 agree", "Speedup", "paper Speedup"],
+    );
+
+    // exact baseline for agreement
+    let mut rng = Rng::new(4);
+    let world2 = ClusteredWorld::with_head_redundancy(n, d, 2, 1.05, 1.0, 0, &mut rng);
+    let full = FullSoftmax::new(world2.w.clone());
+    let mut wl = Rng::new(6);
+    let queries: Vec<Vec<f32>> = (0..n_eval).map(|_| world2.sample(&mut wl).0).collect();
+    let truth: Vec<u32> = queries.iter().map(|h| full.query(h, 1)[0].0).collect();
+
+    let full_flops = flops::full_softmax(n, d) as f64;
+    table.row(vec!["Full".into(), "1.000".into(), "-".into(), "-".into()]);
+
+    // --- DS-2 and DS-2 & SVD-10 ---------------------------------------
+    let ds2 = DsSoftmax::new(world2.set.clone());
+    let uniform2 = vec![0.5; 2];
+    let agree = |f: &dyn Fn(&[f32]) -> u32| -> f64 {
+        queries
+            .iter()
+            .zip(&truth)
+            .filter(|(h, &y)| f(h) == y)
+            .count() as f64
+            / n_eval as f64
+    };
+    let a = agree(&|h| ds2.query(h, 1)[0].0);
+    table.row(vec![
+        "DS-2".into(),
+        format!("{a:.3}"),
+        fmt_speedup(full_flops / flops::ds_softmax_expected(&world2.set.expert_sizes(), &uniform2, d)),
+        "1.83x".into(),
+    ]);
+    let svd10 = ds_softmax::model::svd::SvdSoftmax::new(
+        // subsampled factorization is in table4; here DS-2 experts are
+        // ~16k rows → use stride sampling inside DsSvd would be ideal;
+        // direct Jacobi on 16k×200 is affordable once.
+        &world2.w, 16, 0.10,
+    );
+    let a = agree(&|h| svd10.query(h, 1)[0].0);
+    table.row(vec![
+        "SVD-10".into(),
+        format!("{a:.3}"),
+        fmt_speedup(full_flops / svd10.flops_per_query() as f64),
+        "5.38x".into(),
+    ]);
+    let ds2svd = DsSvd::new(DsSoftmax::new(world2.set.clone()), 16, 0.10, 1000);
+    let a = agree(&|h| ds2svd.query(h, 1)[0].0);
+    table.row(vec![
+        "DS-2 & SVD-10".into(),
+        format!("{a:.3}"),
+        fmt_speedup(full_flops / ds2svd.expected_flops(&uniform2, d)),
+        "9.64x".into(),
+    ]);
+
+    // --- DS-64 and DS-64 & SVD-50 ---------------------------------------
+    // agreement must be judged against the full softmax of the *same*
+    // world (each K has its own trained-like weight matrix)
+    let mut rng = Rng::new(4);
+    let world64 =
+        ClusteredWorld::with_head_redundancy(n, d, 64, 1.05, 1.0, n / 25, &mut rng);
+    let full64 = FullSoftmax::new(world64.w.clone());
+    let mut wl = Rng::new(6);
+    let queries64: Vec<Vec<f32>> = (0..n_eval).map(|_| world64.sample(&mut wl).0).collect();
+    let truth64: Vec<u32> = queries64.iter().map(|h| full64.query(h, 1)[0].0).collect();
+    let agree64 = |f: &dyn Fn(&[f32]) -> u32| -> f64 {
+        queries64
+            .iter()
+            .zip(&truth64)
+            .filter(|(h, &y)| f(h) == y)
+            .count() as f64
+            / n_eval as f64
+    };
+    let ds64 = DsSoftmax::new(world64.set.clone());
+    let uniform64 = vec![1.0 / 64.0; 64];
+    let a = agree64(&|h| ds64.query(h, 1)[0].0);
+    table.row(vec![
+        "DS-64".into(),
+        format!("{a:.3}"),
+        fmt_speedup(full_flops / flops::ds_softmax_expected(&world64.set.expert_sizes(), &uniform64, d)),
+        "23.86x".into(),
+    ]);
+    let ds64svd = DsSvd::new(DsSoftmax::new(world64.set.clone()), 16, 0.50, 1000);
+    let a = agree64(&|h| ds64svd.query(h, 1)[0].0);
+    table.row(vec![
+        "DS-64 & SVD-50".into(),
+        format!("{a:.3}"),
+        fmt_speedup(full_flops / ds64svd.expected_flops(&uniform64, d)),
+        "32.77x".into(),
+    ]);
+
+    table.print();
+    println!("\nnote: SVD rows' agreement is depressed by the synthetic flat spectrum");
+    println!("(see table4_latency note); the composition *speedups* are the Table 5 claim.");
+    let _ = TopK::new(1); // keep linker honest about util linkage
+}

@@ -1,0 +1,178 @@
+//! Benchmark harness substrate (no `criterion` offline): warmup, timed
+//! iterations with outlier trimming, ns-resolution reporting, and the
+//! table formatter the per-paper-table benches share.
+
+use std::time::Instant;
+
+/// One measured series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Measurement {
+    pub fn per_iter_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+
+    pub fn per_iter_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Time `f` — `iters` timed runs after `warmup` runs; each run's result
+/// is kept from being optimized away via `std::hint::black_box`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    summarize(name, &mut samples)
+}
+
+/// Time batched work: `f` runs `batch` logical operations per call; the
+/// reported numbers are per-operation.
+pub fn bench_batched<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    batch: usize,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    summarize(name, &mut samples)
+}
+
+fn summarize(name: &str, samples: &mut [f64]) -> Measurement {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // trim 10% from each tail against scheduler noise
+    let trim = samples.len() / 10;
+    let core = &samples[trim..samples.len() - trim.min(samples.len() - trim)];
+    let n = core.len().max(1);
+    let mean = core.iter().sum::<f64>() / n as f64;
+    let median = core[n / 2];
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        median_ns: median,
+        min_ns: samples.first().copied().unwrap_or(0.0),
+        max_ns: samples.last().copied().unwrap_or(0.0),
+    }
+}
+
+/// Markdown-ish table printer shared by the paper-table benches.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|&w| "-".repeat(w)).collect();
+        println!("{}", fmt_row(&sep));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Helper: format a speedup like the paper ("15.99x").
+pub fn fmt_speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 2, 20, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(s);
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.min_ns <= m.median_ns && m.median_ns <= m.max_ns);
+    }
+
+    #[test]
+    fn batched_divides() {
+        let m = bench_batched("noop100", 1, 10, 100, || {
+            for i in 0..100 {
+                std::hint::black_box(i);
+            }
+        });
+        assert!(m.median_ns < 1e6);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // just must not panic
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_width_checked() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_speedup_format() {
+        assert_eq!(fmt_speedup(15.988), "15.99x");
+    }
+}

@@ -1,0 +1,189 @@
+//! Dynamic batcher: per-expert pending queues with a size-or-deadline
+//! flush policy (the serving-system half of the paper's speedup — the
+//! packed expert matmul amortizes across a batch only if the router can
+//! accumulate same-expert queries without hurting tail latency).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::RoutedQuery;
+
+/// Flush policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// flush as soon as a queue reaches this many queries
+    pub max_batch: usize,
+    /// flush any queue whose oldest entry has waited this long
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Per-expert pending queues.
+pub struct Batcher {
+    queues: Vec<VecDeque<RoutedQuery>>,
+    policy: BatchPolicy,
+    pub pending: usize,
+}
+
+impl Batcher {
+    pub fn new(k: usize, policy: BatchPolicy) -> Self {
+        Self {
+            queues: (0..k).map(|_| VecDeque::new()).collect(),
+            policy,
+            pending: 0,
+        }
+    }
+
+    pub fn push(&mut self, q: RoutedQuery) {
+        self.queues[q.decision.expert].push_back(q);
+        self.pending += 1;
+    }
+
+    /// Collect every batch that is ready under the policy.  `now` is
+    /// injected for testability.
+    pub fn ready(&mut self, now: Instant) -> Vec<(usize, Vec<RoutedQuery>)> {
+        let mut out = Vec::new();
+        for (e, q) in self.queues.iter_mut().enumerate() {
+            while !q.is_empty() {
+                let full = q.len() >= self.policy.max_batch;
+                let expired = q
+                    .front()
+                    .map(|r| now.duration_since(r.submitted) >= self.policy.max_wait)
+                    .unwrap_or(false);
+                if !(full || expired) {
+                    break;
+                }
+                let take = q.len().min(self.policy.max_batch);
+                let batch: Vec<RoutedQuery> = q.drain(..take).collect();
+                self.pending -= batch.len();
+                out.push((e, batch));
+            }
+        }
+        out
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<(usize, Vec<RoutedQuery>)> {
+        let mut out = Vec::new();
+        for (e, q) in self.queues.iter_mut().enumerate() {
+            while !q.is_empty() {
+                let take = q.len().min(self.policy.max_batch);
+                let batch: Vec<RoutedQuery> = q.drain(..take).collect();
+                self.pending -= batch.len();
+                out.push((e, batch));
+            }
+        }
+        out
+    }
+
+    /// Earliest deadline across queues — how long the dispatcher may
+    /// sleep without violating max_wait.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front())
+            .map(|r| {
+                let waited = now.duration_since(r.submitted);
+                self.policy.max_wait.saturating_sub(waited)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::dssoftmax::GateDecision;
+    use std::sync::mpsc;
+
+    fn q(expert: usize, submitted: Instant) -> RoutedQuery {
+        let (tx, _rx) = mpsc::channel();
+        RoutedQuery {
+            id: 0,
+            h: vec![0.0; 4],
+            k: 1,
+            decision: GateDecision { expert, gate_value: 0.5 },
+            submitted,
+            responder: tx,
+        }
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = Batcher::new(2, BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        for _ in 0..7 {
+            b.push(q(0, now));
+        }
+        let ready = b.ready(now);
+        // two full batches of 3, one left pending
+        assert_eq!(ready.len(), 2);
+        assert!(ready.iter().all(|(e, batch)| *e == 0 && batch.len() == 3));
+        assert_eq!(b.pending, 1);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(2, BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        let past = Instant::now() - Duration::from_millis(5);
+        b.push(q(1, past));
+        b.push(q(1, past));
+        let ready = b.ready(Instant::now());
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].0, 1);
+        assert_eq!(ready[0].1.len(), 2);
+        assert_eq!(b.pending, 0);
+    }
+
+    #[test]
+    fn not_ready_before_deadline() {
+        let mut b = Batcher::new(1, BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(1) });
+        let now = Instant::now();
+        b.push(q(0, now));
+        assert!(b.ready(now).is_empty());
+        assert_eq!(b.pending, 1);
+    }
+
+    #[test]
+    fn keeps_experts_separate() {
+        let mut b = Batcher::new(3, BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        b.push(q(0, now));
+        b.push(q(1, now));
+        b.push(q(0, now));
+        b.push(q(1, now));
+        let mut ready = b.ready(now);
+        ready.sort_by_key(|(e, _)| *e);
+        assert_eq!(ready.len(), 2);
+        assert_eq!(ready[0].0, 0);
+        assert_eq!(ready[1].0, 1);
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = Batcher::new(2, BatchPolicy::default());
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push(q(i % 2, now));
+        }
+        let all = b.drain_all();
+        let total: usize = all.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, 5);
+        assert_eq!(b.pending, 0);
+    }
+
+    #[test]
+    fn next_deadline_reflects_oldest() {
+        let mut b = Batcher::new(1, BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(100) });
+        let now = Instant::now();
+        assert!(b.next_deadline(now).is_none());
+        b.push(q(0, now - Duration::from_millis(60)));
+        let dl = b.next_deadline(now).unwrap();
+        assert!(dl <= Duration::from_millis(41), "{dl:?}");
+    }
+}

@@ -1,0 +1,298 @@
+//! Batch execution engines behind the coordinator: given a batch of
+//! contexts routed to one expert (plus their gate values), produce each
+//! row's top-k classes.
+//!
+//! Two production impls: [`NativeBatchEngine`] (pure-Rust hot path) and
+//! `PjrtBatchEngine` (AOT HLO through the PJRT runtime; see
+//! `crate::runtime`).  Tests use [`MockEngine`] for failure injection.
+
+use crate::model::dssoftmax::{DsScratch, DsSoftmax, GateDecision};
+use crate::runtime::PjrtDsEngine;
+use crate::tensor::Matrix;
+
+/// Executes expert-grouped batches.
+pub trait BatchEngine: Send + Sync {
+    /// `hs` are the batch's context vectors, all routed to `expert`;
+    /// `gates` the per-row gate values.  Returns per-row top-k.
+    fn run_batch(
+        &self,
+        expert: usize,
+        hs: &[Vec<f32>],
+        gates: &[f32],
+        k: usize,
+    ) -> anyhow::Result<Vec<Vec<(u32, f32)>>>;
+
+    /// Route one context (sparse gate, Eq. 1).
+    fn route(&self, h: &[f32]) -> GateDecision;
+
+    fn k_experts(&self) -> usize;
+    fn dim(&self) -> usize;
+}
+
+/// Native engine: per-row packed matvec + scaled softmax + top-k.
+pub struct NativeBatchEngine {
+    pub ds: DsSoftmax,
+}
+
+impl NativeBatchEngine {
+    pub fn new(ds: DsSoftmax) -> Self {
+        Self { ds }
+    }
+}
+
+impl BatchEngine for NativeBatchEngine {
+    fn run_batch(
+        &self,
+        expert: usize,
+        hs: &[Vec<f32>],
+        gates: &[f32],
+        k: usize,
+    ) -> anyhow::Result<Vec<Vec<(u32, f32)>>> {
+        anyhow::ensure!(hs.len() == gates.len());
+        let mut scratch = DsScratch::new(&self.ds.set, k);
+        Ok(hs
+            .iter()
+            .zip(gates)
+            .map(|(h, &gv)| {
+                self.ds
+                    .expert_topk(h, GateDecision { expert, gate_value: gv }, &mut scratch)
+            })
+            .collect())
+    }
+
+    fn route(&self, h: &[f32]) -> GateDecision {
+        self.ds.route(h)
+    }
+
+    fn k_experts(&self) -> usize {
+        self.ds.set.k()
+    }
+
+    fn dim(&self) -> usize {
+        self.ds.set.dim()
+    }
+}
+
+/// PJRT engine: batched expert softmax through the AOT HLO executables.
+///
+/// The `xla` crate's PJRT handles are `!Send` (raw pointers + `Rc`), so
+/// the engine is *confined to a dedicated executor thread* that owns the
+/// `PjrtDsEngine`; this handle is `Send + Sync` and forwards batches over
+/// a channel.  Routing stays native (O(K·d) — cheaper than a PJRT
+/// dispatch and identical math to the exported gate HLO).
+pub struct PjrtBatchEngine {
+    jobs: std::sync::Mutex<std::sync::mpsc::Sender<PjrtJob>>,
+    router: DsSoftmax,
+    buckets: Vec<usize>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+struct PjrtJob {
+    expert: usize,
+    hm: Matrix,
+    gates: Vec<f32>,
+    rows: usize,
+    bucket: usize,
+    reply: std::sync::mpsc::Sender<anyhow::Result<Vec<f32>>>,
+}
+
+impl PjrtBatchEngine {
+    /// Build from a manifest; the PJRT client + executables live on the
+    /// spawned executor thread.
+    pub fn new(manifest: crate::artifacts::Manifest) -> anyhow::Result<Self> {
+        let set = manifest.expert_set()?;
+        let buckets = manifest.buckets.clone();
+        let (tx, rx) = std::sync::mpsc::channel::<PjrtJob>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("dss-pjrt-exec".into())
+            .spawn(move || {
+                let engine = crate::runtime::Runtime::cpu()
+                    .and_then(|rt| PjrtDsEngine::new(rt, manifest));
+                let engine = match engine {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let res = engine.expert_probs(
+                        job.expert,
+                        &job.hm,
+                        &job.gates,
+                        job.bucket,
+                    );
+                    let _ = job.rows; // rows used by caller for unpacking
+                    let _ = job.reply.send(res);
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pjrt executor died during init"))??;
+        Ok(Self {
+            jobs: std::sync::Mutex::new(tx),
+            router: DsSoftmax::new(set),
+            buckets,
+            worker: Some(worker),
+        })
+    }
+
+    /// Smallest exported batch bucket >= n (replicated natively to avoid
+    /// a channel round-trip).
+    fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or_else(|| self.buckets.iter().copied().max().unwrap_or(n))
+    }
+}
+
+impl BatchEngine for PjrtBatchEngine {
+    fn run_batch(
+        &self,
+        expert: usize,
+        hs: &[Vec<f32>],
+        gates: &[f32],
+        k: usize,
+    ) -> anyhow::Result<Vec<Vec<(u32, f32)>>> {
+        let n = hs.len();
+        let d = self.dim();
+        let bucket = self.bucket_for(n);
+        let mut hm = Matrix::zeros(bucket, d);
+        let mut gv = vec![0.0f32; bucket];
+        for (i, h) in hs.iter().enumerate() {
+            hm.row_mut(i).copy_from_slice(h);
+            gv[i] = gates[i];
+        }
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.jobs
+            .lock()
+            .unwrap()
+            .send(PjrtJob {
+                expert,
+                hm,
+                gates: gv,
+                rows: n,
+                bucket,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("pjrt executor gone"))?;
+        let probs = reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pjrt executor dropped reply"))??;
+        let p = probs.len() / bucket;
+        let ids = &self.router.set.experts[expert].class_ids;
+        Ok((0..n)
+            .map(|i| {
+                crate::util::topk::topk(&probs[i * p..(i + 1) * p], k)
+                    .into_iter()
+                    .map(|(prob, idx)| (ids[idx as usize] as u32, prob))
+                    .collect()
+            })
+            .collect())
+    }
+
+    fn route(&self, h: &[f32]) -> GateDecision {
+        self.router.route(h)
+    }
+
+    fn k_experts(&self) -> usize {
+        self.router.set.k()
+    }
+
+    fn dim(&self) -> usize {
+        self.router.set.dim()
+    }
+}
+
+impl Drop for PjrtBatchEngine {
+    fn drop(&mut self) {
+        // close the channel so the executor thread exits
+        {
+            let (dummy_tx, _dummy_rx) = std::sync::mpsc::channel();
+            *self.jobs.lock().unwrap() = dummy_tx;
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Test double: fixed routing, scripted results, optional failure.
+#[cfg(any(test, debug_assertions))]
+pub struct MockEngine {
+    pub k: usize,
+    pub d: usize,
+    pub fail_expert: Option<usize>,
+}
+
+#[cfg(any(test, debug_assertions))]
+impl BatchEngine for MockEngine {
+    fn run_batch(
+        &self,
+        expert: usize,
+        hs: &[Vec<f32>],
+        _gates: &[f32],
+        k: usize,
+    ) -> anyhow::Result<Vec<Vec<(u32, f32)>>> {
+        if self.fail_expert == Some(expert) {
+            anyhow::bail!("injected failure on expert {expert}");
+        }
+        Ok(hs
+            .iter()
+            .map(|_| (0..k).map(|i| (i as u32, 1.0 / (i + 1) as f32)).collect())
+            .collect())
+    }
+
+    fn route(&self, h: &[f32]) -> GateDecision {
+        // deterministic routing on the first coordinate
+        let e = (h[0].abs() as usize) % self.k;
+        GateDecision { expert: e, gate_value: 0.5 }
+    }
+
+    fn k_experts(&self) -> usize {
+        self.k
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::ExpertSet;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_batch_matches_single_query() {
+        let mut rng = Rng::new(1);
+        let ds = DsSoftmax::new(ExpertSet::synthetic(256, 16, 4, 1.2, &mut rng));
+        let single = DsSoftmax::new(ds.set.clone());
+        let engine = NativeBatchEngine::new(ds);
+        let hs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(16, 1.0)).collect();
+        // route and group manually
+        for h in &hs {
+            let d = engine.route(h);
+            let got = engine
+                .run_batch(d.expert, &[h.clone()], &[d.gate_value], 5)
+                .unwrap();
+            let want = crate::model::SoftmaxEngine::query(&single, h, 5);
+            assert_eq!(got[0], want);
+        }
+    }
+
+    #[test]
+    fn mock_failure_injection() {
+        let m = MockEngine { k: 4, d: 8, fail_expert: Some(2) };
+        assert!(m.run_batch(2, &[vec![0.0; 8]], &[0.5], 3).is_err());
+        assert!(m.run_batch(1, &[vec![0.0; 8]], &[0.5], 3).is_ok());
+    }
+}

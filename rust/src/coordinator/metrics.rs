@@ -1,0 +1,111 @@
+//! Coordinator metrics plane: stage latencies, batch shapes, routing
+//! distribution, rejections.  Lock scope is one histogram at a time; the
+//! hot path records with a single mutex acquisition per stage.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::LatencyHisto;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_queries: AtomicU64,
+    /// routing counts per expert (fixed at construction)
+    pub per_expert: Vec<AtomicU64>,
+    pub queue_latency: Mutex<LatencyHisto>,
+    pub execute_latency: Mutex<LatencyHisto>,
+    pub total_latency: Mutex<LatencyHisto>,
+}
+
+impl Metrics {
+    pub fn new(k: usize) -> Self {
+        Self {
+            per_expert: (0..k).map(|_| AtomicU64::new(0)).collect(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record_route(&self, expert: usize) {
+        self.per_expert[expert].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_queries.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Empirical utilization u_k (paper §2.3) from routing counts.
+    pub fn utilization(&self) -> Vec<f64> {
+        let counts: Vec<u64> = self
+            .per_expert
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        counts
+            .iter()
+            .map(|&c| c as f64 / total.max(1) as f64)
+            .collect()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "submitted={} completed={} rejected={} batches={} mean_batch={:.2}\n  queue: {}\n  exec:  {}\n  total: {}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.queue_latency.lock().unwrap().summary(),
+            self.execute_latency.lock().unwrap().summary(),
+            self.total_latency.lock().unwrap().summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_normalizes() {
+        let m = Metrics::new(4);
+        m.record_route(0);
+        m.record_route(0);
+        m.record_route(2);
+        let u = m.utilization();
+        assert_eq!(u.len(), 4);
+        assert!((u.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((u[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(u[1], 0.0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new(2);
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_contains_stages() {
+        let m = Metrics::new(1);
+        m.total_latency.lock().unwrap().record_ns(1000);
+        let r = m.report();
+        assert!(r.contains("queue:") && r.contains("exec:") && r.contains("total:"));
+    }
+}

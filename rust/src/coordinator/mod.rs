@@ -1,0 +1,28 @@
+//! L3 serving coordinator — the paper's system integrated as a service:
+//!
+//! ```text
+//!   clients ──▶ ingress queue (bounded, backpressure)
+//!                  │ router: sparse gate (O(K·d), native)
+//!                  ▼
+//!          per-expert pending queues
+//!                  │ dynamic batcher: flush on size or deadline
+//!                  ▼
+//!          worker pool ──▶ BatchEngine (native or PJRT expert softmax)
+//!                  │
+//!                  ▼ per-request response channels + metrics
+//! ```
+//!
+//! The gate runs *before* batching so requests are grouped by expert —
+//! the DS-Softmax analogue of vLLM-style continuous batching: batches
+//! are only formed across requests that share the same sparse expert,
+//! which is what makes the packed-expert matmul dense and fast.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use engine::{BatchEngine, NativeBatchEngine};
+pub use metrics::Metrics;
+pub use server::{Coordinator, CoordinatorConfig, QueryError};

@@ -1,0 +1,77 @@
+//! Router: assigns incoming queries to their sparse expert via the
+//! gating network (Eq. 1).  Routing happens *before* batching so that
+//! batches are homogeneous per expert — the structural property that
+//! turns the sparse second level into a dense packed matmul.
+
+use std::time::Instant;
+
+use crate::coordinator::engine::BatchEngine;
+use crate::model::dssoftmax::GateDecision;
+
+/// A query admitted into the coordinator.
+pub struct RoutedQuery {
+    pub id: u64,
+    pub h: Vec<f32>,
+    pub k: usize,
+    pub decision: GateDecision,
+    pub submitted: Instant,
+    pub responder: std::sync::mpsc::Sender<super::server::QueryResult>,
+}
+
+/// Stateless routing: validates dimensionality, runs the gate.
+pub struct Router<'a> {
+    engine: &'a dyn BatchEngine,
+}
+
+impl<'a> Router<'a> {
+    pub fn new(engine: &'a dyn BatchEngine) -> Self {
+        Self { engine }
+    }
+
+    pub fn route(&self, h: &[f32]) -> Result<GateDecision, String> {
+        if h.len() != self.engine.dim() {
+            return Err(format!(
+                "dimension mismatch: query {} vs model {}",
+                h.len(),
+                self.engine.dim()
+            ));
+        }
+        if h.iter().any(|x| !x.is_finite()) {
+            return Err("non-finite context vector".into());
+        }
+        Ok(self.engine.route(h))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+
+    #[test]
+    fn routes_in_range() {
+        let e = MockEngine { k: 4, d: 8, fail_expert: None };
+        let r = Router::new(&e);
+        for v in 0..20 {
+            let h = vec![v as f32; 8];
+            let d = r.route(&h).unwrap();
+            assert!(d.expert < 4);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_dim() {
+        let e = MockEngine { k: 4, d: 8, fail_expert: None };
+        let r = Router::new(&e);
+        assert!(r.route(&vec![0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn rejects_nan() {
+        let e = MockEngine { k: 4, d: 8, fail_expert: None };
+        let r = Router::new(&e);
+        let mut h = vec![0.0; 8];
+        h[3] = f32::NAN;
+        assert!(r.route(&h).is_err());
+    }
+}

@@ -1,0 +1,347 @@
+//! The coordinator service: ingress with backpressure, a dispatcher
+//! thread running route→batch, and a worker pool executing expert
+//! batches.  Thread-based (no tokio offline) — the dispatcher is a
+//! single hot loop, workers scale with cores.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::engine::BatchEngine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{RoutedQuery, Router};
+use crate::util::threadpool::{BoundedQueue, ThreadPool};
+
+/// Completed query result (or error string).
+pub type QueryResult = Result<Vec<(u32, f32)>, QueryError>;
+
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum QueryError {
+    #[error("rejected: {0}")]
+    Rejected(String),
+    #[error("engine failure: {0}")]
+    Engine(String),
+    #[error("shutting down")]
+    Shutdown,
+}
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub queue_capacity: usize,
+    pub workers: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            queue_capacity: 4096,
+            workers: std::thread::available_parallelism()
+                .map(|p| p.get().saturating_sub(2).max(1))
+                .unwrap_or(2),
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// In-flight handle returned by [`Coordinator::submit`].
+pub struct Pending {
+    rx: mpsc::Receiver<QueryResult>,
+}
+
+impl Pending {
+    pub fn wait(self) -> QueryResult {
+        self.rx
+            .recv()
+            .unwrap_or(Err(QueryError::Shutdown))
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> Option<QueryResult> {
+        self.rx.recv_timeout(d).ok()
+    }
+}
+
+pub struct Coordinator {
+    ingress: Arc<BoundedQueue<RoutedQuery>>,
+    pub metrics: Arc<Metrics>,
+    engine: Arc<dyn BatchEngine>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn start(engine: Arc<dyn BatchEngine>, cfg: CoordinatorConfig) -> Self {
+        let ingress = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let metrics = Arc::new(Metrics::new(engine.k_experts()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let dispatcher = {
+            let ingress = ingress.clone();
+            let metrics = metrics.clone();
+            let engine = engine.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("dss-dispatcher".into())
+                .spawn(move || {
+                    dispatch_loop(ingress, engine, metrics, stop, cfg)
+                })
+                .expect("spawn dispatcher")
+        };
+
+        Self {
+            ingress,
+            metrics,
+            engine,
+            next_id: AtomicU64::new(0),
+            stop,
+            dispatcher: Some(dispatcher),
+        }
+    }
+
+    /// Submit a query; fails fast with backpressure if the ingress queue
+    /// is full (the caller can retry / shed load).
+    pub fn submit(&self, h: Vec<f32>, k: usize) -> Result<Pending, QueryError> {
+        // route up-front: dimension/NaN validation + expert assignment
+        let router = Router::new(self.engine.as_ref());
+        let decision = router.route(&h).map_err(QueryError::Rejected)?;
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_route(decision.expert);
+        let (tx, rx) = mpsc::channel();
+        let q = RoutedQuery {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            h,
+            k,
+            decision,
+            submitted: Instant::now(),
+            responder: tx,
+        };
+        self.ingress.try_push(q).map_err(|_| {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            QueryError::Rejected("ingress queue full".into())
+        })?;
+        Ok(Pending { rx })
+    }
+
+    /// Synchronous convenience: submit + wait.
+    pub fn query(&self, h: Vec<f32>, k: usize) -> QueryResult {
+        self.submit(h, k)?.wait()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        self.ingress.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn dispatch_loop(
+    ingress: Arc<BoundedQueue<RoutedQuery>>,
+    engine: Arc<dyn BatchEngine>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    cfg: CoordinatorConfig,
+) {
+    let pool = ThreadPool::new(cfg.workers);
+    let mut batcher = Batcher::new(engine.k_experts(), cfg.policy);
+
+    let run_batch = |expert: usize, batch: Vec<RoutedQuery>| {
+        let engine = engine.clone();
+        let metrics = metrics.clone();
+        pool.execute(move || {
+            let t0 = Instant::now();
+            let hs: Vec<Vec<f32>> = batch.iter().map(|q| q.h.clone()).collect();
+            let gates: Vec<f32> = batch.iter().map(|q| q.decision.gate_value).collect();
+            let kmax = batch.iter().map(|q| q.k).max().unwrap_or(1);
+            metrics.record_batch(batch.len());
+            for q in &batch {
+                metrics
+                    .queue_latency
+                    .lock()
+                    .unwrap()
+                    .record(t0.duration_since(q.submitted));
+            }
+            match engine.run_batch(expert, &hs, &gates, kmax) {
+                Ok(results) => {
+                    let exec = t0.elapsed();
+                    metrics.execute_latency.lock().unwrap().record(exec);
+                    for (q, mut r) in batch.into_iter().zip(results) {
+                        r.truncate(q.k);
+                        metrics
+                            .total_latency
+                            .lock()
+                            .unwrap()
+                            .record(q.submitted.elapsed());
+                        metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        let _ = q.responder.send(Ok(r));
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for q in batch {
+                        let _ = q.responder.send(Err(QueryError::Engine(msg.clone())));
+                    }
+                }
+            }
+        });
+    };
+
+    loop {
+        let wait = batcher
+            .next_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(1))
+            .min(Duration::from_millis(1));
+        let drained = ingress.pop_batch(cfg.policy.max_batch * 4, wait);
+        let stopping = stop.load(Ordering::Acquire);
+        for q in drained {
+            batcher.push(q);
+        }
+        for (expert, batch) in batcher.ready(Instant::now()) {
+            run_batch(expert, batch);
+        }
+        // Idle flush (EXPERIMENTS.md §Perf): when no more arrivals are
+        // queued, waiting out max_wait only adds tail latency — flush
+        // everything now.  Under sustained load the ingress is never
+        // empty here, so size/deadline batching is preserved.
+        if batcher.pending > 0 && ingress.is_empty() {
+            for (expert, batch) in batcher.drain_all() {
+                run_batch(expert, batch);
+            }
+        }
+        if stopping {
+            for (expert, batch) in batcher.drain_all() {
+                run_batch(expert, batch);
+            }
+            if ingress.is_empty() {
+                break;
+            }
+        }
+    }
+    // pool drop joins workers, flushing in-flight batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{MockEngine, NativeBatchEngine};
+    use crate::model::dssoftmax::DsSoftmax;
+    use crate::model::SoftmaxEngine;
+    use crate::sparse::ExpertSet;
+    use crate::util::rng::Rng;
+
+    fn native_coord() -> (Coordinator, DsSoftmax) {
+        let mut rng = Rng::new(5);
+        let set = ExpertSet::synthetic(256, 16, 4, 1.2, &mut rng);
+        let reference = DsSoftmax::new(set.clone());
+        let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(set)));
+        let c = Coordinator::start(engine, CoordinatorConfig::default());
+        (c, reference)
+    }
+
+    #[test]
+    fn single_query_roundtrip() {
+        let (c, reference) = native_coord();
+        let mut rng = Rng::new(6);
+        let h = rng.normal_vec(16, 1.0);
+        let got = c.query(h.clone(), 5).unwrap();
+        let want = reference.query(&h, 5);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn many_concurrent_queries_all_complete() {
+        let (c, reference) = native_coord();
+        let mut rng = Rng::new(7);
+        let queries: Vec<Vec<f32>> = (0..200).map(|_| rng.normal_vec(16, 1.0)).collect();
+        let pendings: Vec<_> = queries
+            .iter()
+            .map(|h| c.submit(h.clone(), 3).unwrap())
+            .collect();
+        for (h, p) in queries.iter().zip(pendings) {
+            let got = p.wait().unwrap();
+            assert_eq!(got, reference.query(h, 3));
+        }
+        assert_eq!(
+            c.metrics.completed.load(Ordering::Relaxed),
+            200
+        );
+        // batching actually happened (mean batch > 1 under burst load)
+        assert!(c.metrics.mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn rejects_wrong_dimension() {
+        let (c, _) = native_coord();
+        match c.query(vec![0.0; 3], 1) {
+            Err(QueryError::Rejected(msg)) => assert!(msg.contains("dimension")),
+            other => panic!("want rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn engine_failure_propagates() {
+        let engine = Arc::new(MockEngine { k: 2, d: 4, fail_expert: Some(1) });
+        let c = Coordinator::start(engine, CoordinatorConfig::default());
+        // h[0]=1 routes to expert 1 (fails), h[0]=0 routes to expert 0 (ok)
+        match c.query(vec![1.0, 0.0, 0.0, 0.0], 1) {
+            Err(QueryError::Engine(m)) => assert!(m.contains("injected")),
+            other => panic!("{other:?}"),
+        }
+        assert!(c.query(vec![0.0; 4], 1).is_ok());
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let (mut c, _) = native_coord();
+        let mut rng = Rng::new(8);
+        let pendings: Vec<_> = (0..50)
+            .map(|_| c.submit(rng.normal_vec(16, 1.0), 2).unwrap())
+            .collect();
+        c.shutdown();
+        for p in pendings {
+            assert!(p.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let engine = Arc::new(MockEngine { k: 1, d: 2, fail_expert: None });
+        let cfg = CoordinatorConfig {
+            queue_capacity: 4,
+            workers: 1,
+            policy: BatchPolicy { max_batch: 1024, max_wait: Duration::from_secs(5) },
+        };
+        let c = Coordinator::start(engine, cfg);
+        // flood; queue of 4 + slow flush (5s deadline, huge batch) → rejections
+        let mut rejected = 0;
+        let mut pend = Vec::new();
+        for _ in 0..64 {
+            match c.submit(vec![0.0, 0.0], 1) {
+                Ok(p) => pend.push(p),
+                Err(QueryError::Rejected(_)) => rejected += 1,
+                Err(e) => panic!("{e:?}"),
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+    }
+
+    #[test]
+    fn utilization_tracks_routing() {
+        let (c, _) = native_coord();
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let _ = c.query(rng.normal_vec(16, 1.0), 1);
+        }
+        let u = c.metrics.utilization();
+        assert!((u.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,160 @@
+//! Evaluation metrics: top-k agreement/accuracy (Tables 1/3/4) and BLEU
+//! (Table 2), implemented from scratch.
+
+use std::collections::HashMap;
+
+/// Fraction of queries whose engine top-k contains the reference top-1.
+/// With the full softmax as reference this is the paper's "Top k" metric
+/// under the agreement protocol (test labels replaced by exact top-1).
+pub fn topk_hit(topk: &[(u32, f32)], truth: u32) -> bool {
+    topk.iter().any(|&(c, _)| c == truth)
+}
+
+/// Top-k agreement across a workload: for each context, does the method's
+/// top-k contain the exact full-softmax argmax?
+pub struct AgreementCounter {
+    pub hits: Vec<u64>, // per k in ks
+    pub total: u64,
+    pub ks: Vec<usize>,
+}
+
+impl AgreementCounter {
+    pub fn new(ks: &[usize]) -> Self {
+        Self { hits: vec![0; ks.len()], total: 0, ks: ks.to_vec() }
+    }
+
+    pub fn observe(&mut self, predicted: &[(u32, f32)], truth: u32) {
+        self.total += 1;
+        for (i, &k) in self.ks.iter().enumerate() {
+            if predicted.iter().take(k).any(|&(c, _)| c == truth) {
+                self.hits[i] += 1;
+            }
+        }
+    }
+
+    pub fn rates(&self) -> Vec<f64> {
+        self.hits
+            .iter()
+            .map(|&h| h as f64 / self.total.max(1) as f64)
+            .collect()
+    }
+}
+
+/// Corpus BLEU with up-to-4-gram precision and brevity penalty
+/// (Papineni et al. 2002), on integer token sequences.
+pub fn bleu(references: &[Vec<u32>], hypotheses: &[Vec<u32>], max_n: usize) -> f64 {
+    assert_eq!(references.len(), hypotheses.len());
+    let max_n = max_n.clamp(1, 4);
+    let mut match_n = vec![0u64; max_n];
+    let mut total_n = vec![0u64; max_n];
+    let mut ref_len = 0u64;
+    let mut hyp_len = 0u64;
+
+    for (r, h) in references.iter().zip(hypotheses) {
+        ref_len += r.len() as u64;
+        hyp_len += h.len() as u64;
+        for n in 1..=max_n {
+            if h.len() < n {
+                continue;
+            }
+            let mut ref_counts: HashMap<&[u32], u64> = HashMap::new();
+            if r.len() >= n {
+                for w in r.windows(n) {
+                    *ref_counts.entry(w).or_insert(0) += 1;
+                }
+            }
+            let mut m = 0u64;
+            let mut hyp_counts: HashMap<&[u32], u64> = HashMap::new();
+            for w in h.windows(n) {
+                *hyp_counts.entry(w).or_insert(0) += 1;
+            }
+            for (gram, c) in hyp_counts {
+                m += c.min(ref_counts.get(gram).copied().unwrap_or(0));
+            }
+            match_n[n - 1] += m;
+            total_n[n - 1] += (h.len() - n + 1) as u64;
+        }
+    }
+
+    // geometric mean of n-gram precisions (with floor to avoid log 0)
+    let mut log_p = 0.0f64;
+    for n in 0..max_n {
+        let p = if total_n[n] == 0 {
+            0.0
+        } else {
+            match_n[n] as f64 / total_n[n] as f64
+        };
+        if p <= 0.0 {
+            return 0.0;
+        }
+        log_p += p.ln() / max_n as f64;
+    }
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else if hyp_len == 0 {
+        0.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * log_p.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_translation_is_100() {
+        let refs = vec![vec![1, 2, 3, 4, 5], vec![7, 8, 9, 10]];
+        let b = bleu(&refs, &refs.clone(), 4);
+        assert!((b - 100.0).abs() < 1e-9, "{b}");
+    }
+
+    #[test]
+    fn empty_hypothesis_is_0() {
+        let refs = vec![vec![1, 2, 3, 4]];
+        let hyps = vec![vec![]];
+        assert_eq!(bleu(&refs, &hyps, 4), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_between_0_and_100() {
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let hyps = vec![vec![1, 2, 3, 9, 5, 6, 7, 8]];
+        let b = bleu(&refs, &hyps, 4);
+        assert!(b > 10.0 && b < 95.0, "{b}");
+    }
+
+    #[test]
+    fn brevity_penalty_hurts_short_output() {
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let long = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let short = vec![vec![1, 2, 3, 4]];
+        assert!(bleu(&refs, &short, 2) < bleu(&refs, &long, 2));
+    }
+
+    #[test]
+    fn clipping_prevents_repetition_gaming() {
+        let refs = vec![vec![1, 2, 3, 4]];
+        let spam = vec![vec![1, 1, 1, 1]];
+        let b = bleu(&refs, &spam, 1);
+        assert!(b <= 25.0 + 1e-9, "{b}"); // only one clipped match / 4
+    }
+
+    #[test]
+    fn agreement_counter() {
+        let mut c = AgreementCounter::new(&[1, 5]);
+        c.observe(&[(3, 0.5), (7, 0.3)], 3); // top1 hit
+        c.observe(&[(9, 0.5), (3, 0.3)], 3); // top5 hit only
+        c.observe(&[(1, 0.9)], 3); // miss
+        let r = c.rates();
+        assert!((r[0] - 1.0 / 3.0).abs() < 1e-9);
+        assert!((r[1] - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_hit_basic() {
+        assert!(topk_hit(&[(1, 0.3), (2, 0.2)], 2));
+        assert!(!topk_hit(&[(1, 0.3)], 9));
+    }
+}

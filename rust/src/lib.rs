@@ -1,0 +1,50 @@
+//! # ds-softmax
+//!
+//! A production-grade reproduction of **"Doubly Sparse: Sparse Mixture of
+//! Sparse Experts for Efficient Softmax Inference"** (Liao, Chen, Lin,
+//! Zhou, Wang; 2019) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) implement the
+//!   gating and packed-expert softmax hot spots (build time only).
+//! * **L2** — the JAX model (`python/compile/`) trains the DS-Softmax
+//!   layer (group-lasso pruning, load balancing, mitosis training) and
+//!   AOT-lowers the inference graphs to HLO text.
+//! * **L3** — this crate: the serving coordinator (router → group-by-
+//!   expert dynamic batcher → engines), the PJRT runtime that executes
+//!   the AOT artifacts, native fallback engines, all paper baselines
+//!   (full softmax, SVD-softmax, D-softmax), FLOPs accounting, and the
+//!   benchmark harness that regenerates every table and figure.
+//!
+//! Python never runs at serving time: after `make artifacts`, the `dss`
+//! binary and the examples are self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ds_softmax::sparse::ExpertSet;
+//! use ds_softmax::model::dssoftmax::DsSoftmax;
+//! use ds_softmax::model::SoftmaxEngine;
+//! use ds_softmax::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let set = ExpertSet::synthetic(1_000, 32, 8, 1.2, &mut rng);
+//! let engine = DsSoftmax::new(set);
+//! let h = rng.normal_vec(32, 1.0);
+//! let top = engine.query(&h, 10); // top-10 (class, prob)
+//! assert_eq!(top.len(), 10);
+//! ```
+
+pub mod artifacts;
+pub mod benchlib;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod flops;
+pub mod model;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+
+/// Crate version string used by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,191 @@
+//! `dss` — the DS-Softmax CLI.
+//!
+//! Subcommands:
+//!   serve     run the coordinator on an artifact set and drive a
+//!             synthetic workload against it (latency/throughput report)
+//!   query     one-shot top-k query with a random or supplied context
+//!   inspect   print an artifact set's structure (expert sizes,
+//!             redundancy, theoretical speedup)
+//!   gen       generate a synthetic ExpertSet and report its stats
+//!   bench     quick engine micro-bench (full vs DS at given sizes)
+
+use std::sync::Arc;
+
+use ds_softmax::artifacts::{artifacts_root, Manifest};
+use ds_softmax::benchlib;
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::util::cli::Args;
+use ds_softmax::util::rng::Rng;
+
+const USAGE: &str = "\
+dss — Doubly Sparse Softmax serving CLI
+
+USAGE: dss <serve|query|inspect|gen|bench> [options]
+
+  serve    --artifact <name> --queries N --qps Q --k K --pjrt
+  query    --artifact <name> --k K [--seed S]
+  inspect  --artifact <name>
+  gen      --n N --d D --experts K --redundancy M
+  bench    --n N --d D --experts K [--iters I]
+
+Common: --artifacts-dir <path> (default ./artifacts or $DSS_ARTIFACTS)
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["serve", "query", "inspect", "gen", "bench"]);
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("query") => query(&args),
+        Some("inspect") => inspect(&args),
+        Some("gen") => gen(&args),
+        Some("bench") => bench(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn manifest_from(args: &Args) -> anyhow::Result<Manifest> {
+    let root = args
+        .get("artifacts-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_root);
+    let name = args.get_or("artifact", "lm");
+    Ok(Manifest::load(root.join(name))?)
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let m = manifest_from(args)?;
+    let n_queries = args.usize_or("queries", 10_000);
+    let k = args.usize_or("k", 10);
+    let set = m.expert_set()?;
+    let d = set.dim();
+    println!(
+        "serving '{}': N={} d={} K={} p={} (theoretical speedup {:.2}x)",
+        m.name, m.n_classes, d, m.k, m.p, m.speedup_theoretical
+    );
+    let engine: Arc<dyn ds_softmax::coordinator::BatchEngine> = if args.flag("pjrt") {
+        println!("PJRT expert backend (dedicated executor thread)");
+        Arc::new(ds_softmax::coordinator::engine::PjrtBatchEngine::new(m.clone())?)
+    } else {
+        Arc::new(NativeBatchEngine::new(DsSoftmax::with_utilization(
+            set,
+            m.utilization.clone(),
+        )))
+    };
+    let c = Coordinator::start(engine, CoordinatorConfig::default());
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_queries);
+    for _ in 0..n_queries {
+        let h = rng.normal_vec(d, 1.0);
+        match c.submit(h, k) {
+            Ok(p) => pending.push(p),
+            Err(_) => {}
+        }
+    }
+    let mut ok = 0;
+    for p in pending {
+        if p.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{ok}/{n_queries} ok in {:?} → {:.0} qps",
+        dt,
+        ok as f64 / dt.as_secs_f64()
+    );
+    println!("{}", c.metrics.report());
+    Ok(())
+}
+
+fn query(args: &Args) -> anyhow::Result<()> {
+    let m = manifest_from(args)?;
+    let set = m.expert_set()?;
+    let ds = DsSoftmax::new(set);
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let h = rng.normal_vec(ds.dim(), 1.0);
+    let k = args.usize_or("k", 10);
+    let top = ds.query(&h, k);
+    println!("top-{k} classes (random context, seed {}):", args.u64_or("seed", 0));
+    for (c, p) in top {
+        println!("  class {c:>6}  p={p:.4}");
+    }
+    Ok(())
+}
+
+fn inspect(args: &Args) -> anyhow::Result<()> {
+    let m = manifest_from(args)?;
+    let set = m.expert_set()?;
+    println!("artifact '{}'", m.name);
+    println!("  N={} d={} K={} p={}", m.n_classes, m.d, m.k, m.p);
+    println!("  expert sizes: {:?}", set.expert_sizes());
+    println!("  utilization:  {:?}", m.utilization);
+    println!("  mean redundancy m = {:.3}", set.mean_redundancy());
+    println!("  theoretical speedup = {:.2}x", set.speedup(&m.utilization));
+    if args.flag("redundancy") {
+        // Fig 5b: frequency rank (= class id under the Zipf workload)
+        // vs number of experts containing the class
+        let red = set.redundancy();
+        println!("  class-id vs redundancy (first 32 / last 32):");
+        let fmt = |r: &[u32]| {
+            r.iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        println!("    head: {}", fmt(&red[..32.min(red.len())]));
+        println!("    tail: {}", fmt(&red[red.len().saturating_sub(32)..]));
+    }
+    Ok(())
+}
+
+fn gen(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize_or("n", 10_000);
+    let d = args.usize_or("d", 200);
+    let k = args.usize_or("experts", 64);
+    let m = args.f64_or("redundancy", 1.2);
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let set = ExpertSet::synthetic(n, d, k, m, &mut rng);
+    set.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let uniform = vec![1.0 / k as f64; k];
+    println!(
+        "synthetic set: N={n} d={d} K={k} m={:.2} p={} speedup={:.2}x",
+        set.mean_redundancy(),
+        set.p(),
+        set.speedup(&uniform)
+    );
+    Ok(())
+}
+
+fn bench(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize_or("n", 10_000);
+    let d = args.usize_or("d", 200);
+    let k = args.usize_or("experts", 64);
+    let iters = args.usize_or("iters", 200);
+    let mut rng = Rng::new(0);
+    let set = ExpertSet::synthetic(n, d, k, 1.2, &mut rng);
+    let ds = DsSoftmax::new(set);
+    let full = FullSoftmax::new(ds_softmax::tensor::Matrix::random(n, d, &mut rng, 0.05));
+    let h = rng.normal_vec(d, 1.0);
+    let mf = benchlib::bench("full", 10, iters, || {
+        std::hint::black_box(full.query(&h, 10));
+    });
+    let md = benchlib::bench("ds", 10, iters, || {
+        std::hint::black_box(ds.query(&h, 10));
+    });
+    println!(
+        "full: {:.1}µs   ds-{k}: {:.1}µs   latency speedup {:.2}x   flops speedup {:.2}x",
+        mf.per_iter_us(),
+        md.per_iter_us(),
+        mf.median_ns / md.median_ns,
+        full.flops_per_query() as f64 / ds.flops_per_query() as f64,
+    );
+    Ok(())
+}

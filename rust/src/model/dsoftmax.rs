@@ -1,0 +1,153 @@
+//! D-softmax baseline (Chen et al. 2015, "Strategies for training large
+//! vocabulary neural language models"): differentiated softmax.
+//!
+//! Classes are sorted by frequency and partitioned into buckets; bucket
+//! j's embeddings use only the first d_j dimensions of the context (the
+//! head keeps full width, the tail a fraction).  Paper §3.5 PTB config:
+//! buckets (2500, 2500, 5000) with dims (200, 100, 50).
+//!
+//! Logits are exact within each bucket's truncated subspace, so the
+//! engine is a *full* softmax over N with non-uniform per-class cost —
+//! by construction its speedup is bounded (paper reports 2.00x) and it
+//! cannot win on uniform class distributions (Table 3/4, CASIA row).
+
+use crate::model::SoftmaxEngine;
+use crate::tensor::{dot, softmax_inplace, Matrix};
+use crate::util::topk::TopK;
+
+pub struct DSoftmaxBucket {
+    /// rows for this bucket's classes, width = dim.
+    pub weights: Matrix,
+    /// truncated context width for this bucket.
+    pub dim: usize,
+    /// first global class id of the bucket (ids are contiguous by rank).
+    pub start: usize,
+}
+
+pub struct DSoftmax {
+    pub buckets: Vec<DSoftmaxBucket>,
+    n: usize,
+    d_full: usize,
+}
+
+impl DSoftmax {
+    /// Build from a full W (N×d) with classes already sorted by frequency
+    /// rank (id 0 = most frequent).  `plan` = [(count, dim); …].
+    pub fn new(w: &Matrix, plan: &[(usize, usize)]) -> Self {
+        let total: usize = plan.iter().map(|&(n, _)| n).sum();
+        assert_eq!(total, w.rows, "bucket plan must cover all classes");
+        let mut buckets = Vec::with_capacity(plan.len());
+        let mut start = 0;
+        for &(count, dim) in plan {
+            assert!(dim <= w.cols);
+            let mut m = Matrix::zeros(count, dim);
+            for r in 0..count {
+                m.row_mut(r).copy_from_slice(&w.row(start + r)[..dim]);
+            }
+            buckets.push(DSoftmaxBucket { weights: m, dim, start });
+            start += count;
+        }
+        Self { buckets, n: w.rows, d_full: w.cols }
+    }
+
+    /// The paper's §3.5 recipe: quarters at full and half width, tail at
+    /// quarter width.
+    pub fn paper_plan(n: usize, d: usize) -> Vec<(usize, usize)> {
+        let q = n / 4;
+        vec![(q, d), (q, d / 2), (n - 2 * q, d / 4)]
+    }
+}
+
+impl SoftmaxEngine for DSoftmax {
+    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let mut logits = vec![0.0f32; self.n];
+        for b in &self.buckets {
+            for r in 0..b.weights.rows {
+                logits[b.start + r] = dot(b.weights.row(r), &h[..b.dim]);
+            }
+        }
+        softmax_inplace(&mut logits);
+        let mut heap = TopK::new(k);
+        heap.push_slice(&logits);
+        heap.into_sorted().into_iter().map(|(p, i)| (i, p)).collect()
+    }
+
+    fn flops_per_query(&self) -> u64 {
+        crate::flops::d_softmax(
+            &self
+                .buckets
+                .iter()
+                .map(|b| (b.weights.rows, b.dim))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d_full
+    }
+
+    fn name(&self) -> &'static str {
+        "d-softmax"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::full::FullSoftmax;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_width_head_matches_full_softmax_ranking() {
+        // one bucket at full width == full softmax
+        let mut rng = Rng::new(1);
+        let w = Matrix::random(64, 16, &mut rng, 1.0);
+        let ds = DSoftmax::new(&w, &[(64, 16)]);
+        let full = FullSoftmax::new(w);
+        let h = rng.normal_vec(16, 1.0);
+        let a: Vec<u32> = ds.query(&h, 5).iter().map(|&(c, _)| c).collect();
+        let b: Vec<u32> = full.query(&h, 5).iter().map(|&(c, _)| c).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn paper_plan_covers_n() {
+        let plan = DSoftmax::paper_plan(10_000, 200);
+        assert_eq!(plan.iter().map(|&(n, _)| n).sum::<usize>(), 10_000);
+        assert_eq!(plan[0].1, 200);
+        assert_eq!(plan[1].1, 100);
+        assert_eq!(plan[2].1, 50);
+    }
+
+    #[test]
+    fn speedup_about_two_x() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::random(10_000, 200, &mut rng, 0.05);
+        let ds = DSoftmax::new(&w, &DSoftmax::paper_plan(10_000, 200));
+        let ratio =
+            crate::flops::full_softmax(10_000, 200) as f64 / ds.flops_per_query() as f64;
+        assert!(ratio > 1.8 && ratio < 2.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn probabilities_normalized() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::random(100, 32, &mut rng, 1.0);
+        let ds = DSoftmax::new(&w, &DSoftmax::paper_plan(100, 32));
+        let h = rng.normal_vec(32, 1.0);
+        let all = ds.query(&h, 100);
+        let sum: f32 = all.iter().map(|&(_, p)| p).sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "bucket plan must cover")]
+    fn bad_plan_panics() {
+        let w = Matrix::zeros(10, 4);
+        DSoftmax::new(&w, &[(5, 4)]);
+    }
+}

@@ -1,0 +1,237 @@
+//! The DS-Softmax inference engine (paper §2.3, inference path):
+//!
+//! 1. gate: `softmax(U·h)` over K experts → top-1 expert + gate value;
+//! 2. expert: packed |v_k|×d logits, scaled by the gate value (inverse
+//!    temperature), stable softmax;
+//! 3. top-k over the packed probabilities, mapped back to global ids.
+//!
+//! `query_with_scratch` is the zero-allocation hot path used by the
+//! coordinator workers; `query` is the convenient stateless form.
+
+use crate::model::SoftmaxEngine;
+use crate::sparse::ExpertSet;
+use crate::tensor::{argmax, scaled_softmax_inplace, softmax_inplace};
+use crate::util::topk::TopK;
+
+pub struct DsSoftmax {
+    pub set: ExpertSet,
+    /// Expected FLOPs under the utilization profile measured at export
+    /// (updated by `set_utilization`; defaults to uniform).
+    utilization: Vec<f64>,
+}
+
+/// Reusable per-thread buffers for the hot path.
+pub struct DsScratch {
+    pub gate_logits: Vec<f32>,
+    pub expert_logits: Vec<f32>,
+    pub heap: TopK,
+}
+
+impl DsScratch {
+    pub fn new(set: &ExpertSet, k: usize) -> Self {
+        Self {
+            gate_logits: vec![0.0; set.k()],
+            expert_logits: vec![0.0; set.p()],
+            heap: TopK::new(k),
+        }
+    }
+}
+
+/// Result of the gating stage — exposed so the coordinator can route
+/// before running the expert stage.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GateDecision {
+    pub expert: usize,
+    pub gate_value: f32,
+}
+
+impl DsSoftmax {
+    pub fn new(set: ExpertSet) -> Self {
+        let k = set.k();
+        Self { set, utilization: vec![1.0 / k as f64; k] }
+    }
+
+    pub fn with_utilization(set: ExpertSet, utilization: Vec<f64>) -> Self {
+        assert_eq!(utilization.len(), set.k());
+        Self { set, utilization }
+    }
+
+    pub fn set_utilization(&mut self, u: Vec<f64>) {
+        assert_eq!(u.len(), self.set.k());
+        self.utilization = u;
+    }
+
+    /// Stage 1: the sparse gate (Eq. 1).
+    #[inline]
+    pub fn gate(&self, h: &[f32], gate_logits: &mut [f32]) -> GateDecision {
+        self.set.gate.matvec_into(h, gate_logits);
+        softmax_inplace(gate_logits);
+        let expert = argmax(gate_logits);
+        GateDecision { expert, gate_value: gate_logits[expert] }
+    }
+
+    /// Stage 2: packed expert softmax + top-k (Eq. 2).
+    pub fn expert_topk(
+        &self,
+        h: &[f32],
+        decision: GateDecision,
+        scratch: &mut DsScratch,
+    ) -> Vec<(u32, f32)> {
+        let e = &self.set.experts[decision.expert];
+        let logits = &mut scratch.expert_logits[..e.valid];
+        // matvec over only the valid packed rows
+        for (r, out) in logits.iter_mut().enumerate() {
+            *out = crate::tensor::dot(e.weights.row(r), h);
+        }
+        scaled_softmax_inplace(logits, decision.gate_value);
+        scratch.heap.clear();
+        scratch.heap.push_slice(logits);
+        scratch
+            .heap
+            .sorted()
+            .into_iter()
+            .map(|(p, i)| (e.class_ids[i as usize] as u32, p))
+            .collect()
+    }
+
+    /// Full hot path with caller-owned scratch (no allocation except the
+    /// returned Vec).
+    pub fn query_with_scratch(&self, h: &[f32], scratch: &mut DsScratch) -> Vec<(u32, f32)> {
+        let d = self.gate(h, &mut scratch.gate_logits);
+        self.expert_topk(h, d, scratch)
+    }
+
+    /// Routing-only entry point for the coordinator.
+    pub fn route(&self, h: &[f32]) -> GateDecision {
+        let mut buf = vec![0.0; self.set.k()];
+        self.gate(h, &mut buf)
+    }
+}
+
+impl SoftmaxEngine for DsSoftmax {
+    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let mut scratch = DsScratch::new(&self.set, k);
+        self.query_with_scratch(h, &mut scratch)
+    }
+
+    fn flops_per_query(&self) -> u64 {
+        crate::flops::ds_softmax_expected(
+            &self.set.expert_sizes(),
+            &self.utilization,
+            self.set.dim(),
+        ) as u64
+    }
+
+    fn n_classes(&self) -> usize {
+        self.set.n_classes
+    }
+
+    fn dim(&self) -> usize {
+        self.set.dim()
+    }
+
+    fn name(&self) -> &'static str {
+        "ds-softmax"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::full::FullSoftmax;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn engine(seed: u64) -> DsSoftmax {
+        let mut rng = Rng::new(seed);
+        DsSoftmax::new(ExpertSet::synthetic(512, 16, 8, 1.25, &mut rng))
+    }
+
+    #[test]
+    fn query_returns_k_sorted() {
+        let e = engine(1);
+        let mut rng = Rng::new(9);
+        let h = rng.normal_vec(16, 1.0);
+        let top = e.query(&h, 10);
+        assert_eq!(top.len(), 10);
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        // ids are valid classes
+        assert!(top.iter().all(|&(c, _)| (c as usize) < 512));
+    }
+
+    #[test]
+    fn probabilities_sum_below_one() {
+        // packed softmax normalizes within the expert, so top-k probs sum <= 1
+        let e = engine(2);
+        let mut rng = Rng::new(10);
+        let h = rng.normal_vec(16, 1.0);
+        let top = e.query(&h, 100);
+        let sum: f32 = top.iter().map(|&(_, p)| p).sum();
+        assert!(sum <= 1.0 + 1e-4);
+    }
+
+    #[test]
+    fn gate_picks_argmax_expert() {
+        let e = engine(3);
+        let mut rng = Rng::new(11);
+        let h = rng.normal_vec(16, 1.0);
+        let mut buf = vec![0.0; e.set.k()];
+        let d = e.gate(&h, &mut buf);
+        assert_eq!(d.expert, argmax(&buf));
+        assert!((0.0..=1.0).contains(&d.gate_value));
+    }
+
+    #[test]
+    fn scratch_and_stateless_agree() {
+        let e = engine(4);
+        let mut rng = Rng::new(12);
+        let mut scratch = DsScratch::new(&e.set, 5);
+        for _ in 0..20 {
+            let h = rng.normal_vec(16, 1.0);
+            let a = e.query_with_scratch(&h, &mut scratch);
+            let b = e.query(&h, 5);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn matches_full_softmax_on_expert_subset() {
+        // restrict the full softmax to the chosen expert's classes with the
+        // gate-scaled logits: rankings must agree exactly.
+        let e = engine(5);
+        let mut rng = Rng::new(13);
+        let h = rng.normal_vec(16, 1.0);
+        let d = e.route(&h);
+        let expert = &e.set.experts[d.expert];
+        // dense matrix of just the expert's rows
+        let mut w = Matrix::zeros(expert.valid, 16);
+        for r in 0..expert.valid {
+            w.row_mut(r).copy_from_slice(expert.weights.row(r));
+        }
+        let full = FullSoftmax::new(w);
+        let want: Vec<u32> = full
+            .query(&h, 5)
+            .iter()
+            .map(|&(i, _)| expert.class_ids[i as usize] as u32)
+            .collect();
+        let got: Vec<u32> = e.query(&h, 5).iter().map(|&(c, _)| c).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn flops_less_than_full() {
+        let e = engine(6);
+        let full = crate::flops::full_softmax(512, 16);
+        assert!(e.flops_per_query() < full);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let e = engine(7);
+        let mut rng = Rng::new(14);
+        let h = rng.normal_vec(16, 1.0);
+        assert_eq!(e.query(&h, 8), e.query(&h, 8));
+    }
+}

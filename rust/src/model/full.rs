@@ -1,0 +1,104 @@
+//! Full-softmax baseline: exact N×d logits + softmax + top-k.  Every
+//! table's "Full" row, and the ground truth for top-k agreement metrics.
+
+use crate::model::SoftmaxEngine;
+use crate::tensor::{softmax_inplace, Matrix};
+use crate::util::topk::TopK;
+
+pub struct FullSoftmax {
+    pub w: Matrix,
+}
+
+impl FullSoftmax {
+    pub fn new(w: Matrix) -> Self {
+        Self { w }
+    }
+
+    /// Exact probabilities over all N classes (allocates; eval use only).
+    pub fn probabilities(&self, h: &[f32]) -> Vec<f32> {
+        let mut logits = self.w.matvec(h);
+        softmax_inplace(&mut logits);
+        logits
+    }
+
+    /// Zero-allocation hot path: caller provides logits scratch.
+    pub fn query_into(&self, h: &[f32], heap: &mut TopK, logits: &mut [f32]) {
+        self.w.matvec_into(h, logits);
+        softmax_inplace(logits);
+        heap.clear();
+        heap.push_slice(logits);
+    }
+}
+
+impl SoftmaxEngine for FullSoftmax {
+    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let mut logits = self.w.matvec(h);
+        softmax_inplace(&mut logits);
+        let mut heap = TopK::new(k);
+        heap.push_slice(&logits);
+        heap.into_sorted()
+            .into_iter()
+            .map(|(p, i)| (i, p))
+            .collect()
+    }
+
+    fn flops_per_query(&self) -> u64 {
+        crate::flops::full_softmax(self.w.rows, self.w.cols)
+    }
+
+    fn n_classes(&self) -> usize {
+        self.w.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.w.cols
+    }
+
+    fn name(&self) -> &'static str {
+        "full"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn probabilities_normalized() {
+        let mut rng = Rng::new(1);
+        let f = FullSoftmax::new(Matrix::random(100, 16, &mut rng, 1.0));
+        let h = rng.normal_vec(16, 1.0);
+        let p = f.probabilities(&h);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn query_matches_probabilities() {
+        let mut rng = Rng::new(2);
+        let f = FullSoftmax::new(Matrix::random(50, 8, &mut rng, 1.0));
+        let h = rng.normal_vec(8, 1.0);
+        let p = f.probabilities(&h);
+        let top = f.query(&h, 5);
+        let mut idx: Vec<usize> = (0..50).collect();
+        idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+        for (i, &(c, prob)) in top.iter().enumerate() {
+            assert_eq!(c as usize, idx[i]);
+            assert!((prob - p[idx[i]]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn query_into_no_alloc_path_agrees() {
+        let mut rng = Rng::new(3);
+        let f = FullSoftmax::new(Matrix::random(64, 8, &mut rng, 1.0));
+        let h = rng.normal_vec(8, 1.0);
+        let mut heap = TopK::new(3);
+        let mut scratch = vec![0.0; 64];
+        f.query_into(&h, &mut heap, &mut scratch);
+        let a: Vec<u32> = heap.sorted().iter().map(|&(_, i)| i).collect();
+        let b: Vec<u32> = f.query(&h, 3).iter().map(|&(c, _)| c).collect();
+        assert_eq!(a, b);
+    }
+}

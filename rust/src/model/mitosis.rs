@@ -1,0 +1,112 @@
+//! Mitosis-training memory model (paper §2.3, Fig. 2 / Fig. 5a).
+//!
+//! The Python side trains with real mitosis (`train.train_ds_mitosis`);
+//! this module reproduces Fig. 5a's *memory trajectory* analytically so
+//! the `fig5a_mitosis` bench can sweep schedules at paper scale: memory
+//! in units of one full softmax is K(t)·alive_frac(t), cloning doubles
+//! K and pruning decays alive_frac toward the terminal sparsity.
+
+/// One phase of the schedule between clonings.
+#[derive(Clone, Copy, Debug)]
+pub struct Phase {
+    pub k: usize,
+    pub epochs: usize,
+    /// epochs after the clone before pruning resumes (paper: 10 of 15).
+    pub prune_delay: usize,
+}
+
+/// Memory trajectory simulator.
+pub struct MitosisSchedule {
+    pub phases: Vec<Phase>,
+    /// per-epoch retention once pruning is active: alive *= retention
+    /// until the per-expert floor is reached.
+    pub retention: f64,
+    /// terminal fraction of classes alive per expert (≈ m/K_final).
+    pub floor_frac: f64,
+}
+
+impl MitosisSchedule {
+    /// Paper-like schedule: start at k0, double until k_final; 15 epochs
+    /// per phase, pruning starts 10 epochs after each cloning.
+    pub fn paper(k0: usize, k_final: usize, floor_frac: f64) -> Self {
+        assert!(k0 >= 1 && k_final >= k0);
+        let mut phases = Vec::new();
+        let mut k = k0;
+        loop {
+            phases.push(Phase { k, epochs: 15, prune_delay: 10 });
+            if k >= k_final {
+                break;
+            }
+            k *= 2;
+        }
+        Self { phases, retention: 0.75, floor_frac }
+    }
+
+    /// Memory in full-softmax units per epoch, plus the peak.
+    pub fn trajectory(&self) -> (Vec<f64>, f64) {
+        let mut mem = Vec::new();
+        // fraction of classes alive in each expert (uniform approximation)
+        let mut alive = 1.0f64;
+        for phase in &self.phases {
+            // per-expert floor: pruning cannot shrink an expert below the
+            // terminal per-expert occupancy.
+            let floor = self.floor_frac;
+            for e in 0..phase.epochs {
+                if e >= phase.prune_delay {
+                    alive = (alive * self.retention).max(floor);
+                }
+                mem.push(phase.k as f64 * alive);
+            }
+        }
+        let peak = mem.iter().copied().fold(0.0, f64::max);
+        (mem, peak)
+    }
+
+    /// The naive (no-mitosis) peak: K_final experts at full size.
+    pub fn naive_peak(&self) -> f64 {
+        self.phases.last().map(|p| p.k as f64).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schedule_reaches_64() {
+        let s = MitosisSchedule::paper(2, 64, 0.02);
+        assert_eq!(s.phases.last().unwrap().k, 64);
+        assert_eq!(s.phases.len(), 6); // 2,4,8,16,32,64
+    }
+
+    #[test]
+    fn peak_well_below_naive() {
+        // Fig. 5a: DS-64 trains in <= ~3.25x one full softmax
+        let s = MitosisSchedule::paper(2, 64, 0.02);
+        let (_traj, peak) = s.trajectory();
+        assert!(peak < 4.0, "peak {peak}");
+        assert!(peak < s.naive_peak() / 15.0);
+    }
+
+    #[test]
+    fn memory_doubles_at_clone_then_decays() {
+        let s = MitosisSchedule::paper(2, 8, 0.05);
+        let (traj, _) = s.trajectory();
+        // first epoch of phase 2 (index 15) ≈ 2x last epoch of phase 1 scaled
+        let end_p1 = traj[14];
+        let start_p2 = traj[15];
+        assert!((start_p2 / end_p1 - 2.0).abs() < 0.01);
+        // within a phase after the delay, memory is non-increasing
+        for w in traj[10..15].windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn floor_respected() {
+        let s = MitosisSchedule::paper(2, 4, 0.5);
+        let (traj, _) = s.trajectory();
+        let last = *traj.last().unwrap();
+        assert!(last >= 4.0 * 0.5 - 1e-9);
+    }
+}

@@ -1,0 +1,81 @@
+//! Inference engines: the DS-Softmax engine (the paper's contribution)
+//! and every baseline it is evaluated against in Tables 1–5.
+//!
+//! All engines implement [`SoftmaxEngine`]: given a context vector `h`,
+//! return the top-k `(class, probability)` pairs, and report their
+//! analytic FLOPs per query so the benches can print the paper's
+//! "Speedup" columns from one audited source (`crate::flops`).
+
+pub mod dsoftmax;
+pub mod dssoftmax;
+pub mod full;
+pub mod mitosis;
+pub mod svd;
+
+/// A top-k softmax inference engine.
+pub trait SoftmaxEngine: Send + Sync {
+    /// Top-k classes for one context vector, descending probability.
+    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)>;
+
+    /// Analytic FLOPs for one query (see `crate::flops` conventions).
+    fn flops_per_query(&self) -> u64;
+
+    /// Output-space size N.
+    fn n_classes(&self) -> usize;
+
+    /// Context dimensionality d.
+    fn dim(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::dssoftmax::DsSoftmax;
+    use super::full::FullSoftmax;
+    use super::SoftmaxEngine;
+    use crate::sparse::ExpertSet;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    /// Engines must agree on an easy case: a class embedding aligned with
+    /// h dominates every other logit, so every engine ranks it first.
+    #[test]
+    fn engines_agree_on_dominant_class() {
+        let mut rng = Rng::new(11);
+        let n = 256;
+        let d = 32;
+        let mut w = Matrix::random(n, d, &mut rng, 0.01);
+        let target = 123usize;
+        for (i, x) in w.row_mut(target).iter_mut().enumerate() {
+            *x = if i % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        let h: Vec<f32> = (0..d).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+
+        let full = FullSoftmax::new(w.clone());
+        assert_eq!(full.query(&h, 1)[0].0, target as u32);
+
+        // DS set: find the expert owning `target`, plant the same dominant
+        // row there, and steer the gate toward that expert so routing and
+        // ranking both resolve to the target class.
+        let mut set = ExpertSet::synthetic(n, d, 4, 1.0, &mut rng);
+        let mut owner = usize::MAX;
+        for (ei, e) in set.experts.iter_mut().enumerate() {
+            for r in 0..e.valid {
+                if e.class_ids[r] == target as i32 {
+                    owner = ei;
+                    let dst = e.weights.row_mut(r);
+                    for (i, x) in dst.iter_mut().enumerate() {
+                        *x = if i % 2 == 0 { 1.0 } else { -1.0 };
+                    }
+                }
+            }
+        }
+        assert_ne!(owner, usize::MAX);
+        for (i, x) in set.gate.row_mut(owner).iter_mut().enumerate() {
+            *x = if i % 2 == 0 { 2.0 } else { -2.0 };
+        }
+        let ds = DsSoftmax::new(set);
+        assert_eq!(ds.query(&h, 1)[0].0, target as u32);
+    }
+}

@@ -1,0 +1,305 @@
+//! Sparse-expert storage: the packed per-expert class subsets that are
+//! the paper's second level of sparsity.
+//!
+//! An [`ExpertSet`] owns, per expert k: the packed embedding rows
+//! (|v_k| × d, padded to `p`), the global class id of each packed row,
+//! and the valid count.  This mirrors the export contract of
+//! `python/compile/model.py::ds_pack` byte-for-byte.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// One sparse expert: a packed view of a class subset.
+#[derive(Clone, Debug)]
+pub struct SparseExpert {
+    /// (p, d) packed rows; rows past `valid` are zero padding.
+    pub weights: Matrix,
+    /// global class id per packed row; -1 past `valid`.
+    pub class_ids: Vec<i32>,
+    pub valid: usize,
+}
+
+impl SparseExpert {
+    pub fn size(&self) -> usize {
+        self.valid
+    }
+
+    /// The class ids actually present (no padding).
+    pub fn classes(&self) -> &[i32] {
+        &self.class_ids[..self.valid]
+    }
+
+    pub fn contains(&self, class: u32) -> bool {
+        self.classes().contains(&(class as i32))
+    }
+}
+
+/// The full two-level structure: gating weights + K sparse experts.
+#[derive(Clone, Debug)]
+pub struct ExpertSet {
+    /// (K, d) gating matrix.
+    pub gate: Matrix,
+    pub experts: Vec<SparseExpert>,
+    /// total number of classes N in the original output space.
+    pub n_classes: usize,
+}
+
+impl ExpertSet {
+    pub fn k(&self) -> usize {
+        self.experts.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.gate.cols
+    }
+
+    /// Padded packed size (uniform across experts by construction).
+    pub fn p(&self) -> usize {
+        self.experts.first().map(|e| e.weights.rows).unwrap_or(0)
+    }
+
+    pub fn expert_sizes(&self) -> Vec<usize> {
+        self.experts.iter().map(|e| e.valid).collect()
+    }
+
+    /// Redundancy of class c: number of experts containing it (paper
+    /// Fig. 5b's y-axis).
+    pub fn redundancy(&self) -> Vec<u32> {
+        let mut r = vec![0u32; self.n_classes];
+        for e in &self.experts {
+            for &c in e.classes() {
+                if c >= 0 {
+                    r[c as usize] += 1;
+                }
+            }
+        }
+        r
+    }
+
+    /// Average number of experts per class, the paper's `m`.
+    pub fn mean_redundancy(&self) -> f64 {
+        let r = self.redundancy();
+        r.iter().map(|&x| x as f64).sum::<f64>() / r.len().max(1) as f64
+    }
+
+    /// Every class must live in >= 1 expert (footnote-4 invariant).
+    pub fn validate(&self) -> Result<(), String> {
+        let d = self.dim();
+        for (k, e) in self.experts.iter().enumerate() {
+            if e.weights.cols != d {
+                return Err(format!("expert {k}: dim {} != gate dim {d}", e.weights.cols));
+            }
+            if e.valid > e.weights.rows {
+                return Err(format!("expert {k}: valid {} > p {}", e.valid, e.weights.rows));
+            }
+            for (i, &c) in e.class_ids.iter().enumerate() {
+                let in_range = c >= 0 && (c as usize) < self.n_classes;
+                if i < e.valid && !in_range {
+                    return Err(format!("expert {k}: row {i} bad class id {c}"));
+                }
+                if i >= e.valid && c != -1 {
+                    return Err(format!("expert {k}: padding row {i} has id {c}"));
+                }
+            }
+            // padding rows must be zero so PJRT batched softmax can mask
+            for r in e.valid..e.weights.rows {
+                if e.weights.row(r).iter().any(|&x| x != 0.0) {
+                    return Err(format!("expert {k}: nonzero padding row {r}"));
+                }
+            }
+        }
+        let red = self.redundancy();
+        if let Some(c) = red.iter().position(|&x| x == 0) {
+            return Err(format!("class {c} not covered by any expert"));
+        }
+        Ok(())
+    }
+
+    /// Theoretical FLOPs speedup |V| / (Σ_k |v_k|·u_k + K)  (paper §2.3).
+    pub fn speedup(&self, utilization: &[f64]) -> f64 {
+        assert_eq!(utilization.len(), self.k());
+        let expected: f64 = self
+            .experts
+            .iter()
+            .zip(utilization)
+            .map(|(e, &u)| e.valid as f64 * u)
+            .sum::<f64>()
+            + self.k() as f64;
+        self.n_classes as f64 / expected
+    }
+
+    /// Build a synthetic ExpertSet with the distributional shape of a
+    /// trained model: expert sizes ≈ N·m/K (balanced), frequent classes
+    /// (low ids under a Zipf workload) replicated into more experts.
+    ///
+    /// Used by the paper-scale latency benches where training at full
+    /// (N, d) is out of budget but the *sparsity statistics* of the
+    /// trained small-scale models transfer (DESIGN.md §5).
+    pub fn synthetic(
+        n_classes: usize,
+        d: usize,
+        k: usize,
+        mean_redundancy: f64,
+        rng: &mut Rng,
+    ) -> ExpertSet {
+        assert!(k >= 1 && mean_redundancy >= 1.0);
+        let total_slots = (n_classes as f64 * mean_redundancy) as usize;
+        let per_expert = (total_slots + k - 1) / k;
+        let p = per_expert.next_multiple_of(8);
+        // Replication count per class: frequent (low-id) classes get more
+        // copies, matching Fig. 5b's frequency↔redundancy correlation.
+        let extra = total_slots - n_classes;
+        let mut copies = vec![1usize; n_classes];
+        // distribute extras with a 1/rank profile
+        let mut weights: Vec<f64> = (0..n_classes).map(|i| 1.0 / (i + 1) as f64).collect();
+        let wsum: f64 = weights.iter().sum();
+        for w in weights.iter_mut() {
+            *w /= wsum;
+        }
+        let mut given = 0usize;
+        for c in 0..n_classes {
+            if given >= extra {
+                break;
+            }
+            let want = ((extra as f64) * weights[c]).round() as usize;
+            let add = want.min(extra - given).min(k - 1);
+            copies[c] += add;
+            given += add;
+        }
+        // second pass: hand out any remainder in rank order (the rounding
+        // above drops most of the tail's fractional shares)
+        let mut c = 0usize;
+        while given < extra && k > 1 {
+            if copies[c] < k {
+                copies[c] += 1;
+                given += 1;
+            }
+            c = (c + 1) % n_classes;
+        }
+        // round-robin assignment of copies to experts
+        let mut members: Vec<Vec<i32>> = vec![Vec::with_capacity(per_expert); k];
+        let mut next = 0usize;
+        for c in 0..n_classes {
+            let mut used = vec![false; k];
+            for _ in 0..copies[c] {
+                // find next expert not yet holding c and not full
+                let mut tries = 0;
+                loop {
+                    let e = next % k;
+                    next += 1;
+                    tries += 1;
+                    if (!used[e] && members[e].len() < p) || tries > 2 * k {
+                        used[e] = true;
+                        members[e].push(c as i32);
+                        break;
+                    }
+                }
+            }
+        }
+        let experts = members
+            .into_iter()
+            .map(|ids| {
+                let valid = ids.len();
+                let mut w = Matrix::zeros(p, d);
+                for r in 0..valid {
+                    let row = rng.normal_vec(d, 0.05);
+                    w.row_mut(r).copy_from_slice(&row);
+                }
+                let mut class_ids = ids;
+                class_ids.resize(p, -1);
+                SparseExpert { weights: w, class_ids, valid }
+            })
+            .collect();
+        ExpertSet {
+            gate: Matrix::random(k, d, rng, 0.05),
+            experts,
+            n_classes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_set() -> ExpertSet {
+        let mut rng = Rng::new(3);
+        ExpertSet::synthetic(64, 8, 4, 1.3, &mut rng)
+    }
+
+    #[test]
+    fn synthetic_validates() {
+        tiny_set().validate().unwrap();
+    }
+
+    #[test]
+    fn synthetic_redundancy_close_to_target() {
+        let mut rng = Rng::new(4);
+        let es = ExpertSet::synthetic(1000, 16, 8, 1.5, &mut rng);
+        es.validate().unwrap();
+        let m = es.mean_redundancy();
+        assert!((m - 1.5).abs() < 0.2, "mean redundancy {m}");
+    }
+
+    #[test]
+    fn frequent_classes_more_redundant() {
+        let mut rng = Rng::new(5);
+        let es = ExpertSet::synthetic(1000, 16, 8, 1.5, &mut rng);
+        let r = es.redundancy();
+        let head: f64 = r[..50].iter().map(|&x| x as f64).sum::<f64>() / 50.0;
+        let tail: f64 = r[900..].iter().map(|&x| x as f64).sum::<f64>() / 100.0;
+        assert!(head > tail, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn speedup_formula() {
+        let es = tiny_set();
+        let k = es.k();
+        let uniform = vec![1.0 / k as f64; k];
+        let s = es.speedup(&uniform);
+        let mean_size: f64 =
+            es.expert_sizes().iter().map(|&x| x as f64).sum::<f64>() / k as f64;
+        let want = 64.0 / (mean_size + k as f64);
+        assert!((s - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_catches_uncovered_class() {
+        let mut es = tiny_set();
+        // remove class 0 everywhere
+        for e in es.experts.iter_mut() {
+            if let Some(pos) = e.class_ids[..e.valid].iter().position(|&c| c == 0) {
+                let last = e.valid - 1;
+                e.class_ids.swap(pos, last);
+                e.class_ids[last] = -1;
+                let row: Vec<f32> = e.weights.row(last).to_vec();
+                e.weights.row_mut(pos).copy_from_slice(&row);
+                for x in e.weights.row_mut(last) {
+                    *x = 0.0;
+                }
+                e.valid -= 1;
+            }
+        }
+        assert!(es.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_nonzero_padding() {
+        let mut es = tiny_set();
+        let e = &mut es.experts[0];
+        if e.valid < e.weights.rows {
+            let r = e.valid;
+            e.weights.row_mut(r)[0] = 1.0;
+            assert!(es.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn contains_and_classes() {
+        let es = tiny_set();
+        let e = &es.experts[0];
+        let c = e.classes()[0] as u32;
+        assert!(e.contains(c));
+        assert_eq!(e.classes().len(), e.size());
+    }
+}

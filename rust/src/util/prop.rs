@@ -1,0 +1,132 @@
+//! Property-testing substrate (no `proptest`/`quickcheck` offline).
+//!
+//! A small deterministic harness: generators draw from a seeded [`Rng`],
+//! `check` runs N cases and on failure re-runs a bounded shrink loop by
+//! retrying with "smaller" draws (size parameter decay).  It covers what
+//! the coordinator/sparse invariant tests need without the full
+//! shrinking machinery of proptest.
+
+use crate::util::rng::Rng;
+
+/// A generation context: seeded randomness + a size hint that the shrink
+/// loop decays.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Rng::new(seed), size }
+    }
+
+    /// Vec length in [1, size].
+    pub fn len(&mut self) -> usize {
+        1 + self.rng.below(self.size.max(1))
+    }
+
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, scale)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo).max(1))
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct PropResult {
+    pub cases: usize,
+    pub failure: Option<String>,
+}
+
+impl PropResult {
+    pub fn unwrap(self) {
+        if let Some(f) = self.failure {
+            panic!("property failed after {} cases: {f}", self.cases);
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs.  On the first failure,
+/// retry with decreasing size to report the smallest failing size seen.
+pub fn check<F>(seed: u64, cases: usize, max_size: usize, prop: F) -> PropResult
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E37_79B9).wrapping_add(case as u64);
+        let mut g = Gen::new(case_seed, max_size);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: re-run with smaller sizes, same seed family
+            let mut best = (max_size, msg);
+            let mut size = max_size / 2;
+            while size >= 1 {
+                let mut g = Gen::new(case_seed, size);
+                if let Err(m) = prop(&mut g) {
+                    best = (size, m);
+                }
+                size /= 2;
+            }
+            return PropResult {
+                cases: case + 1,
+                failure: Some(format!(
+                    "seed={case_seed} size={}: {}",
+                    best.0, best.1
+                )),
+            };
+        }
+    }
+    PropResult { cases, failure: None }
+}
+
+/// Assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let r = check(1, 50, 100, |g| {
+            let n = g.len();
+            prop_assert!(n >= 1 && n <= 100, "len out of range: {n}");
+            Ok(())
+        });
+        assert_eq!(r.cases, 50);
+        assert!(r.failure.is_none());
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let r = check(2, 100, 64, |g| {
+            let n = g.len();
+            prop_assert!(n < 10, "too big: {n}");
+            Ok(())
+        });
+        let f = r.failure.expect("must fail");
+        assert!(f.contains("too big"));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let sizes = std::sync::Mutex::new(Vec::new());
+            check(3, 10, 32, |g| {
+                sizes.lock().unwrap().push(g.len());
+                Ok(())
+            });
+            sizes.into_inner().unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,275 @@
+//! Streaming statistics + latency histogram substrate (no `criterion` /
+//! `hdrhistogram` offline): Welford mean/variance, percentile estimation
+//! over a log-bucketed histogram, and simple counters for the coordinator
+//! metrics plane.
+
+/// Welford online mean/variance.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation squared — the paper's Eq. 5 statistic.
+    pub fn cv2(&self) -> f64 {
+        if self.mean.abs() < 1e-12 {
+            0.0
+        } else {
+            // population variance for CV (matches Eq. 5's batch statistic)
+            let var_p = if self.n == 0 { 0.0 } else { self.m2 / self.n as f64 };
+            var_p / (self.mean * self.mean)
+        }
+    }
+}
+
+/// Log-bucketed latency histogram: ~2% relative resolution from 1 ns to
+/// ~18 s, fixed memory, O(1) insert.
+#[derive(Clone, Debug)]
+pub struct LatencyHisto {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u64,
+}
+
+const SUB_BUCKETS: usize = 32; // per power of two → ~2.2% resolution
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHisto {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 64 * SUB_BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    #[inline]
+    fn index(ns: u64) -> usize {
+        if ns == 0 {
+            return 0;
+        }
+        let log = 63 - ns.leading_zeros() as usize;
+        // frac = (ns - 2^log) * 32 / 2^log without overflow: shift right
+        // by (log - 5) when log >= 5, shift left otherwise.
+        let rem = ns - (1u64 << log);
+        let frac = if log >= 5 {
+            (rem >> (log - 5)) as usize
+        } else {
+            ((rem << 5) >> log) as usize
+        };
+        (log * SUB_BUCKETS + frac).min(64 * SUB_BUCKETS - 1)
+    }
+
+    #[inline]
+    fn lower_bound(idx: usize) -> u64 {
+        let log = idx / SUB_BUCKETS;
+        let frac = (idx % SUB_BUCKETS) as u64;
+        (1u64 << log) + ((frac << log) / SUB_BUCKETS as u64)
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.buckets[Self::index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Percentile in nanoseconds (q in [0, 1]).
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::lower_bound(i);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn merge(&mut self, other: &LatencyHisto) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Human summary: "p50=… p95=… p99=… max=…".
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={}",
+            self.count,
+            fmt_ns(self.mean_ns() as u64),
+            fmt_ns(self.percentile_ns(0.50)),
+            fmt_ns(self.percentile_ns(0.95)),
+            fmt_ns(self.percentile_ns(0.99)),
+            fmt_ns(self.max_ns),
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Basic descriptive stats over a slice (used by the bench harness).
+pub fn describe(xs: &[f64]) -> (f64, f64, f64, f64) {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n.max(1) as f64;
+    let med = if n == 0 {
+        0.0
+    } else if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0
+    };
+    let min = sorted.first().copied().unwrap_or(0.0);
+    let max = sorted.last().copied().unwrap_or(0.0);
+    (mean, med, min, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv2_uniform_is_zero() {
+        let mut w = Welford::default();
+        for _ in 0..10 {
+            w.push(2.5);
+        }
+        assert!(w.cv2() < 1e-20);
+    }
+
+    #[test]
+    fn histo_percentiles_ordered() {
+        let mut h = LatencyHisto::new();
+        for i in 1..=10_000u64 {
+            h.record_ns(i * 100);
+        }
+        let p50 = h.percentile_ns(0.5);
+        let p95 = h.percentile_ns(0.95);
+        let p99 = h.percentile_ns(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // ~2% bucket resolution
+        assert!((p50 as f64 - 500_000.0).abs() / 500_000.0 < 0.05, "{p50}");
+        assert!((p99 as f64 - 990_000.0).abs() / 990_000.0 < 0.05, "{p99}");
+    }
+
+    #[test]
+    fn histo_merge() {
+        let mut a = LatencyHisto::new();
+        let mut b = LatencyHisto::new();
+        for i in 0..100 {
+            a.record_ns(1000 + i);
+            b.record_ns(2000 + i);
+        }
+        let ca = a.count();
+        a.merge(&b);
+        assert_eq!(a.count(), ca + 100);
+        assert!(a.max_ns() >= 2000);
+    }
+
+    #[test]
+    fn histo_zero_and_huge() {
+        let mut h = LatencyHisto::new();
+        h.record_ns(0);
+        h.record_ns(u64::MAX / 2);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_ns(1.0) > 0);
+    }
+
+    #[test]
+    fn describe_basic() {
+        let (mean, med, min, max) = describe(&[3.0, 1.0, 2.0]);
+        assert_eq!((mean, med, min, max), (2.0, 2.0, 1.0, 3.0));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12), "12ns");
+        assert!(fmt_ns(12_300).contains("µs"));
+        assert!(fmt_ns(12_300_000).contains("ms"));
+        assert!(fmt_ns(2_000_000_000).contains('s'));
+    }
+}

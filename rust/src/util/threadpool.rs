@@ -1,0 +1,342 @@
+//! Thread-pool substrate (no `tokio`/`rayon` in the offline vendor tree).
+//!
+//! A fixed pool of workers over an MPMC job channel built from
+//! `Mutex<VecDeque>` + `Condvar`, with a `scope`-style parallel-for used
+//! by the engines, and graceful shutdown on drop.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("dss-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Pool sized to the machine (cores - 1, min 1).
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|p| p.get().saturating_sub(1))
+            .unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(f));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Run `f(i)` for i in 0..n across the pool and wait for all.
+    /// `f` only needs to live for the call — we block until done.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let next = Arc::new(AtomicUsize::new(0));
+        // SAFETY-free approach: leak-free lifetime extension via Arc around
+        // a raw pointer is avoided; instead clone an Arc<dyn Fn>.
+        let f: Arc<dyn Fn(usize) + Send + Sync> = unsafe {
+            // Extend the lifetime: we join before returning, so `f` outlives
+            // every worker's use of it.
+            std::mem::transmute::<
+                Arc<dyn Fn(usize) + Send + Sync + '_>,
+                Arc<dyn Fn(usize) + Send + Sync + 'static>,
+            >(Arc::new(f))
+        };
+        let tasks = self.size().min(n);
+        for _ in 0..tasks {
+            let f = f.clone();
+            let next = next.clone();
+            let done = done.clone();
+            self.execute(move || {
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                }
+                let (lock, cv) = &*done;
+                *lock.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut finished = lock.lock().unwrap();
+        while *finished < tasks {
+            finished = cv.wait(finished).unwrap();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if sh.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Simple SPSC/MPSC bounded channel with blocking push (backpressure) —
+/// the coordinator's request queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<VecDeque<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+    closed: AtomicBool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(VecDeque::with_capacity(cap)),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Blocking push; returns Err(item) if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if self.closed.load(Ordering::Acquire) {
+                return Err(item);
+            }
+            if q.len() < self.cap {
+                q.push_back(item);
+                drop(q);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            q = self.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking push — backpressure signal for the router.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(item);
+        }
+        let mut q = self.inner.lock().unwrap();
+        if q.len() < self.cap {
+            q.push_back(item);
+            drop(q);
+            self.not_empty.notify_one();
+            Ok(())
+        } else {
+            Err(item)
+        }
+    }
+
+    /// Blocking pop; None once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = q.pop_front() {
+                drop(q);
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Drain up to `max` items, waiting up to `timeout` for the first.
+    /// The dynamic batcher's collection primitive.
+    pub fn pop_batch(&self, max: usize, timeout: std::time::Duration) -> Vec<T> {
+        let mut out = Vec::new();
+        let deadline = std::time::Instant::now() + timeout;
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            while out.len() < max {
+                match q.pop_front() {
+                    Some(x) => out.push(x),
+                    None => break,
+                }
+            }
+            if !out.is_empty() || self.closed.load(Ordering::Acquire) {
+                break;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+        drop(q);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn parallel_for_covers_range() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(257, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_empty() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn bounded_queue_fifo() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn bounded_queue_backpressure() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(q.try_push(3).is_err());
+        q.pop();
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn bounded_queue_close_unblocks() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn pop_batch_collects() {
+        let q = BoundedQueue::new(100);
+        for i in 0..7 {
+            q.push(i).unwrap();
+        }
+        let b = q.pop_batch(5, std::time::Duration::from_millis(1));
+        assert_eq!(b, vec![0, 1, 2, 3, 4]);
+        let b2 = q.pop_batch(5, std::time::Duration::from_millis(1));
+        assert_eq!(b2, vec![5, 6]);
+    }
+
+    #[test]
+    fn pop_batch_timeout_empty() {
+        let q = BoundedQueue::<u32>::new(4);
+        let t0 = std::time::Instant::now();
+        let b = q.pop_batch(4, std::time::Duration::from_millis(30));
+        assert!(b.is_empty());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+    }
+}

@@ -1,0 +1,177 @@
+//! Bounded top-k selection — the last step of every softmax inference
+//! engine here.  A fixed-capacity binary min-heap over (score, id): O(n
+//! log k), no allocation after construction, reusable across queries.
+
+/// Fixed-capacity min-heap keeping the k largest (score, id) pairs.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    /// (score, id) — heap[0] is the smallest surviving score.
+    heap: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        Self { k, heap: Vec::with_capacity(k) }
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Current threshold: scores <= this cannot enter a full heap.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::NEG_INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, score: f32, id: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((score, id));
+            self.sift_up(self.heap.len() - 1);
+        } else if score > self.heap[0].0 {
+            self.heap[0] = (score, id);
+            self.sift_down(0);
+        }
+    }
+
+    /// Bulk insert from a dense score slice; `ids` are 0..n.
+    pub fn push_slice(&mut self, scores: &[f32]) {
+        for (i, &s) in scores.iter().enumerate() {
+            self.push(s, i as u32);
+        }
+    }
+
+    /// Drain into descending-score order.
+    pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.heap
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        self.heap
+    }
+
+    /// Non-consuming sorted snapshot (descending by score).
+    pub fn sorted(&self) -> Vec<(f32, u32)> {
+        let mut v = self.heap.clone();
+        v.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        v
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 < self.heap[parent].0 {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < n && self.heap[l].0 < self.heap[smallest].0 {
+                smallest = l;
+            }
+            if r < n && self.heap[r].0 < self.heap[smallest].0 {
+                smallest = r;
+            }
+            if smallest == i {
+                return;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+}
+
+/// One-shot convenience: top-k (score, index) of a slice, descending.
+pub fn topk(scores: &[f32], k: usize) -> Vec<(f32, u32)> {
+    let mut h = TopK::new(k.min(scores.len()).max(1));
+    h.push_slice(scores);
+    h.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn brute(scores: &[f32], k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+        });
+        idx.truncate(k);
+        idx
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let n = 1 + rng.below(500);
+            let k = 1 + rng.below(16);
+            let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let got: Vec<u32> = topk(&scores, k).iter().map(|&(_, i)| i).collect();
+            let want = brute(&scores, k.min(n));
+            assert_eq!(got, want, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn descending_order() {
+        let scores = [0.1f32, 0.9, 0.5, 0.7];
+        let r = topk(&scores, 3);
+        assert_eq!(r.iter().map(|&(_, i)| i).collect::<Vec<_>>(), vec![1, 3, 2]);
+        assert!(r[0].0 >= r[1].0 && r[1].0 >= r[2].0);
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let r = topk(&[0.3, 0.2], 10);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn threshold_gates_entry() {
+        let mut h = TopK::new(2);
+        h.push(1.0, 0);
+        h.push(2.0, 1);
+        assert_eq!(h.threshold(), 1.0);
+        h.push(0.5, 2); // rejected
+        assert_eq!(h.sorted().len(), 2);
+        assert!(h.sorted().iter().all(|&(_, i)| i != 2));
+    }
+
+    #[test]
+    fn reuse_after_clear() {
+        let mut h = TopK::new(3);
+        h.push_slice(&[1.0, 2.0, 3.0, 4.0]);
+        h.clear();
+        h.push_slice(&[5.0, 6.0]);
+        let r = h.sorted();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].0, 6.0);
+    }
+
+    #[test]
+    fn ties_and_nan_safety() {
+        let scores = [1.0f32, 1.0, 1.0, 1.0];
+        let r = topk(&scores, 2);
+        assert_eq!(r.len(), 2);
+    }
+}

@@ -1,0 +1,168 @@
+//! Property-based invariants of the coordinator stack (routing, batching,
+//! sparse-set structure) using the in-house prop harness.
+
+use std::sync::Arc;
+
+use ds_softmax::coordinator::engine::NativeBatchEngine;
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig};
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::prop_assert;
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::util::prop::{check, Gen};
+use ds_softmax::util::rng::Rng;
+
+fn random_set(g: &mut Gen) -> ExpertSet {
+    let n = g.usize_in(16, 512);
+    let d = [4usize, 8, 16, 32][g.rng.below(4)];
+    let k = [2usize, 4, 8][g.rng.below(3)];
+    let m = 1.0 + g.rng.f64() * 0.8;
+    ExpertSet::synthetic(n, d, k, m, &mut g.rng)
+}
+
+/// Every synthetic ExpertSet validates and covers all classes.
+#[test]
+fn prop_synthetic_sets_valid() {
+    check(11, 40, 64, |g| {
+        let set = random_set(g);
+        set.validate().map_err(|e| format!("invalid set: {e}"))?;
+        let red = set.redundancy();
+        prop_assert!(red.iter().all(|&r| r >= 1), "uncovered class");
+        prop_assert!(
+            red.iter().all(|&r| r as usize <= set.k()),
+            "redundancy exceeds K"
+        );
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Routing is deterministic and in-range for arbitrary finite inputs.
+#[test]
+fn prop_routing_deterministic_in_range() {
+    check(12, 30, 64, |g| {
+        let set = random_set(g);
+        let d = set.dim();
+        let k = set.k();
+        let ds = DsSoftmax::new(set);
+        for _ in 0..10 {
+            let h = g.rng.normal_vec(d, 2.0);
+            let a = ds.route(&h);
+            let b = ds.route(&h);
+            prop_assert!(a == b, "routing not deterministic");
+            prop_assert!(a.expert < k, "expert out of range");
+            prop_assert!(
+                a.gate_value > 0.0 && a.gate_value <= 1.0,
+                "gate value {} out of (0,1]",
+                a.gate_value
+            );
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Top-k results: sorted, deduplicated, valid ids, probs in (0,1].
+#[test]
+fn prop_query_wellformed() {
+    check(13, 30, 64, |g| {
+        let set = random_set(g);
+        let n = set.n_classes;
+        let d = set.dim();
+        let ds = DsSoftmax::new(set);
+        let k = 1 + g.rng.below(16);
+        let h = g.rng.normal_vec(d, 1.0);
+        let top = ds.query(&h, k);
+        prop_assert!(!top.is_empty(), "empty result");
+        let mut seen = std::collections::HashSet::new();
+        let mut prev = f32::INFINITY;
+        for &(c, p) in &top {
+            prop_assert!((c as usize) < n, "class {c} out of range");
+            prop_assert!(seen.insert(c), "duplicate class {c}");
+            prop_assert!(p > 0.0 && p <= 1.0 + 1e-6, "prob {p}");
+            prop_assert!(p <= prev + 1e-6, "not sorted");
+            prev = p;
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// The coordinator completes every accepted query exactly once and
+/// preserves single-query semantics under concurrency.
+#[test]
+fn prop_coordinator_completes_all() {
+    check(14, 8, 32, |g| {
+        let set = random_set(g);
+        let d = set.dim();
+        let reference = DsSoftmax::new(set.clone());
+        let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(set)));
+        let c = Coordinator::start(engine, CoordinatorConfig::default());
+        let n_q = 20 + g.rng.below(60);
+        let hs: Vec<Vec<f32>> = (0..n_q).map(|_| g.rng.normal_vec(d, 1.0)).collect();
+        let pend: Vec<_> = hs
+            .iter()
+            .map(|h| c.submit(h.clone(), 4))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| format!("submit failed: {e}"))?;
+        for (h, p) in hs.iter().zip(pend) {
+            let got = p.wait().map_err(|e| format!("query failed: {e}"))?;
+            let want = reference.query(h, 4);
+            prop_assert!(got == want, "coordinator diverged from reference");
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Speedup formula is monotone: pruning an expert (smaller |v_k|) never
+/// decreases the theoretical speedup.
+#[test]
+fn prop_speedup_monotone_in_expert_size() {
+    check(15, 30, 64, |g| {
+        let mut set = random_set(g);
+        let k = set.k();
+        let uniform = vec![1.0 / k as f64; k];
+        let before = set.speedup(&uniform);
+        // shrink expert 0 by dropping its last valid row
+        let e = &mut set.experts[0];
+        if e.valid > 1 {
+            let last = e.valid - 1;
+            let class = e.class_ids[last];
+            e.class_ids[last] = -1;
+            for x in e.weights.row_mut(last) {
+                *x = 0.0;
+            }
+            e.valid -= 1;
+            let after = set.speedup(&uniform);
+            prop_assert!(
+                after >= before,
+                "speedup decreased after shrink: {before} -> {after} (dropped class {class})"
+            );
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Utilization measured by the metrics plane matches the empirical
+/// routing distribution exactly.
+#[test]
+fn metrics_utilization_consistent() {
+    let mut rng = Rng::new(77);
+    let set = ExpertSet::synthetic(128, 8, 4, 1.2, &mut rng);
+    let reference = DsSoftmax::new(set.clone());
+    let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(set)));
+    let c = Coordinator::start(engine, CoordinatorConfig::default());
+    let mut counts = vec![0u64; 4];
+    for _ in 0..300 {
+        let h = rng.normal_vec(8, 1.0);
+        counts[reference.route(&h).expert] += 1;
+        let _ = c.query(h, 1);
+    }
+    let u = c.metrics.utilization();
+    for (e, &cnt) in counts.iter().enumerate() {
+        let want = cnt as f64 / 300.0;
+        assert!((u[e] - want).abs() < 1e-9, "expert {e}: {} vs {want}", u[e]);
+    }
+}

@@ -1,0 +1,111 @@
+//! End-to-end LM pipeline over the trained `artifacts/lm` set: LSTM step
+//! HLO → contexts → DS-Softmax vs full softmax, all through PJRT.
+//! Skipped (with a notice) when the lm artifacts have not been built.
+
+use ds_softmax::artifacts::Manifest;
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::runtime::{PjrtDsEngine, Runtime};
+use ds_softmax::util::rng::Rng;
+
+fn lm_manifest() -> Option<Manifest> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/lm");
+    match Manifest::load(&root) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping lm tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn lm_manifest_structure() {
+    let Some(m) = lm_manifest() else { return };
+    assert_eq!(m.name, "lm");
+    let lstm = m.lstm.as_ref().expect("lm artifact must carry lstm");
+    assert_eq!(lstm.vocab, m.n_classes);
+    assert_eq!(lstm.hidden, m.d);
+    let set = m.expert_set().unwrap();
+    set.validate().unwrap();
+    // trained model really is sparse
+    let mean_size =
+        set.expert_sizes().iter().sum::<usize>() as f64 / set.k() as f64;
+    assert!(mean_size < m.n_classes as f64 * 0.6, "mean size {mean_size}");
+}
+
+#[test]
+fn lstm_step_produces_finite_states_and_contexts() {
+    let Some(m) = lm_manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtDsEngine::new(rt, m.clone()).unwrap();
+    let lstm = engine.lstm_weights().unwrap();
+    let bucket = m.buckets[1]; // 8
+    let hidden = lstm.hidden;
+    let mut state = vec![0.0f32; 2 * 2 * bucket * hidden];
+    let tokens: Vec<i32> = (0..bucket as i32).collect();
+    for step in 0..4 {
+        let (h, new_state) = engine.lstm_step(&lstm, &tokens, &state, bucket).unwrap();
+        assert_eq!(h.len(), bucket * hidden);
+        assert!(h.iter().all(|x| x.is_finite()), "step {step}");
+        assert!(new_state.iter().all(|x| x.is_finite()));
+        // state evolves
+        if step > 0 {
+            assert!(new_state.iter().zip(&state).any(|(a, b)| a != b));
+        }
+        state = new_state;
+    }
+}
+
+#[test]
+fn ds_matches_full_topk_through_whole_pipeline() {
+    let Some(m) = lm_manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtDsEngine::new(rt, m.clone()).unwrap();
+    let lstm = engine.lstm_weights().unwrap();
+    let ds = DsSoftmax::new(m.expert_set().unwrap());
+    let full = FullSoftmax::new(m.full_weights().unwrap());
+    let bucket = m.buckets[1];
+    let hidden = lstm.hidden;
+    // run a few real tokens through the LSTM to get genuine contexts
+    let mut rng = Rng::new(5);
+    let mut state = vec![0.0f32; 2 * 2 * bucket * hidden];
+    let mut agree1 = 0usize;
+    let mut agree5 = 0usize;
+    let mut total = 0usize;
+    for _ in 0..6 {
+        let tokens: Vec<i32> = (0..bucket)
+            .map(|_| rng.below(m.n_classes) as i32)
+            .collect();
+        let (hs, ns) = engine.lstm_step(&lstm, &tokens, &state, bucket).unwrap();
+        state = ns;
+        for r in 0..bucket {
+            let h = &hs[r * hidden..(r + 1) * hidden];
+            let truth = full.query(h, 1)[0].0;
+            let top = ds.query(h, 5);
+            total += 1;
+            agree1 += (top[0].0 == truth) as usize;
+            agree5 += top.iter().any(|&(c, _)| c == truth) as usize;
+        }
+    }
+    // trained artifact: top5 must capture the exact argmax almost always
+    // (acc_ds == acc_full in the manifest's training eval)
+    assert!(
+        agree5 as f64 / total as f64 > 0.8,
+        "top5 agreement {agree5}/{total}"
+    );
+    assert!(agree1 as f64 / total as f64 > 0.6, "top1 {agree1}/{total}");
+}
+
+#[test]
+fn eval_tokens_present_and_in_range() {
+    let Some(m) = lm_manifest() else { return };
+    let toks = m.load_i32("eval_tokens").unwrap_or_default();
+    if toks.is_empty() {
+        // older manifest without eval tokens — tolerated
+        return;
+    }
+    assert!(toks.iter().all(|&t| t >= 0 && (t as usize) < m.n_classes));
+    assert!(toks.len() > 1000);
+}

@@ -1,0 +1,128 @@
+//! Integration: PJRT runtime over the AOT artifacts (`make artifacts`
+//! must have produced `artifacts/unit/` — hermetic + fast).
+//!
+//! These tests assert the *cross-language contract*: the HLO lowered
+//! from the Pallas kernels, executed through the Rust PJRT client,
+//! matches the native Rust engine bit-for-bit in ranking and to 1e-4 in
+//! probability.
+
+use ds_softmax::artifacts::Manifest;
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::runtime::{PjrtDsEngine, Runtime};
+use ds_softmax::tensor::Matrix;
+use ds_softmax::util::rng::Rng;
+
+fn unit_manifest() -> Option<Manifest> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/unit");
+    match Manifest::load(&root) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping pjrt tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(m) = unit_manifest() else { return };
+    assert_eq!(m.name, "unit");
+    let set = m.expert_set().unwrap();
+    set.validate().unwrap();
+    assert_eq!(set.k(), m.k);
+}
+
+#[test]
+fn gate_hlo_matches_native() {
+    let Some(m) = unit_manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtDsEngine::new(rt, m.clone()).unwrap();
+    let native = DsSoftmax::new(m.expert_set().unwrap());
+    let mut rng = Rng::new(1);
+    for &bucket in &m.buckets {
+        let h = Matrix::random(bucket, m.d, &mut rng, 1.0);
+        let (probs, top1) = engine.gate(&h, bucket).unwrap();
+        assert_eq!(probs.len(), bucket * m.k);
+        for r in 0..bucket {
+            let dec = native.route(h.row(r));
+            assert_eq!(top1[r] as usize, dec.expert, "bucket {bucket} row {r}");
+            let row = &probs[r * m.k..(r + 1) * m.k];
+            assert!((row[dec.expert] - dec.gate_value).abs() < 1e-4);
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn expert_hlo_matches_native_topk() {
+    let Some(m) = unit_manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtDsEngine::new(rt, m.clone()).unwrap();
+    let native = DsSoftmax::new(m.expert_set().unwrap());
+    let mut rng = Rng::new(2);
+    let h = Matrix::random(8, m.d, &mut rng, 1.0);
+    let results = engine.query_batch(&h, 5).unwrap();
+    assert_eq!(results.len(), 8);
+    for r in 0..8 {
+        let want = native.query(h.row(r), 5);
+        let got = &results[r];
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.0, w.0, "row {r}");
+            assert!((g.1 - w.1).abs() < 1e-4, "row {r}: {} vs {}", g.1, w.1);
+        }
+    }
+}
+
+#[test]
+fn full_softmax_hlo_matches_native() {
+    let Some(m) = unit_manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtDsEngine::new(rt, m.clone()).unwrap();
+    let native = FullSoftmax::new(m.full_weights().unwrap());
+    let mut rng = Rng::new(3);
+    let bucket = m.buckets[0];
+    let h = Matrix::random(bucket, m.d, &mut rng, 1.0);
+    let probs = engine.full_probs(&h, bucket).unwrap();
+    for r in 0..bucket {
+        let want = native.probabilities(h.row(r));
+        let got = &probs[r * m.n_classes..(r + 1) * m.n_classes];
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn executable_cache_reuses() {
+    let Some(m) = unit_manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let a = rt.load(&m, "gate_b1").unwrap();
+    let b = rt.load(&m, "gate_b1").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn coordinator_with_pjrt_engine_end_to_end() {
+    let Some(m) = unit_manifest() else { return };
+    use ds_softmax::coordinator::engine::PjrtBatchEngine;
+    use ds_softmax::coordinator::{Coordinator, CoordinatorConfig};
+    let native = DsSoftmax::new(m.expert_set().unwrap());
+    let engine = std::sync::Arc::new(PjrtBatchEngine::new(m.clone()).unwrap());
+    let c = Coordinator::start(engine, CoordinatorConfig::default());
+    let mut rng = Rng::new(4);
+    let queries: Vec<Vec<f32>> = (0..64).map(|_| rng.normal_vec(m.d, 1.0)).collect();
+    let pendings: Vec<_> = queries
+        .iter()
+        .map(|h| c.submit(h.clone(), 3).unwrap())
+        .collect();
+    for (h, p) in queries.iter().zip(pendings) {
+        let got = p.wait().unwrap();
+        let want = native.query(h, 3);
+        let g: Vec<u32> = got.iter().map(|&(c, _)| c).collect();
+        let w: Vec<u32> = want.iter().map(|&(c, _)| c).collect();
+        assert_eq!(g, w);
+    }
+}
