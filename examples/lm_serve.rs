@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     let set = m.expert_set()?;
     let reference_full = FullSoftmax::new(m.full_weights()?);
     let reference_ds = DsSoftmax::new(set.clone());
-    let engine: Arc<dyn ds_softmax::coordinator::BatchEngine> = if args.flag("pjrt") {
+    let engine: Arc<dyn SoftmaxEngine> = if args.flag("pjrt") {
         println!("expert softmax backend: PJRT (AOT HLO)");
         Arc::new(PjrtBatchEngine::new(m.clone())?)
     } else {

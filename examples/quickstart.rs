@@ -1,5 +1,6 @@
-//! Quickstart: build a synthetic DS-Softmax index, serve queries through
-//! the coordinator, and compare against the exact full softmax.
+//! Quickstart: build a synthetic DS-Softmax index, query it through the
+//! unified batched API (`MatrixView` in, `TopKBuf` out), serve queries
+//! through the coordinator, and compare against the exact full softmax.
 //!
 //!     cargo run --release --example quickstart
 //!
@@ -12,6 +13,7 @@ use ds_softmax::eval::AgreementCounter;
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::query::{MatrixView, TopKBuf};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::tensor::Matrix;
 use ds_softmax::util::rng::Rng;
@@ -54,7 +56,31 @@ fn main() -> anyhow::Result<()> {
         full.flops_per_query() as f64 / ds.flops_per_query() as f64,
     );
 
-    // 3. the serving coordinator: batched queries with metrics
+    // 3. the batched zero-allocation path: pack rows contiguously, reuse
+    //    one TopKBuf arena across batches — the steady state never
+    //    touches the allocator
+    let bsz = 64usize;
+    let packed: Vec<f32> = (0..bsz).flat_map(|_| rng.normal_vec(d, 1.0)).collect();
+    let view = MatrixView::new(&packed, bsz, d);
+    let mut out = TopKBuf::new();
+    ds.query_batch(view, 10, &mut out); // warm
+    let t0 = std::time::Instant::now();
+    let iters = 50;
+    for _ in 0..iters {
+        ds.query_batch(view, 10, &mut out);
+        std::hint::black_box(&out);
+    }
+    let t_batched = t0.elapsed() / (iters * bsz as u32);
+    // consistency: every batched row equals its single-query answer
+    for r in 0..bsz {
+        assert_eq!(out.row_vec(r), ds.query(view.row(r), 10));
+    }
+    println!(
+        "\nbatched (B={bsz}, reused TopKBuf): {t_batched:?}/query — {:.1}x single-query qps",
+        t_ds.as_secs_f64() / t_batched.as_secs_f64()
+    );
+
+    // 4. the serving coordinator: batched queries with metrics
     let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(set)));
     let c = Coordinator::start(engine, CoordinatorConfig::default());
     let queries: Vec<Vec<f32>> = (0..2000).map(|_| rng.normal_vec(d, 1.0)).collect();

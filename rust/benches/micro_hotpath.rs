@@ -7,17 +7,19 @@
 //!   expert softmax    O(|v|·d) packed matvec + scaled softmax
 //!   top-k             bounded-heap selection
 //!   full query        gate + expert + topk
+//!   query_batch       the zero-allocation batched path (TopKBuf arena)
 //!   coordinator       submit→complete round-trip (batching overhead)
 //!
 //!     cargo bench --bench micro_hotpath
 
 use std::sync::Arc;
 
-use ds_softmax::benchlib::{bench, bench_batched, Table};
+use ds_softmax::benchlib::{bench, bench_batched, fmt_qps, Table};
 use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
 use ds_softmax::model::dssoftmax::{DsScratch, DsSoftmax};
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::query::{MatrixView, Route, TopKBuf};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::tensor::{dot, softmax_inplace, Matrix};
 use ds_softmax::util::rng::Rng;
@@ -105,13 +107,13 @@ fn main() {
         format!("{:.1}µs", m.median_ns / 1e3),
         format!("{:.3}", m.median_ns / (64.0 * 200.0)),
     ]);
-    let dec = ds.route(&h);
+    let route = ds.route(&h);
     let m = bench("expert_topk", 20, 1000, || {
-        std::hint::black_box(ds.expert_topk(&h, dec, &mut scratch));
+        std::hint::black_box(ds.expert_topk(&h, route.expert(), route.gate_value(), &mut scratch));
     });
     table.row(vec![
         "expert_topk".into(),
-        format!("|v|={} d=200", ds.set.experts[dec.expert].valid),
+        format!("|v|={} d=200", ds.set.experts[route.expert()].valid),
         format!("{:.1}µs", m.median_ns / 1e3),
         "-".into(),
     ]);
@@ -125,6 +127,17 @@ fn main() {
         format!("{:.1}µs", m.median_ns / 1e3),
         "-".into(),
     ]);
+    // single-query convenience path (allocates result Vec + arena per call)
+    let m = bench("ds query alloc", 20, 1000, || {
+        std::hint::black_box(ds.query(&h, 10));
+    });
+    let ds_q_alloc = m.median_ns;
+    table.row(vec![
+        "ds query alloc".into(),
+        "N=10048 K=64".into(),
+        format!("{:.1}µs", m.median_ns / 1e3),
+        fmt_qps(m.median_ns),
+    ]);
     let m = bench("full query", 5, 200, || {
         std::hint::black_box(full.query(&h, 10));
     });
@@ -133,6 +146,40 @@ fn main() {
         "N=10048".into(),
         format!("{:.1}µs", m.median_ns / 1e3),
         format!("(ds speedup {:.1}x)", m.median_ns / ds_q),
+    ]);
+
+    // batched zero-allocation path: route_batch + query_batch over a
+    // packed batch, one reused TopKBuf arena (no per-row heap traffic)
+    let bsz = 64usize;
+    let packed: Vec<f32> = (0..bsz).flat_map(|_| rng.normal_vec(200, 1.0)).collect();
+    let view = MatrixView::new(&packed, bsz, 200);
+    let mut routes = vec![Route::empty(); bsz];
+    let m = bench_batched("route_batch", 20, 500, bsz, || {
+        ds.route_batch(view, &mut routes);
+        std::hint::black_box(&routes);
+    });
+    table.row(vec![
+        "route_batch".into(),
+        format!("B={bsz} K=64"),
+        format!("{:.2}µs/q", m.median_ns / 1e3),
+        fmt_qps(m.median_ns),
+    ]);
+    let mut out = TopKBuf::new();
+    ds.query_batch(view, 10, &mut out); // warm scratch + arena
+    let m = bench_batched("ds query_batch", 10, 500, bsz, || {
+        ds.query_batch(view, 10, &mut out);
+        std::hint::black_box(&out);
+    });
+    let ds_batched = m.median_ns;
+    table.row(vec![
+        "ds query_batch".into(),
+        format!("B={bsz} N=10048 K=64"),
+        format!("{:.1}µs/q", m.median_ns / 1e3),
+        format!(
+            "{} ({:.2}x single-query qps)",
+            fmt_qps(ds_batched),
+            ds_q_alloc / ds_batched
+        ),
     ]);
 
     // coordinator round-trip: batching + channel + threadpool overhead

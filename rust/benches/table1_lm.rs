@@ -66,8 +66,8 @@ fn run_task(name: &str, n: usize, d: usize, paper: &[(&str, f64, f64, f64, &str)
         let mut wl_rng = Rng::new(7);
         for _ in 0..n_eval {
             let (h, y) = world.sample(&mut wl_rng);
-            let dec = ds.route(&h);
-            util[dec.expert] += 1;
+            let route = ds.route(&h);
+            util[route.expert()] += 1;
             acc.observe(&ds.query(&h, 10), y);
             acc_full.observe(&full.query(&h, 10), y);
         }

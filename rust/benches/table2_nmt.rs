@@ -77,7 +77,7 @@ fn main() {
         let mut wl = Rng::new(99);
         for _ in 0..n_eval {
             let (h, _) = world.sample(&mut wl);
-            util[ds.route(&h).expert] += 1;
+            util[ds.route(&h).expert()] += 1;
         }
         let u: Vec<f64> = util.iter().map(|&c| c as f64 / n_eval as f64).collect();
         let speedup = flops::full_softmax(n, d) as f64

@@ -64,7 +64,7 @@ fn main() {
         let mut wl = Rng::new(17);
         for _ in 0..n_eval {
             let (h, y) = world.sample(&mut wl);
-            util[ds.route(&h).expert] += 1;
+            util[ds.route(&h).expert()] += 1;
             acc.observe(&ds.query(&h, 1), y);
         }
         let u: Vec<f64> = util.iter().map(|&c| c as f64 / n_eval as f64).collect();

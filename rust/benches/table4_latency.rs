@@ -8,7 +8,7 @@
 //!
 //!     cargo bench --bench table4_latency
 
-use ds_softmax::benchlib::{bench, fmt_speedup, Table};
+use ds_softmax::benchlib::{bench, bench_batched, fmt_speedup, Table};
 use ds_softmax::data::ClusteredWorld;
 use ds_softmax::flops;
 use ds_softmax::model::dsoftmax::DSoftmax;
@@ -16,6 +16,7 @@ use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::svd::SvdSoftmax;
 use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::query::{MatrixView, TopKBuf};
 use ds_softmax::tensor::Matrix;
 use ds_softmax::util::rng::Rng;
 
@@ -116,10 +117,31 @@ fn main() {
             });
             m.per_iter_ms()
         };
+        // batched path: 32 packed rows through query_batch into one
+        // reused arena — per-query ms for apples-to-apples comparison
+        let bsz = 32usize;
+        let qpack: Vec<f32> = queries.iter().take(bsz).flatten().copied().collect();
+        let qview = MatrixView::new(&qpack, bsz, t.d);
+        let mut qbuf = TopKBuf::new();
+        let mut lat_batch = |e: &dyn SoftmaxEngine| -> f64 {
+            e.query_batch(qview, 10, &mut qbuf); // warm
+            let m = bench_batched(e.name(), 2, 20, bsz, || {
+                e.query_batch(qview, 10, &mut qbuf);
+                std::hint::black_box(&qbuf);
+            });
+            m.per_iter_ms()
+        };
 
         let mut table = Table::new(
             &format!("Table 4 — {} (N={}, d={})", t.name, t.n, t.d),
-            &["Method", "Top1 agree", "FLOPs speedup", "latency ms", "paper ms (speedup)"],
+            &[
+                "Method",
+                "Top1 agree",
+                "FLOPs speedup",
+                "latency ms",
+                "batch32 ms/q",
+                "paper ms (speedup)",
+            ],
         );
         let p = PAPER[t.paper_row];
         let full_flops = flops::full_softmax(t.n, t.d) as f64;
@@ -128,6 +150,7 @@ fn main() {
             "1.000".into(),
             "-".into(),
             format!("{:.3}", lat(&full)),
+            format!("{:.3}", lat_batch(&full)),
             p.1.into(),
         ]);
         table.row(vec![
@@ -135,6 +158,7 @@ fn main() {
             format!("{:.3}", agree(&ds)),
             fmt_speedup(full_flops / ds.flops_per_query() as f64),
             format!("{:.3}", lat(&ds)),
+            format!("{:.3}", lat_batch(&ds)),
             p.2.into(),
         ]);
         table.row(vec![
@@ -142,6 +166,7 @@ fn main() {
             format!("{:.3}", agree(&svd5)),
             fmt_speedup(full_flops / svd5.flops_per_query() as f64),
             format!("{:.3}", lat(&svd5)),
+            format!("{:.3}", lat_batch(&svd5)),
             p.3.into(),
         ]);
         table.row(vec![
@@ -149,6 +174,7 @@ fn main() {
             format!("{:.3}", agree(&svd10)),
             fmt_speedup(full_flops / svd10.flops_per_query() as f64),
             format!("{:.3}", lat(&svd10)),
+            format!("{:.3}", lat_batch(&svd10)),
             p.4.into(),
         ]);
         match &dsm {
@@ -157,12 +183,14 @@ fn main() {
                 format!("{:.3}", agree(dsm)),
                 fmt_speedup(full_flops / dsm.flops_per_query() as f64),
                 format!("{:.3}", lat(dsm)),
+                format!("{:.3}", lat_batch(dsm)),
                 p.5.into(),
             ]),
             None => table.row(vec![
                 "D-softmax".into(),
                 "-".into(),
                 "- (no speedup on uniform classes)".into(),
+                "-".into(),
                 "-".into(),
                 p.5.into(),
             ]),

@@ -48,9 +48,9 @@ impl DsSvd {
     }
 
     fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
-        let dec = self.gate.route(h);
-        let e = &self.gate.set.experts[dec.expert];
-        match &self.per_expert_svd[dec.expert] {
+        let route = self.gate.route(h);
+        let e = &self.gate.set.experts[route.expert()];
+        match &self.per_expert_svd[route.expert()] {
             Some(svd) => {
                 // gate value scales logits; SVD engine is unscaled — the
                 // ranking is invariant to a positive scalar, and the probs
@@ -63,7 +63,8 @@ impl DsSvd {
             None => {
                 let mut scratch =
                     ds_softmax::model::dssoftmax::DsScratch::new(&self.gate.set, k);
-                self.gate.expert_topk(h, dec, &mut scratch)
+                self.gate
+                    .expert_topk(h, route.expert(), route.gate_value(), &mut scratch)
             }
         }
     }

@@ -1,0 +1,278 @@
+//! Artifact manifests: the export contract between the Python build
+//! (`python/compile/aot.py::export_ds_artifacts`) and the Rust serving
+//! layer.  An artifact directory holds `manifest.json`, raw
+//! little-endian weight blobs (`*.bin`, written by `numpy.tofile`), and
+//! shape-specialized HLO text files keyed by logical name
+//! (`gate_b8`, `expert_b32`, `lstm_step_b8`, …).
+//!
+//! Loading is pure Rust (the in-house JSON substrate) — no PJRT needed,
+//! so the native engines can serve an exported model without the `pjrt`
+//! feature.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::sparse::{ExpertSet, SparseExpert};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+
+/// Default artifact root: `$DSS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var_os("DSS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// One weight blob's metadata.
+#[derive(Clone, Debug)]
+pub struct WeightInfo {
+    pub file: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl WeightInfo {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// LSTM section of an LM artifact.
+#[derive(Clone, Debug)]
+pub struct LstmInfo {
+    pub vocab: usize,
+    pub embed: usize,
+    pub hidden: usize,
+    pub layers: usize,
+}
+
+/// Parsed `manifest.json` plus the directory it came from.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub name: String,
+    pub n_classes: usize,
+    pub d: usize,
+    pub k: usize,
+    pub p: usize,
+    pub buckets: Vec<usize>,
+    /// logical HLO name → file name
+    pub files: BTreeMap<String, String>,
+    pub weights: BTreeMap<String, WeightInfo>,
+    pub utilization: Vec<f64>,
+    pub expert_sizes: Vec<usize>,
+    pub speedup_theoretical: f64,
+    pub lstm: Option<LstmInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+
+        let mut files = BTreeMap::new();
+        for (k, v) in j.get("files")?.as_obj()? {
+            files.insert(k.clone(), v.as_str()?.to_string());
+        }
+        let mut weights = BTreeMap::new();
+        for (k, v) in j.get("weights")?.as_obj()? {
+            weights.insert(
+                k.clone(),
+                WeightInfo {
+                    file: v.get("file")?.as_str()?.to_string(),
+                    shape: v.get("shape")?.usize_vec()?,
+                    dtype: v.get("dtype")?.as_str()?.to_string(),
+                },
+            );
+        }
+        let lstm = match j.opt("lstm") {
+            Some(l) => Some(LstmInfo {
+                vocab: l.get("vocab")?.as_usize()?,
+                embed: l.get("embed")?.as_usize()?,
+                hidden: l.get("hidden")?.as_usize()?,
+                layers: l.get("layers")?.as_usize()?,
+            }),
+            None => None,
+        };
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            n_classes: j.get("n_classes")?.as_usize()?,
+            d: j.get("d")?.as_usize()?,
+            k: j.get("k")?.as_usize()?,
+            p: j.get("p")?.as_usize()?,
+            buckets: j.get("buckets")?.usize_vec()?,
+            utilization: j.get("utilization")?.f64_vec()?,
+            expert_sizes: j.get("expert_sizes")?.usize_vec()?,
+            speedup_theoretical: j.get("speedup_theoretical")?.as_f64()?,
+            files,
+            weights,
+            lstm,
+            dir,
+        })
+    }
+
+    /// Path of one logical HLO graph (e.g. `gate_b8`).
+    pub fn hlo_path(&self, logical: &str) -> Result<PathBuf> {
+        let f = self
+            .files
+            .get(logical)
+            .ok_or_else(|| anyhow!("artifact '{}' has no graph '{logical}'", self.name))?;
+        Ok(self.dir.join(f))
+    }
+
+    fn blob(&self, name: &str) -> Result<(Vec<u8>, &WeightInfo)> {
+        let info = self
+            .weights
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{}' has no weight '{name}'", self.name))?;
+        let path = self.dir.join(&info.file);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == info.elems() * 4,
+            "{name}: {} bytes but shape {:?} needs {}",
+            bytes.len(),
+            info.shape,
+            info.elems() * 4
+        );
+        Ok((bytes, info))
+    }
+
+    /// Load a little-endian f32 blob by weight name.
+    pub fn load_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let (bytes, info) = self.blob(name)?;
+        anyhow::ensure!(info.dtype == "f32", "{name}: dtype {} != f32", info.dtype);
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Load a little-endian i32 blob by weight name.
+    pub fn load_i32(&self, name: &str) -> Result<Vec<i32>> {
+        let (bytes, info) = self.blob(name)?;
+        anyhow::ensure!(info.dtype == "i32", "{name}: dtype {} != i32", info.dtype);
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// The exact full-softmax weight matrix (N×d).
+    pub fn full_weights(&self) -> Result<Matrix> {
+        let w = self.load_f32("w_full")?;
+        Ok(Matrix::from_vec(self.n_classes, self.d, w))
+    }
+
+    /// Reassemble the packed two-level structure exported by `ds_pack`.
+    pub fn expert_set(&self) -> Result<ExpertSet> {
+        let u = self.load_f32("u")?;
+        let packed = self.load_f32("packed")?;
+        let class_ids = self.load_i32("class_ids")?;
+        let valid = self.load_i32("valid")?;
+        let (k, p, d) = (self.k, self.p, self.d);
+        anyhow::ensure!(u.len() == k * d, "gate shape mismatch");
+        anyhow::ensure!(packed.len() == k * p * d, "packed shape mismatch");
+        anyhow::ensure!(class_ids.len() == k * p, "class_ids shape mismatch");
+        anyhow::ensure!(valid.len() == k, "valid shape mismatch");
+        let experts = (0..k)
+            .map(|e| SparseExpert {
+                weights: Matrix::from_vec(p, d, packed[e * p * d..(e + 1) * p * d].to_vec()),
+                class_ids: class_ids[e * p..(e + 1) * p].to_vec(),
+                valid: valid[e] as usize,
+            })
+            .collect();
+        Ok(ExpertSet {
+            gate: Matrix::from_vec(k, d, u),
+            experts,
+            n_classes: self.n_classes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        // tiny 2-expert set: N=4, d=2, p=2
+        let manifest = r#"{
+ "name": "t",
+ "n_classes": 4,
+ "d": 2,
+ "k": 2,
+ "p": 2,
+ "buckets": [1, 8],
+ "block_p": 2,
+ "files": {"gate_b1": "gate_b1.hlo.txt"},
+ "weights": {
+  "u": {"file": "u.bin", "shape": [2, 2], "dtype": "f32"},
+  "packed": {"file": "packed.bin", "shape": [2, 2, 2], "dtype": "f32"},
+  "class_ids": {"file": "class_ids.bin", "shape": [2, 2], "dtype": "i32"},
+  "valid": {"file": "valid.bin", "shape": [2], "dtype": "i32"},
+  "w_full": {"file": "w_full.bin", "shape": [4, 2], "dtype": "f32"}
+ },
+ "utilization": [0.5, 0.5],
+ "expert_sizes": [2, 2],
+ "speedup_theoretical": 1.0
+}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let f32s = |xs: &[f32]| -> Vec<u8> {
+            xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+        };
+        let i32s = |xs: &[i32]| -> Vec<u8> {
+            xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+        };
+        std::fs::write(dir.join("u.bin"), f32s(&[1.0, 0.0, 0.0, 1.0])).unwrap();
+        std::fs::write(
+            dir.join("packed.bin"),
+            f32s(&[1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.5, 0.5]),
+        )
+        .unwrap();
+        std::fs::write(dir.join("class_ids.bin"), i32s(&[0, 1, 2, 3])).unwrap();
+        std::fs::write(dir.join("valid.bin"), i32s(&[2, 2])).unwrap();
+        std::fs::write(
+            dir.join("w_full.bin"),
+            f32s(&[1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.5, 0.5]),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dss-artifact-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!((m.n_classes, m.d, m.k, m.p), (4, 2, 2, 2));
+        assert_eq!(m.buckets, vec![1, 8]);
+        assert!(m.lstm.is_none());
+        let set = m.expert_set().unwrap();
+        set.validate().unwrap();
+        assert_eq!(set.k(), 2);
+        assert_eq!(set.experts[1].class_ids, vec![2, 3]);
+        assert_eq!(set.experts[0].weights.row(1), &[0.0, 1.0]);
+        let w = m.full_weights().unwrap();
+        assert_eq!(w.rows, 4);
+        assert_eq!(w.row(3), &[0.5, 0.5]);
+        assert_eq!(
+            m.hlo_path("gate_b1").unwrap(),
+            dir.join("gate_b1.hlo.txt")
+        );
+        assert!(m.hlo_path("missing").is_err());
+        assert!(m.load_i32("u").is_err()); // dtype guard
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

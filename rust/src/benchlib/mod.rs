@@ -129,6 +129,26 @@ pub fn fmt_speedup(x: f64) -> String {
     format!("{x:.2}x")
 }
 
+/// Queries/sec implied by a per-operation median (ns).
+pub fn qps(median_ns: f64) -> f64 {
+    if median_ns <= 0.0 {
+        return 0.0;
+    }
+    1e9 / median_ns
+}
+
+/// Format a queries/sec figure compactly ("1.2M qps", "84k qps").
+pub fn fmt_qps(median_ns: f64) -> String {
+    let q = qps(median_ns);
+    if q >= 1e6 {
+        format!("{:.1}M qps", q / 1e6)
+    } else if q >= 1e3 {
+        format!("{:.0}k qps", q / 1e3)
+    } else {
+        format!("{q:.0} qps")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +194,14 @@ mod tests {
     #[test]
     fn fmt_speedup_format() {
         assert_eq!(fmt_speedup(15.988), "15.99x");
+    }
+
+    #[test]
+    fn qps_helpers() {
+        assert!((qps(1000.0) - 1e6).abs() < 1e-6);
+        assert_eq!(qps(0.0), 0.0);
+        assert_eq!(fmt_qps(1000.0), "1.0M qps");
+        assert_eq!(fmt_qps(100_000.0), "10k qps");
+        assert_eq!(fmt_qps(1e10), "0 qps");
     }
 }

@@ -40,7 +40,7 @@ impl Batcher {
     }
 
     pub fn push(&mut self, q: RoutedQuery) {
-        self.queues[q.decision.expert].push_back(q);
+        self.queues[q.route.expert()].push_back(q);
         self.pending += 1;
     }
 
@@ -98,7 +98,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::dssoftmax::GateDecision;
+    use crate::query::Route;
     use std::sync::mpsc;
 
     fn q(expert: usize, submitted: Instant) -> RoutedQuery {
@@ -107,7 +107,7 @@ mod tests {
             id: 0,
             h: vec![0.0; 4],
             k: 1,
-            decision: GateDecision { expert, gate_value: 0.5 },
+            route: Route::single(expert, 0.5),
             submitted,
             responder: tx,
         }
@@ -115,7 +115,8 @@ mod tests {
 
     #[test]
     fn flushes_on_size() {
-        let mut b = Batcher::new(2, BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(10) };
+        let mut b = Batcher::new(2, policy);
         let now = Instant::now();
         for _ in 0..7 {
             b.push(q(0, now));
@@ -129,7 +130,8 @@ mod tests {
 
     #[test]
     fn flushes_on_deadline() {
-        let mut b = Batcher::new(2, BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) };
+        let mut b = Batcher::new(2, policy);
         let past = Instant::now() - Duration::from_millis(5);
         b.push(q(1, past));
         b.push(q(1, past));
@@ -142,7 +144,8 @@ mod tests {
 
     #[test]
     fn not_ready_before_deadline() {
-        let mut b = Batcher::new(1, BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(1) });
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(1) };
+        let mut b = Batcher::new(1, policy);
         let now = Instant::now();
         b.push(q(0, now));
         assert!(b.ready(now).is_empty());
@@ -151,7 +154,8 @@ mod tests {
 
     #[test]
     fn keeps_experts_separate() {
-        let mut b = Batcher::new(3, BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) };
+        let mut b = Batcher::new(3, policy);
         let now = Instant::now();
         b.push(q(0, now));
         b.push(q(1, now));
@@ -179,7 +183,8 @@ mod tests {
 
     #[test]
     fn next_deadline_reflects_oldest() {
-        let mut b = Batcher::new(1, BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(100) });
+        let policy = BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(100) };
+        let mut b = Batcher::new(1, policy);
         let now = Instant::now();
         assert!(b.next_deadline(now).is_none());
         b.push(q(0, now - Duration::from_millis(60)));

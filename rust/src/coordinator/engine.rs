@@ -1,35 +1,21 @@
-//! Batch execution engines behind the coordinator: given a batch of
-//! contexts routed to one expert (plus their gate values), produce each
-//! row's top-k classes.
+//! Batch execution engines behind the coordinator.  Since the
+//! `Route`/`TopKBuf` API unification there is **one** engine trait —
+//! [`crate::model::SoftmaxEngine`] — shared with the model layer; the
+//! coordinator drives it through `route_batch` (ingress) and
+//! `run_expert_batch` (per-expert flush).
 //!
-//! Two production impls: [`NativeBatchEngine`] (pure-Rust hot path) and
-//! `PjrtBatchEngine` (AOT HLO through the PJRT runtime; see
-//! `crate::runtime`).  Tests use [`MockEngine`] for failure injection.
+//! Two production impls live here: [`NativeBatchEngine`] (pure-Rust hot
+//! path over a [`DsSoftmax`]) and `PjrtBatchEngine` (AOT HLO through
+//! the PJRT runtime; `pjrt` feature).  Tests use [`MockEngine`] for
+//! failure injection.
 
-use crate::model::dssoftmax::{DsScratch, DsSoftmax, GateDecision};
-use crate::runtime::PjrtDsEngine;
-use crate::tensor::Matrix;
+use crate::model::dssoftmax::DsSoftmax;
+use crate::model::SoftmaxEngine;
+use crate::query::{MatrixView, Route, TopKBuf};
 
-/// Executes expert-grouped batches.
-pub trait BatchEngine: Send + Sync {
-    /// `hs` are the batch's context vectors, all routed to `expert`;
-    /// `gates` the per-row gate values.  Returns per-row top-k.
-    fn run_batch(
-        &self,
-        expert: usize,
-        hs: &[Vec<f32>],
-        gates: &[f32],
-        k: usize,
-    ) -> anyhow::Result<Vec<Vec<(u32, f32)>>>;
-
-    /// Route one context (sparse gate, Eq. 1).
-    fn route(&self, h: &[f32]) -> GateDecision;
-
-    fn k_experts(&self) -> usize;
-    fn dim(&self) -> usize;
-}
-
-/// Native engine: per-row packed matvec + scaled softmax + top-k.
+/// Native engine: a thin marker over [`DsSoftmax`] naming the serving
+/// deployment (the coordinator's default backend).  All behavior
+/// delegates to the inner engine's zero-allocation batched paths.
 pub struct NativeBatchEngine {
     pub ds: DsSoftmax,
 }
@@ -40,36 +26,44 @@ impl NativeBatchEngine {
     }
 }
 
-impl BatchEngine for NativeBatchEngine {
-    fn run_batch(
+impl SoftmaxEngine for NativeBatchEngine {
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        self.ds.query_batch(hs, k, out);
+    }
+
+    fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
+        self.ds.route_batch(hs, out);
+    }
+
+    fn run_expert_batch(
         &self,
         expert: usize,
-        hs: &[Vec<f32>],
+        hs: MatrixView<'_>,
         gates: &[f32],
         k: usize,
-    ) -> anyhow::Result<Vec<Vec<(u32, f32)>>> {
-        anyhow::ensure!(hs.len() == gates.len());
-        let mut scratch = DsScratch::new(&self.ds.set, k);
-        Ok(hs
-            .iter()
-            .zip(gates)
-            .map(|(h, &gv)| {
-                self.ds
-                    .expert_topk(h, GateDecision { expert, gate_value: gv }, &mut scratch)
-            })
-            .collect())
+        out: &mut TopKBuf,
+    ) -> anyhow::Result<()> {
+        self.ds.run_expert_batch(expert, hs, gates, k, out)
     }
 
-    fn route(&self, h: &[f32]) -> GateDecision {
-        self.ds.route(h)
+    fn flops_per_query(&self) -> u64 {
+        self.ds.flops_per_query()
     }
 
-    fn k_experts(&self) -> usize {
-        self.ds.set.k()
+    fn n_classes(&self) -> usize {
+        self.ds.n_classes()
     }
 
     fn dim(&self) -> usize {
-        self.ds.set.dim()
+        self.ds.dim()
+    }
+
+    fn k_experts(&self) -> usize {
+        self.ds.k_experts()
+    }
+
+    fn name(&self) -> &'static str {
+        "native-batch"
     }
 }
 
@@ -80,6 +74,15 @@ impl BatchEngine for NativeBatchEngine {
 /// `PjrtDsEngine`; this handle is `Send + Sync` and forwards batches over
 /// a channel.  Routing stays native (O(K·d) — cheaper than a PJRT
 /// dispatch and identical math to the exported gate HLO).
+///
+/// Padded-row semantics: the exported executables are shape-specialized
+/// to batch *buckets*, so a flush of n rows is padded to the smallest
+/// bucket ≥ n with zero contexts and gate 0.0.  Those rows still
+/// execute (a gate-0 scaled softmax is uniform over the expert) — the
+/// waste is bounded by the bucket ladder — and their outputs are never
+/// unpacked: `run_expert_batch` reads exactly `rows` rows back out and
+/// the executor validates the job shape before dispatch.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBatchEngine {
     jobs: std::sync::Mutex<std::sync::mpsc::Sender<PjrtJob>>,
     router: DsSoftmax,
@@ -87,19 +90,24 @@ pub struct PjrtBatchEngine {
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
+#[cfg(feature = "pjrt")]
 struct PjrtJob {
     expert: usize,
-    hm: Matrix,
+    hm: crate::tensor::Matrix,
     gates: Vec<f32>,
+    /// valid (non-padding) leading rows of `hm` — the executor checks
+    /// it against the bucket, the caller unpacks only these.
     rows: usize,
     bucket: usize,
     reply: std::sync::mpsc::Sender<anyhow::Result<Vec<f32>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBatchEngine {
     /// Build from a manifest; the PJRT client + executables live on the
     /// spawned executor thread.
     pub fn new(manifest: crate::artifacts::Manifest) -> anyhow::Result<Self> {
+        use crate::runtime::PjrtDsEngine;
         let set = manifest.expert_set()?;
         let buckets = manifest.buckets.clone();
         let (tx, rx) = std::sync::mpsc::channel::<PjrtJob>();
@@ -120,13 +128,19 @@ impl PjrtBatchEngine {
                     }
                 };
                 while let Ok(job) = rx.recv() {
-                    let res = engine.expert_probs(
-                        job.expert,
-                        &job.hm,
-                        &job.gates,
-                        job.bucket,
-                    );
-                    let _ = job.rows; // rows used by caller for unpacking
+                    let res = (|| {
+                        anyhow::ensure!(
+                            job.rows <= job.bucket
+                                && job.hm.rows == job.bucket
+                                && job.gates.len() == job.bucket,
+                            "malformed pjrt job: rows={} bucket={} hm={} gates={}",
+                            job.rows,
+                            job.bucket,
+                            job.hm.rows,
+                            job.gates.len()
+                        );
+                        engine.expert_probs(job.expert, &job.hm, &job.gates, job.bucket)
+                    })();
                     let _ = job.reply.send(res);
                 }
             })?;
@@ -153,23 +167,53 @@ impl PjrtBatchEngine {
     }
 }
 
-impl BatchEngine for PjrtBatchEngine {
-    fn run_batch(
+#[cfg(feature = "pjrt")]
+impl SoftmaxEngine for PjrtBatchEngine {
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        // The trait's convenience path is infallible, so an executor
+        // error panics *here*, at the fault, with the real cause —
+        // not later as a confusing empty-row index panic in the
+        // caller.  Only the calling thread unwinds; the serving
+        // coordinator never uses this path (it drives the fallible
+        // `run_expert_batch` and propagates errors per batch).
+        if let Err(e) = crate::query::query_batch_grouped(self, hs, k, out) {
+            panic!("pjrt query_batch: {e:#}");
+        }
+    }
+
+    fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
+        self.router.route_batch(hs, out);
+    }
+
+    fn run_expert_batch(
         &self,
         expert: usize,
-        hs: &[Vec<f32>],
+        hs: MatrixView<'_>,
         gates: &[f32],
         k: usize,
-    ) -> anyhow::Result<Vec<Vec<(u32, f32)>>> {
-        let n = hs.len();
-        let d = self.dim();
-        let bucket = self.bucket_for(n);
-        let mut hm = Matrix::zeros(bucket, d);
-        let mut gv = vec![0.0f32; bucket];
-        for (i, h) in hs.iter().enumerate() {
-            hm.row_mut(i).copy_from_slice(h);
-            gv[i] = gates[i];
+        out: &mut TopKBuf,
+    ) -> anyhow::Result<()> {
+        let n = hs.rows;
+        anyhow::ensure!(n == gates.len(), "{n} rows vs {} gates", gates.len());
+        out.reset(n, k);
+        if n == 0 {
+            return Ok(());
         }
+        let d = self.dim();
+        anyhow::ensure!(hs.cols == d, "row width {} vs model dim {d}", hs.cols);
+        anyhow::ensure!(expert < self.router.set.k(), "expert {expert} out of range");
+        let bucket = self.bucket_for(n);
+        anyhow::ensure!(
+            n <= bucket,
+            "batch of {n} exceeds largest exported bucket {bucket}"
+        );
+        // pad to the bucket: zero contexts + gate 0.0 (see type docs)
+        let mut hm = crate::tensor::Matrix::zeros(bucket, d);
+        for i in 0..n {
+            hm.row_mut(i).copy_from_slice(hs.row(i));
+        }
+        let mut gv = vec![0.0f32; bucket];
+        gv[..n].copy_from_slice(gates);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         self.jobs
             .lock()
@@ -186,31 +230,45 @@ impl BatchEngine for PjrtBatchEngine {
         let probs = reply_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("pjrt executor dropped reply"))??;
+        anyhow::ensure!(
+            !probs.is_empty() && probs.len() % bucket == 0,
+            "expert probs length {} not divisible by bucket {bucket}",
+            probs.len()
+        );
         let p = probs.len() / bucket;
         let ids = &self.router.set.experts[expert].class_ids;
-        Ok((0..n)
-            .map(|i| {
-                crate::util::topk::topk(&probs[i * p..(i + 1) * p], k)
-                    .into_iter()
-                    .map(|(prob, idx)| (ids[idx as usize] as u32, prob))
-                    .collect()
-            })
-            .collect())
+        anyhow::ensure!(p <= ids.len(), "probs stride {p} exceeds packed size");
+        // unpack only the valid rows; padded rows [n, bucket) are dropped
+        for i in 0..n {
+            for (prob, idx) in crate::util::topk::topk(&probs[i * p..(i + 1) * p], k) {
+                out.push(i, ids[idx as usize] as u32, prob);
+            }
+        }
+        Ok(())
     }
 
-    fn route(&self, h: &[f32]) -> GateDecision {
-        self.router.route(h)
+    fn flops_per_query(&self) -> u64 {
+        self.router.flops_per_query()
     }
 
-    fn k_experts(&self) -> usize {
-        self.router.set.k()
+    fn n_classes(&self) -> usize {
+        self.router.n_classes()
     }
 
     fn dim(&self) -> usize {
-        self.router.set.dim()
+        self.router.dim()
+    }
+
+    fn k_experts(&self) -> usize {
+        self.router.k_experts()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-batch"
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Drop for PjrtBatchEngine {
     fn drop(&mut self) {
         // close the channel so the executor thread exits
@@ -233,35 +291,73 @@ pub struct MockEngine {
 }
 
 #[cfg(any(test, debug_assertions))]
-impl BatchEngine for MockEngine {
-    fn run_batch(
+impl MockEngine {
+    /// Scripted per-row answer: ids 0..k with harmonic probabilities.
+    fn scripted(&self, row: usize, k: usize, out: &mut TopKBuf) {
+        for i in 0..k {
+            out.push(row, i as u32, 1.0 / (i + 1) as f32);
+        }
+    }
+}
+
+#[cfg(any(test, debug_assertions))]
+impl SoftmaxEngine for MockEngine {
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        out.reset(hs.rows, k);
+        for r in 0..hs.rows {
+            self.scripted(r, k, out);
+        }
+    }
+
+    fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
+        assert_eq!(hs.rows, out.len());
+        for (r, route) in out.iter_mut().enumerate() {
+            // deterministic routing on the first coordinate; empty
+            // context vectors (cols == 0) fall back to expert 0 rather
+            // than panicking — the coordinator rejects them upstream.
+            let x = hs.row(r).first().copied().unwrap_or(0.0);
+            *route = Route::single((x.abs() as usize) % self.k, 0.5);
+        }
+    }
+
+    fn run_expert_batch(
         &self,
         expert: usize,
-        hs: &[Vec<f32>],
-        _gates: &[f32],
+        hs: MatrixView<'_>,
+        gates: &[f32],
         k: usize,
-    ) -> anyhow::Result<Vec<Vec<(u32, f32)>>> {
+        out: &mut TopKBuf,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(hs.rows == gates.len());
         if self.fail_expert == Some(expert) {
             anyhow::bail!("injected failure on expert {expert}");
         }
-        Ok(hs
-            .iter()
-            .map(|_| (0..k).map(|i| (i as u32, 1.0 / (i + 1) as f32)).collect())
-            .collect())
+        out.reset(hs.rows, k);
+        for r in 0..hs.rows {
+            self.scripted(r, k, out);
+        }
+        Ok(())
     }
 
-    fn route(&self, h: &[f32]) -> GateDecision {
-        // deterministic routing on the first coordinate
-        let e = (h[0].abs() as usize) % self.k;
-        GateDecision { expert: e, gate_value: 0.5 }
+    fn flops_per_query(&self) -> u64 {
+        0
+    }
+
+    fn n_classes(&self) -> usize {
+        // nominal: the scripted ids cover 0..k of the caller's choosing
+        self.k
+    }
+
+    fn dim(&self) -> usize {
+        self.d
     }
 
     fn k_experts(&self) -> usize {
         self.k
     }
 
-    fn dim(&self) -> usize {
-        self.d
+    fn name(&self) -> &'static str {
+        "mock"
     }
 }
 
@@ -279,20 +375,41 @@ mod tests {
         let engine = NativeBatchEngine::new(ds);
         let hs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(16, 1.0)).collect();
         // route and group manually
+        let mut out = TopKBuf::new();
         for h in &hs {
-            let d = engine.route(h);
-            let got = engine
-                .run_batch(d.expert, &[h.clone()], &[d.gate_value], 5)
+            let route = engine.route(h);
+            engine
+                .run_expert_batch(
+                    route.expert(),
+                    MatrixView::single(h),
+                    &[route.gate_value()],
+                    5,
+                    &mut out,
+                )
                 .unwrap();
             let want = crate::model::SoftmaxEngine::query(&single, h, 5);
-            assert_eq!(got[0], want);
+            assert_eq!(out.row_vec(0), want);
         }
     }
 
     #[test]
     fn mock_failure_injection() {
         let m = MockEngine { k: 4, d: 8, fail_expert: Some(2) };
-        assert!(m.run_batch(2, &[vec![0.0; 8]], &[0.5], 3).is_err());
-        assert!(m.run_batch(1, &[vec![0.0; 8]], &[0.5], 3).is_ok());
+        let h = vec![0.0f32; 8];
+        let mut out = TopKBuf::new();
+        assert!(m
+            .run_expert_batch(2, MatrixView::single(&h), &[0.5], 3, &mut out)
+            .is_err());
+        assert!(m
+            .run_expert_batch(1, MatrixView::single(&h), &[0.5], 3, &mut out)
+            .is_ok());
+        assert_eq!(out.row_vec(0), vec![(0, 1.0), (1, 0.5), (2, 1.0 / 3.0)]);
+    }
+
+    #[test]
+    fn mock_route_survives_empty_context() {
+        let m = MockEngine { k: 4, d: 0, fail_expert: None };
+        let r = m.route(&[]);
+        assert_eq!(r.expert(), 0);
     }
 }

@@ -1,21 +1,30 @@
-//! L3 serving coordinator — the paper's system integrated as a service:
+//! L3 serving coordinator — the paper's system integrated as a service,
+//! built on the unified `Route`/`TopKBuf` query API:
 //!
 //! ```text
 //!   clients ──▶ ingress queue (bounded, backpressure)
-//!                  │ router: sparse gate (O(K·d), native)
+//!                  │ router: sparse gate → Route (O(K·d), native)
 //!                  ▼
 //!          per-expert pending queues
 //!                  │ dynamic batcher: flush on size or deadline
 //!                  ▼
-//!          worker pool ──▶ BatchEngine (native or PJRT expert softmax)
-//!                  │
-//!                  ▼ per-request response channels + metrics
+//!          worker pool ── RowPack (contiguous MatrixView of the batch)
+//!                  │         │
+//!                  │         ▼ SoftmaxEngine::run_expert_batch
+//!                  │       pooled TopKBuf arena (no per-row Vecs)
+//!                  ▼
+//!          per-request response channels + metrics
 //! ```
 //!
 //! The gate runs *before* batching so requests are grouped by expert —
 //! the DS-Softmax analogue of vLLM-style continuous batching: batches
 //! are only formed across requests that share the same sparse expert,
 //! which is what makes the packed-expert matmul dense and fast.
+//!
+//! There is no separate batch-engine trait: the coordinator drives the
+//! same [`SoftmaxEngine`] the model layer defines, so native, PJRT, and
+//! mock backends (and any plain engine, e.g. the full-softmax baseline)
+//! are interchangeable behind `Arc<dyn SoftmaxEngine>`.
 
 pub mod batcher;
 pub mod engine;
@@ -23,6 +32,11 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use engine::{BatchEngine, NativeBatchEngine};
+pub use engine::NativeBatchEngine;
+#[cfg(feature = "pjrt")]
+pub use engine::PjrtBatchEngine;
 pub use metrics::Metrics;
 pub use server::{Coordinator, CoordinatorConfig, QueryError};
+
+/// The one engine trait, re-exported where the old `BatchEngine` lived.
+pub use crate::model::SoftmaxEngine;

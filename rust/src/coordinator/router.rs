@@ -1,34 +1,38 @@
 //! Router: assigns incoming queries to their sparse expert via the
-//! gating network (Eq. 1).  Routing happens *before* batching so that
-//! batches are homogeneous per expert — the structural property that
-//! turns the sparse second level into a dense packed matmul.
+//! gating network (Eq. 1), producing a [`Route`].  Routing happens
+//! *before* batching so that batches are homogeneous per expert — the
+//! structural property that turns the sparse second level into a dense
+//! packed matmul.
 
 use std::time::Instant;
 
-use crate::coordinator::engine::BatchEngine;
-use crate::model::dssoftmax::GateDecision;
+use crate::model::SoftmaxEngine;
+use crate::query::Route;
 
 /// A query admitted into the coordinator.
 pub struct RoutedQuery {
     pub id: u64,
     pub h: Vec<f32>,
     pub k: usize,
-    pub decision: GateDecision,
+    pub route: Route,
     pub submitted: Instant,
     pub responder: std::sync::mpsc::Sender<super::server::QueryResult>,
 }
 
-/// Stateless routing: validates dimensionality, runs the gate.
+/// Stateless routing: validates the context vector, runs the gate.
 pub struct Router<'a> {
-    engine: &'a dyn BatchEngine,
+    engine: &'a dyn SoftmaxEngine,
 }
 
 impl<'a> Router<'a> {
-    pub fn new(engine: &'a dyn BatchEngine) -> Self {
+    pub fn new(engine: &'a dyn SoftmaxEngine) -> Self {
         Self { engine }
     }
 
-    pub fn route(&self, h: &[f32]) -> Result<GateDecision, String> {
+    pub fn route(&self, h: &[f32]) -> Result<Route, String> {
+        if h.is_empty() {
+            return Err("empty context vector".into());
+        }
         if h.len() != self.engine.dim() {
             return Err(format!(
                 "dimension mismatch: query {} vs model {}",
@@ -54,8 +58,8 @@ mod tests {
         let r = Router::new(&e);
         for v in 0..20 {
             let h = vec![v as f32; 8];
-            let d = r.route(&h).unwrap();
-            assert!(d.expert < 4);
+            let route = r.route(&h).unwrap();
+            assert!(route.expert() < 4);
         }
     }
 
@@ -64,6 +68,17 @@ mod tests {
         let e = MockEngine { k: 4, d: 8, fail_expert: None };
         let r = Router::new(&e);
         assert!(r.route(&vec![0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let e = MockEngine { k: 4, d: 8, fail_expert: None };
+        let r = Router::new(&e);
+        let err = r.route(&[]).unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+        // even a zero-dim engine must not panic on empty input
+        let e0 = MockEngine { k: 4, d: 0, fail_expert: None };
+        assert!(Router::new(&e0).route(&[]).is_err());
     }
 
     #[test]

@@ -2,15 +2,22 @@
 //! thread running route→batch, and a worker pool executing expert
 //! batches.  Thread-based (no tokio offline) — the dispatcher is a
 //! single hot loop, workers scale with cores.
+//!
+//! Workers flush each per-expert batch through the unified
+//! `run_expert_batch` API: queued rows are gathered into a pooled
+//! [`RowPack`] (contiguous `MatrixView`) and results land in a pooled
+//! [`TopKBuf`] arena — no `Vec<Vec<…>>` round-trip; the only per-query
+//! allocation left is the owned response sent back to the caller.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
-use crate::coordinator::engine::BatchEngine;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{RoutedQuery, Router};
+use crate::model::SoftmaxEngine;
+use crate::query::{RowPack, TopKBuf};
 use crate::util::threadpool::{BoundedQueue, ThreadPool};
 
 /// Completed query result (or error string).
@@ -65,14 +72,14 @@ impl Pending {
 pub struct Coordinator {
     ingress: Arc<BoundedQueue<RoutedQuery>>,
     pub metrics: Arc<Metrics>,
-    engine: Arc<dyn BatchEngine>,
+    engine: Arc<dyn SoftmaxEngine>,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    pub fn start(engine: Arc<dyn BatchEngine>, cfg: CoordinatorConfig) -> Self {
+    pub fn start(engine: Arc<dyn SoftmaxEngine>, cfg: CoordinatorConfig) -> Self {
         let ingress = Arc::new(BoundedQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::new(engine.k_experts()));
         let stop = Arc::new(AtomicBool::new(false));
@@ -103,17 +110,20 @@ impl Coordinator {
     /// Submit a query; fails fast with backpressure if the ingress queue
     /// is full (the caller can retry / shed load).
     pub fn submit(&self, h: Vec<f32>, k: usize) -> Result<Pending, QueryError> {
-        // route up-front: dimension/NaN validation + expert assignment
+        if k == 0 {
+            return Err(QueryError::Rejected("k must be >= 1".into()));
+        }
+        // route up-front: empty/dimension/NaN validation + expert assignment
         let router = Router::new(self.engine.as_ref());
-        let decision = router.route(&h).map_err(QueryError::Rejected)?;
+        let route = router.route(&h).map_err(QueryError::Rejected)?;
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        self.metrics.record_route(decision.expert);
+        self.metrics.record_route(route.expert());
         let (tx, rx) = mpsc::channel();
         let q = RoutedQuery {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             h,
             k,
-            decision,
+            route,
             submitted: Instant::now(),
             responder: tx,
         };
@@ -144,23 +154,41 @@ impl Drop for Coordinator {
     }
 }
 
+/// Per-batch scratch a worker checks out of the shared pool: the row
+/// gather buffer, gate values, and the result arena.  Pool depth tracks
+/// peak worker concurrency, so steady-state flushes reuse warm buffers
+/// instead of allocating per batch.
+#[derive(Default)]
+struct BatchScratch {
+    pack: RowPack,
+    gates: Vec<f32>,
+    out: TopKBuf,
+}
+
 fn dispatch_loop(
     ingress: Arc<BoundedQueue<RoutedQuery>>,
-    engine: Arc<dyn BatchEngine>,
+    engine: Arc<dyn SoftmaxEngine>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     cfg: CoordinatorConfig,
 ) {
     let pool = ThreadPool::new(cfg.workers);
     let mut batcher = Batcher::new(engine.k_experts(), cfg.policy);
+    let scratches: Arc<Mutex<Vec<BatchScratch>>> = Arc::new(Mutex::new(Vec::new()));
 
     let run_batch = |expert: usize, batch: Vec<RoutedQuery>| {
         let engine = engine.clone();
         let metrics = metrics.clone();
+        let scratches = scratches.clone();
         pool.execute(move || {
             let t0 = Instant::now();
-            let hs: Vec<Vec<f32>> = batch.iter().map(|q| q.h.clone()).collect();
-            let gates: Vec<f32> = batch.iter().map(|q| q.decision.gate_value).collect();
+            let mut s = scratches.lock().unwrap().pop().unwrap_or_default();
+            s.pack.reset(engine.dim());
+            s.gates.clear();
+            for q in &batch {
+                s.pack.push_row(&q.h);
+                s.gates.push(q.route.gate_value());
+            }
             let kmax = batch.iter().map(|q| q.k).max().unwrap_or(1);
             metrics.record_batch(batch.len());
             for q in &batch {
@@ -170,11 +198,12 @@ fn dispatch_loop(
                     .unwrap()
                     .record(t0.duration_since(q.submitted));
             }
-            match engine.run_batch(expert, &hs, &gates, kmax) {
-                Ok(results) => {
+            match engine.run_expert_batch(expert, s.pack.view(), &s.gates, kmax, &mut s.out) {
+                Ok(()) => {
                     let exec = t0.elapsed();
                     metrics.execute_latency.lock().unwrap().record(exec);
-                    for (q, mut r) in batch.into_iter().zip(results) {
+                    for (i, q) in batch.into_iter().enumerate() {
+                        let mut r = s.out.row_vec(i);
                         r.truncate(q.k);
                         metrics
                             .total_latency
@@ -192,6 +221,7 @@ fn dispatch_loop(
                     }
                 }
             }
+            scratches.lock().unwrap().push(s);
         });
     };
 
@@ -234,8 +264,10 @@ mod tests {
     use super::*;
     use crate::coordinator::engine::{MockEngine, NativeBatchEngine};
     use crate::model::dssoftmax::DsSoftmax;
+    use crate::model::full::FullSoftmax;
     use crate::model::SoftmaxEngine;
     use crate::sparse::ExpertSet;
+    use crate::tensor::Matrix;
     use crate::util::rng::Rng;
 
     fn native_coord() -> (Coordinator, DsSoftmax) {
@@ -283,6 +315,26 @@ mod tests {
         let (c, _) = native_coord();
         match c.query(vec![0.0; 3], 1) {
             Err(QueryError::Rejected(msg)) => assert!(msg.contains("dimension")),
+            other => panic!("want rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_empty_input() {
+        let (c, _) = native_coord();
+        match c.query(Vec::new(), 1) {
+            Err(QueryError::Rejected(msg)) => assert!(msg.contains("empty"), "{msg}"),
+            other => panic!("want rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_zero_k() {
+        // k = 0 must be shed at ingress — letting it through would
+        // panic a worker on heap.set_k(0) and leak its pooled scratch
+        let (c, _) = native_coord();
+        match c.query(vec![0.0; 16], 0) {
+            Err(QueryError::Rejected(msg)) => assert!(msg.contains("k must"), "{msg}"),
             other => panic!("want rejection, got {other:?}"),
         }
     }
@@ -343,5 +395,22 @@ mod tests {
         }
         let u = c.metrics.utilization();
         assert!((u.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    /// The unified trait means *any* engine — including the full-softmax
+    /// baseline with its single implicit expert — can sit behind the
+    /// coordinator unchanged.
+    #[test]
+    fn coordinator_serves_single_expert_baseline() {
+        let mut rng = Rng::new(10);
+        let w = Matrix::random(64, 8, &mut rng, 1.0);
+        let reference = FullSoftmax::new(w.clone());
+        let engine = Arc::new(FullSoftmax::new(w));
+        let c = Coordinator::start(engine, CoordinatorConfig::default());
+        for _ in 0..20 {
+            let h = rng.normal_vec(8, 1.0);
+            let got = c.query(h.clone(), 4).unwrap();
+            assert_eq!(got, reference.query(&h, 4));
+        }
     }
 }

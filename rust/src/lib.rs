@@ -11,28 +11,51 @@
 //!   AOT-lowers the inference graphs to HLO text.
 //! * **L3** — this crate: the serving coordinator (router → group-by-
 //!   expert dynamic batcher → engines), the PJRT runtime that executes
-//!   the AOT artifacts, native fallback engines, all paper baselines
-//!   (full softmax, SVD-softmax, D-softmax), FLOPs accounting, and the
-//!   benchmark harness that regenerates every table and figure.
+//!   the AOT artifacts (`pjrt` feature), native fallback engines, all
+//!   paper baselines (full softmax, SVD-softmax, D-softmax), FLOPs
+//!   accounting, and the benchmark harness that regenerates every table
+//!   and figure.
 //!
 //! Python never runs at serving time: after `make artifacts`, the `dss`
 //! binary and the examples are self-contained.
 //!
 //! ## Quick start
 //!
+//! Every engine speaks one batched, zero-allocation API
+//! ([`model::SoftmaxEngine`]): `route_batch` gates a packed batch of
+//! context vectors into [`query::Route`]s, `query_batch` writes top-k
+//! results into a reusable [`query::TopKBuf`] arena, and single-row
+//! `query`/`route` wrappers cover the convenient case.
+//!
 //! ```no_run
-//! use ds_softmax::sparse::ExpertSet;
 //! use ds_softmax::model::dssoftmax::DsSoftmax;
 //! use ds_softmax::model::SoftmaxEngine;
+//! use ds_softmax::query::{MatrixView, TopKBuf};
+//! use ds_softmax::sparse::ExpertSet;
 //! use ds_softmax::util::rng::Rng;
 //!
 //! let mut rng = Rng::new(0);
 //! let set = ExpertSet::synthetic(1_000, 32, 8, 1.2, &mut rng);
 //! let engine = DsSoftmax::new(set);
+//!
+//! // one query
 //! let h = rng.normal_vec(32, 1.0);
 //! let top = engine.query(&h, 10); // top-10 (class, prob)
 //! assert_eq!(top.len(), 10);
+//!
+//! // a batch: pack rows contiguously, reuse one result arena across
+//! // batches — the steady state allocates nothing
+//! let batch: Vec<f32> = (0..16).flat_map(|_| rng.normal_vec(32, 1.0)).collect();
+//! let mut out = TopKBuf::new();
+//! engine.query_batch(MatrixView::new(&batch, 16, 32), 10, &mut out);
+//! assert_eq!(out.rows(), 16);
+//! let (ids, probs) = out.row(3); // row 3's top-10, descending
+//! assert_eq!(ids.len(), probs.len());
 //! ```
+//!
+//! The serving coordinator (`coordinator::Coordinator`) drives the same
+//! trait: routing happens at ingress, per-expert batches flush through
+//! `run_expert_batch` into pooled buffers.
 
 pub mod artifacts;
 pub mod benchlib;
@@ -41,6 +64,8 @@ pub mod data;
 pub mod eval;
 pub mod flops;
 pub mod model;
+pub mod query;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sparse;
 pub mod tensor;

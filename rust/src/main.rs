@@ -17,6 +17,7 @@ use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine}
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::query::{MatrixView, TopKBuf};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::util::cli::Args;
 use ds_softmax::util::rng::Rng;
@@ -30,7 +31,7 @@ USAGE: dss <serve|query|inspect|gen|bench> [options]
   query    --artifact <name> --k K [--seed S]
   inspect  --artifact <name>
   gen      --n N --d D --experts K --redundancy M
-  bench    --n N --d D --experts K [--iters I]
+  bench    --n N --d D --experts K [--iters I] [--batch B]
 
 Common: --artifacts-dir <path> (default ./artifacts or $DSS_ARTIFACTS)
 ";
@@ -48,6 +49,19 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
     }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_engine(m: &Manifest) -> anyhow::Result<Arc<dyn SoftmaxEngine>> {
+    println!("PJRT expert backend (dedicated executor thread)");
+    Ok(Arc::new(
+        ds_softmax::coordinator::engine::PjrtBatchEngine::new(m.clone())?,
+    ))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_engine(_m: &Manifest) -> anyhow::Result<Arc<dyn SoftmaxEngine>> {
+    anyhow::bail!("this binary was built without the `pjrt` feature (rebuild with --features pjrt)")
 }
 
 fn manifest_from(args: &Args) -> anyhow::Result<Manifest> {
@@ -69,9 +83,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         "serving '{}': N={} d={} K={} p={} (theoretical speedup {:.2}x)",
         m.name, m.n_classes, d, m.k, m.p, m.speedup_theoretical
     );
-    let engine: Arc<dyn ds_softmax::coordinator::BatchEngine> = if args.flag("pjrt") {
-        println!("PJRT expert backend (dedicated executor thread)");
-        Arc::new(ds_softmax::coordinator::engine::PjrtBatchEngine::new(m.clone())?)
+    let engine: Arc<dyn SoftmaxEngine> = if args.flag("pjrt") {
+        pjrt_engine(&m)?
     } else {
         Arc::new(NativeBatchEngine::new(DsSoftmax::with_utilization(
             set,
@@ -84,9 +97,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let mut pending = Vec::with_capacity(n_queries);
     for _ in 0..n_queries {
         let h = rng.normal_vec(d, 1.0);
-        match c.submit(h, k) {
-            Ok(p) => pending.push(p),
-            Err(_) => {}
+        if let Ok(p) = c.submit(h, k) {
+            pending.push(p);
         }
     }
     let mut ok = 0;
@@ -180,12 +192,29 @@ fn bench(args: &Args) -> anyhow::Result<()> {
     let md = benchlib::bench("ds", 10, iters, || {
         std::hint::black_box(ds.query(&h, 10));
     });
+    // batched zero-allocation path: pack a batch once, reuse the arena
+    let bsz = args.usize_or("batch", 64);
+    let packed: Vec<f32> = (0..bsz).flat_map(|_| rng.normal_vec(d, 1.0)).collect();
+    let view = MatrixView::new(&packed, bsz, d);
+    let mut out = TopKBuf::new();
+    ds.query_batch(view, 10, &mut out); // warm scratch + arena
+    let mb = benchlib::bench_batched("ds batched", 5, iters.max(20), bsz, || {
+        ds.query_batch(view, 10, &mut out);
+        std::hint::black_box(&out);
+    });
     println!(
         "full: {:.1}µs   ds-{k}: {:.1}µs   latency speedup {:.2}x   flops speedup {:.2}x",
         mf.per_iter_us(),
         md.per_iter_us(),
         mf.median_ns / md.median_ns,
         full.flops_per_query() as f64 / ds.flops_per_query() as f64,
+    );
+    println!(
+        "ds-{k} batched (B={bsz}): {:.1}µs/query   {:.0} qps vs {:.0} qps single ({:.2}x)",
+        mb.per_iter_us(),
+        benchlib::qps(mb.median_ns),
+        benchlib::qps(md.median_ns),
+        md.median_ns / mb.median_ns,
     );
     Ok(())
 }

@@ -12,8 +12,8 @@
 //! cannot win on uniform class distributions (Table 3/4, CASIA row).
 
 use crate::model::SoftmaxEngine;
+use crate::query::{with_scratch, MatrixView, TopKBuf};
 use crate::tensor::{dot, softmax_inplace, Matrix};
-use crate::util::topk::TopK;
 
 pub struct DSoftmaxBucket {
     /// rows for this bucket's classes, width = dim.
@@ -59,17 +59,28 @@ impl DSoftmax {
 }
 
 impl SoftmaxEngine for DSoftmax {
-    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
-        let mut logits = vec![0.0f32; self.n];
-        for b in &self.buckets {
-            for r in 0..b.weights.rows {
-                logits[b.start + r] = dot(b.weights.row(r), &h[..b.dim]);
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        assert_eq!(hs.cols, self.d_full, "row width vs model dim");
+        out.reset(hs.rows, k);
+        with_scratch(|s| {
+            let crate::query::QueryScratch { logits, heap, .. } = s;
+            logits.resize(self.n, 0.0);
+            heap.set_k(k);
+            for row in 0..hs.rows {
+                let h = hs.row(row);
+                for b in &self.buckets {
+                    for r in 0..b.weights.rows {
+                        logits[b.start + r] = dot(b.weights.row(r), &h[..b.dim]);
+                    }
+                }
+                softmax_inplace(logits);
+                heap.clear();
+                heap.push_slice(logits);
+                for &(p, i) in heap.sorted_in_place() {
+                    out.push(row, i, p);
+                }
             }
-        }
-        softmax_inplace(&mut logits);
-        let mut heap = TopK::new(k);
-        heap.push_slice(&logits);
-        heap.into_sorted().into_iter().map(|(p, i)| (i, p)).collect()
+        });
     }
 
     fn flops_per_query(&self) -> u64 {

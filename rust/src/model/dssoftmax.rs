@@ -1,16 +1,21 @@
 //! The DS-Softmax inference engine (paper §2.3, inference path):
 //!
-//! 1. gate: `softmax(U·h)` over K experts → top-1 expert + gate value;
+//! 1. gate: `softmax(U·h)` over K experts → top-m experts + gate values
+//!    (a [`Route`]; m = 1 everywhere today);
 //! 2. expert: packed |v_k|×d logits, scaled by the gate value (inverse
 //!    temperature), stable softmax;
 //! 3. top-k over the packed probabilities, mapped back to global ids.
 //!
-//! `query_with_scratch` is the zero-allocation hot path used by the
-//! coordinator workers; `query` is the convenient stateless form.
+//! `query_batch`/`route_batch`/`run_expert_batch` are the
+//! zero-allocation batched hot paths (per-thread scratch, caller-owned
+//! [`TopKBuf`] arena); the single-row `query` wrapper and the explicit
+//! [`DsScratch`] form remain for convenience and for callers that
+//! manage their own buffers.
 
 use crate::model::SoftmaxEngine;
+use crate::query::{with_scratch, MatrixView, Route, TopKBuf, MAX_ROUTE_WIDTH};
 use crate::sparse::ExpertSet;
-use crate::tensor::{argmax, scaled_softmax_inplace, softmax_inplace};
+use crate::tensor::{argmax, dot, scaled_softmax_inplace, softmax_inplace};
 use crate::util::topk::TopK;
 
 pub struct DsSoftmax {
@@ -20,7 +25,7 @@ pub struct DsSoftmax {
     utilization: Vec<f64>,
 }
 
-/// Reusable per-thread buffers for the hot path.
+/// Reusable caller-owned buffers for the explicit-scratch hot path.
 pub struct DsScratch {
     pub gate_logits: Vec<f32>,
     pub expert_logits: Vec<f32>,
@@ -35,14 +40,6 @@ impl DsScratch {
             heap: TopK::new(k),
         }
     }
-}
-
-/// Result of the gating stage — exposed so the coordinator can route
-/// before running the expert stage.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct GateDecision {
-    pub expert: usize,
-    pub gate_value: f32,
 }
 
 impl DsSoftmax {
@@ -61,57 +58,188 @@ impl DsSoftmax {
         self.utilization = u;
     }
 
-    /// Stage 1: the sparse gate (Eq. 1).
+    /// Stage 1: the sparse gate (Eq. 1) into caller scratch, top-1.
     #[inline]
-    pub fn gate(&self, h: &[f32], gate_logits: &mut [f32]) -> GateDecision {
-        self.set.gate.matvec_into(h, gate_logits);
-        softmax_inplace(gate_logits);
-        let expert = argmax(gate_logits);
-        GateDecision { expert, gate_value: gate_logits[expert] }
+    pub fn gate(&self, h: &[f32], gate_logits: &mut [f32]) -> Route {
+        self.gate_topm(h, 1, gate_logits)
     }
 
-    /// Stage 2: packed expert softmax + top-k (Eq. 2).
+    /// Stage 1, generalized: softmax over K gate logits, keep the top-m
+    /// experts (descending gate value).  `m = 1` is the paper's serving
+    /// configuration; larger m enables overlapping-expert queries.
+    pub fn gate_topm(&self, h: &[f32], m: usize, gate_logits: &mut [f32]) -> Route {
+        assert!(
+            (1..=MAX_ROUTE_WIDTH).contains(&m),
+            "m={m} out of 1..={MAX_ROUTE_WIDTH}"
+        );
+        self.set.gate.matvec_into(h, gate_logits);
+        softmax_inplace(gate_logits);
+        if m == 1 {
+            let e = argmax(gate_logits);
+            return Route::single(e, gate_logits[e]);
+        }
+        // m is tiny: repeated masked argmax is O(m·K) with no allocation.
+        let mut route = Route::empty();
+        let mut taken = [usize::MAX; MAX_ROUTE_WIDTH];
+        for slot in 0..m.min(gate_logits.len()) {
+            let mut best = usize::MAX;
+            let mut bv = f32::NEG_INFINITY;
+            for (i, &g) in gate_logits.iter().enumerate() {
+                if taken[..slot].contains(&i) {
+                    continue;
+                }
+                if g > bv {
+                    bv = g;
+                    best = i;
+                }
+            }
+            if best == usize::MAX {
+                // all remaining logits NaN — mirror `argmax`'s
+                // ties-to-first fallback instead of pushing a garbage
+                // expert index that panics downstream
+                best = (0..gate_logits.len())
+                    .find(|i| !taken[..slot].contains(i))
+                    .unwrap_or(0);
+                bv = gate_logits[best];
+            }
+            taken[slot] = best;
+            route.push(best, bv);
+        }
+        route
+    }
+
+    /// Batched top-m routing (the `route_batch` trait method is the
+    /// m = 1 case).  Uses per-thread scratch — no allocation once warm.
+    pub fn route_batch_topm(&self, hs: MatrixView<'_>, m: usize, out: &mut [Route]) {
+        assert_eq!(hs.rows, out.len(), "route_batch shape mismatch");
+        assert_eq!(hs.cols, self.set.dim(), "row width vs model dim");
+        with_scratch(|s| {
+            s.gate.resize(self.set.k(), 0.0);
+            for (r, route) in out.iter_mut().enumerate() {
+                *route = self.gate_topm(hs.row(r), m, &mut s.gate);
+            }
+        });
+    }
+
+    /// Stage 2 with explicit scratch: packed expert softmax + top-k
+    /// (Eq. 2) for one row already routed to `expert` with gate value
+    /// `gate` (allocates only the returned Vec).
     pub fn expert_topk(
         &self,
         h: &[f32],
-        decision: GateDecision,
+        expert: usize,
+        gate: f32,
         scratch: &mut DsScratch,
     ) -> Vec<(u32, f32)> {
-        let e = &self.set.experts[decision.expert];
+        let e = &self.set.experts[expert];
         let logits = &mut scratch.expert_logits[..e.valid];
         // matvec over only the valid packed rows
         for (r, out) in logits.iter_mut().enumerate() {
-            *out = crate::tensor::dot(e.weights.row(r), h);
+            *out = dot(e.weights.row(r), h);
         }
-        scaled_softmax_inplace(logits, decision.gate_value);
+        scaled_softmax_inplace(logits, gate);
         scratch.heap.clear();
         scratch.heap.push_slice(logits);
         scratch
             .heap
-            .sorted()
-            .into_iter()
-            .map(|(p, i)| (e.class_ids[i as usize] as u32, p))
+            .sorted_in_place()
+            .iter()
+            .map(|&(p, i)| (e.class_ids[i as usize] as u32, p))
             .collect()
     }
 
-    /// Full hot path with caller-owned scratch (no allocation except the
-    /// returned Vec).
+    /// Full single-row hot path with caller-owned scratch (no
+    /// allocation except the returned Vec).
     pub fn query_with_scratch(&self, h: &[f32], scratch: &mut DsScratch) -> Vec<(u32, f32)> {
-        let d = self.gate(h, &mut scratch.gate_logits);
-        self.expert_topk(h, d, scratch)
+        let route = self.gate(h, &mut scratch.gate_logits);
+        self.expert_topk(h, route.expert(), route.gate_value(), scratch)
     }
 
-    /// Routing-only entry point for the coordinator.
-    pub fn route(&self, h: &[f32]) -> GateDecision {
-        let mut buf = vec![0.0; self.set.k()];
-        self.gate(h, &mut buf)
+    /// Stage 2 core: packed expert matvec + scaled softmax + top-k,
+    /// leaving the row's results sorted in `heap` (descending).  Shared
+    /// by `query_batch` and `run_expert_batch`; callers map the heap's
+    /// packed indices to class ids.  `logits` must hold at least `p`
+    /// slots and `heap` be targeted at the row's k.
+    #[inline]
+    fn expert_scores(
+        &self,
+        h: &[f32],
+        expert: usize,
+        gate: f32,
+        logits: &mut [f32],
+        heap: &mut TopK,
+    ) {
+        let e = &self.set.experts[expert];
+        let logits = &mut logits[..e.valid];
+        for (r, l) in logits.iter_mut().enumerate() {
+            *l = dot(e.weights.row(r), h);
+        }
+        scaled_softmax_inplace(logits, gate);
+        heap.clear();
+        heap.push_slice(logits);
     }
 }
 
 impl SoftmaxEngine for DsSoftmax {
-    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
-        let mut scratch = DsScratch::new(&self.set, k);
-        self.query_with_scratch(h, &mut scratch)
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        assert_eq!(hs.cols, self.set.dim(), "row width vs model dim");
+        out.reset(hs.rows, k);
+        with_scratch(|s| {
+            let crate::query::QueryScratch { gate, logits, heap } = s;
+            gate.resize(self.set.k(), 0.0);
+            logits.resize(self.set.p(), 0.0);
+            heap.set_k(k);
+            for r in 0..hs.rows {
+                let h = hs.row(r);
+                let route = self.gate_topm(h, 1, gate);
+                self.expert_scores(h, route.expert(), route.gate_value(), logits, heap);
+                let ids = &self.set.experts[route.expert()].class_ids;
+                for &(p, i) in heap.sorted_in_place() {
+                    out.push(r, ids[i as usize] as u32, p);
+                }
+            }
+        });
+    }
+
+    fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
+        self.route_batch_topm(hs, 1, out);
+    }
+
+    fn run_expert_batch(
+        &self,
+        expert: usize,
+        hs: MatrixView<'_>,
+        gates: &[f32],
+        k: usize,
+        out: &mut TopKBuf,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            hs.rows == gates.len(),
+            "run_expert_batch: {} rows vs {} gates",
+            hs.rows,
+            gates.len()
+        );
+        anyhow::ensure!(expert < self.set.k(), "expert {expert} out of range");
+        anyhow::ensure!(
+            hs.cols == self.set.dim(),
+            "row width {} vs model dim {}",
+            hs.cols,
+            self.set.dim()
+        );
+        out.reset(hs.rows, k);
+        with_scratch(|s| {
+            let crate::query::QueryScratch { logits, heap, .. } = s;
+            logits.resize(self.set.p(), 0.0);
+            heap.set_k(k);
+            let ids = &self.set.experts[expert].class_ids;
+            for r in 0..hs.rows {
+                self.expert_scores(hs.row(r), expert, gates[r], logits, heap);
+                for &(p, i) in heap.sorted_in_place() {
+                    out.push(r, ids[i as usize] as u32, p);
+                }
+            }
+        });
+        Ok(())
     }
 
     fn flops_per_query(&self) -> u64 {
@@ -128,6 +256,10 @@ impl SoftmaxEngine for DsSoftmax {
 
     fn dim(&self) -> usize {
         self.set.dim()
+    }
+
+    fn k_experts(&self) -> usize {
+        self.set.k()
     }
 
     fn name(&self) -> &'static str {
@@ -178,9 +310,28 @@ mod tests {
         let mut rng = Rng::new(11);
         let h = rng.normal_vec(16, 1.0);
         let mut buf = vec![0.0; e.set.k()];
-        let d = e.gate(&h, &mut buf);
-        assert_eq!(d.expert, argmax(&buf));
-        assert!((0.0..=1.0).contains(&d.gate_value));
+        let r = e.gate(&h, &mut buf);
+        assert_eq!(r.expert(), argmax(&buf));
+        assert!((0.0..=1.0).contains(&r.gate_value()));
+    }
+
+    #[test]
+    fn gate_topm_descending_and_consistent() {
+        let e = engine(3);
+        let mut rng = Rng::new(21);
+        let h = rng.normal_vec(16, 1.0);
+        let mut buf = vec![0.0; e.set.k()];
+        let r1 = e.gate_topm(&h, 1, &mut buf);
+        let r3 = e.gate_topm(&h, 3, &mut buf);
+        assert_eq!(r3.width(), 3);
+        assert_eq!(r3.primary(), r1.primary());
+        let gates: Vec<f32> = r3.experts().iter().map(|x| x.gate).collect();
+        assert!(gates[0] >= gates[1] && gates[1] >= gates[2]);
+        // distinct experts (sort first — dedup only drops adjacent dups)
+        let mut es: Vec<u32> = r3.experts().iter().map(|x| x.expert).collect();
+        es.sort_unstable();
+        es.dedup();
+        assert_eq!(es.len(), 3);
     }
 
     #[test]
@@ -203,8 +354,8 @@ mod tests {
         let e = engine(5);
         let mut rng = Rng::new(13);
         let h = rng.normal_vec(16, 1.0);
-        let d = e.route(&h);
-        let expert = &e.set.experts[d.expert];
+        let route = e.route(&h);
+        let expert = &e.set.experts[route.expert()];
         // dense matrix of just the expert's rows
         let mut w = Matrix::zeros(expert.valid, 16);
         for r in 0..expert.valid {
@@ -233,5 +384,22 @@ mod tests {
         let mut rng = Rng::new(14);
         let h = rng.normal_vec(16, 1.0);
         assert_eq!(e.query(&h, 8), e.query(&h, 8));
+    }
+
+    #[test]
+    fn run_expert_batch_matches_expert_topk() {
+        let e = engine(8);
+        let mut rng = Rng::new(15);
+        let hs: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(16, 1.0)).collect();
+        let packed: Vec<f32> = hs.iter().flatten().copied().collect();
+        let view = MatrixView::new(&packed, 6, 16);
+        let gates = vec![0.7f32; 6];
+        let mut out = TopKBuf::new();
+        e.run_expert_batch(2, view, &gates, 4, &mut out).unwrap();
+        let mut scratch = DsScratch::new(&e.set, 4);
+        for (r, h) in hs.iter().enumerate() {
+            let want = e.expert_topk(h, 2, 0.7, &mut scratch);
+            assert_eq!(out.row_vec(r), want);
+        }
     }
 }

@@ -2,6 +2,7 @@
 //! table's "Full" row, and the ground truth for top-k agreement metrics.
 
 use crate::model::SoftmaxEngine;
+use crate::query::{with_scratch, MatrixView, TopKBuf};
 use crate::tensor::{softmax_inplace, Matrix};
 use crate::util::topk::TopK;
 
@@ -21,7 +22,7 @@ impl FullSoftmax {
         logits
     }
 
-    /// Zero-allocation hot path: caller provides logits scratch.
+    /// Explicit-scratch hot path: caller provides logits scratch.
     pub fn query_into(&self, h: &[f32], heap: &mut TopK, logits: &mut [f32]) {
         self.w.matvec_into(h, logits);
         softmax_inplace(logits);
@@ -31,15 +32,23 @@ impl FullSoftmax {
 }
 
 impl SoftmaxEngine for FullSoftmax {
-    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
-        let mut logits = self.w.matvec(h);
-        softmax_inplace(&mut logits);
-        let mut heap = TopK::new(k);
-        heap.push_slice(&logits);
-        heap.into_sorted()
-            .into_iter()
-            .map(|(p, i)| (i, p))
-            .collect()
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        assert_eq!(hs.cols, self.w.cols, "row width vs model dim");
+        out.reset(hs.rows, k);
+        with_scratch(|s| {
+            let crate::query::QueryScratch { logits, heap, .. } = s;
+            logits.resize(self.w.rows, 0.0);
+            heap.set_k(k);
+            for r in 0..hs.rows {
+                self.w.matvec_into(hs.row(r), logits);
+                softmax_inplace(logits);
+                heap.clear();
+                heap.push_slice(logits);
+                for &(p, i) in heap.sorted_in_place() {
+                    out.push(r, i, p);
+                }
+            }
+        });
     }
 
     fn flops_per_query(&self) -> u64 {
@@ -100,5 +109,18 @@ mod tests {
         let a: Vec<u32> = heap.sorted().iter().map(|&(_, i)| i).collect();
         let b: Vec<u32> = f.query(&h, 3).iter().map(|&(c, _)| c).collect();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn query_batch_matches_single_rows() {
+        let mut rng = Rng::new(4);
+        let f = FullSoftmax::new(Matrix::random(80, 8, &mut rng, 1.0));
+        let hs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(8, 1.0)).collect();
+        let packed: Vec<f32> = hs.iter().flatten().copied().collect();
+        let mut out = TopKBuf::new();
+        f.query_batch(MatrixView::new(&packed, 5, 8), 4, &mut out);
+        for (r, h) in hs.iter().enumerate() {
+            assert_eq!(out.row_vec(r), f.query(h, 4));
+        }
     }
 }

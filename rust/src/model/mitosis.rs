@@ -1,10 +1,22 @@
-//! Mitosis-training memory model (paper §2.3, Fig. 2 / Fig. 5a).
+//! Mitosis-training memory model (paper §2.3, Fig. 2 / Fig. 5a) and the
+//! [`MitosisEngine`] — an inference engine materialized from a point on
+//! the mitosis schedule.
 //!
 //! The Python side trains with real mitosis (`train.train_ds_mitosis`);
 //! this module reproduces Fig. 5a's *memory trajectory* analytically so
 //! the `fig5a_mitosis` bench can sweep schedules at paper scale: memory
 //! in units of one full softmax is K(t)·alive_frac(t), cloning doubles
 //! K and pruning decays alive_frac toward the terminal sparsity.
+//! `MitosisEngine` instantiates the sparsity statistics of one phase
+//! (K experts at that phase's end-of-phase occupancy) as a servable
+//! DS-Softmax, so mid-training checkpoints answer queries through the
+//! same batched `SoftmaxEngine` API as every other engine.
+
+use crate::model::dssoftmax::DsSoftmax;
+use crate::model::SoftmaxEngine;
+use crate::query::{MatrixView, Route, TopKBuf};
+use crate::sparse::ExpertSet;
+use crate::util::rng::Rng;
 
 /// One phase of the schedule between clonings.
 #[derive(Clone, Copy, Debug)]
@@ -66,6 +78,85 @@ impl MitosisSchedule {
     pub fn naive_peak(&self) -> f64 {
         self.phases.last().map(|p| p.k as f64).unwrap_or(0.0)
     }
+
+    /// Fraction of classes alive per expert at the *end* of `phase`.
+    pub fn alive_at_phase_end(&self, phase: usize) -> f64 {
+        assert!(phase < self.phases.len(), "phase {phase} out of range");
+        let (traj, _) = self.trajectory();
+        let epoch_end: usize = self.phases[..=phase].iter().map(|p| p.epochs).sum();
+        assert!(epoch_end > 0, "phases through {phase} have zero epochs");
+        (traj[epoch_end - 1] / self.phases[phase].k as f64).clamp(0.0, 1.0)
+    }
+}
+
+/// A servable snapshot of one mitosis phase: a synthetic [`ExpertSet`]
+/// with that phase's K and per-expert occupancy, answering queries by
+/// delegating to an inner [`DsSoftmax`].  This is what a mid-training
+/// checkpoint looks like at serving time.
+pub struct MitosisEngine {
+    pub ds: DsSoftmax,
+    pub phase: usize,
+    /// Per-expert alive fraction the snapshot was built at.
+    pub alive_frac: f64,
+}
+
+impl MitosisEngine {
+    pub fn at_phase(
+        schedule: &MitosisSchedule,
+        phase: usize,
+        n_classes: usize,
+        d: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let k = schedule.phases[phase].k;
+        let alive = schedule.alive_at_phase_end(phase);
+        // mean redundancy m = K·alive (each expert holds alive·N of the
+        // N classes); clamp to the valid [1, K] range of `synthetic`.
+        let m = (k as f64 * alive).clamp(1.0, k as f64);
+        let set = ExpertSet::synthetic(n_classes, d, k, m, rng);
+        Self { ds: DsSoftmax::new(set), phase, alive_frac: alive }
+    }
+}
+
+impl SoftmaxEngine for MitosisEngine {
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        self.ds.query_batch(hs, k, out);
+    }
+
+    fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
+        self.ds.route_batch(hs, out);
+    }
+
+    fn run_expert_batch(
+        &self,
+        expert: usize,
+        hs: MatrixView<'_>,
+        gates: &[f32],
+        k: usize,
+        out: &mut TopKBuf,
+    ) -> anyhow::Result<()> {
+        self.ds.run_expert_batch(expert, hs, gates, k, out)
+    }
+
+    fn flops_per_query(&self) -> u64 {
+        self.ds.flops_per_query()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.ds.n_classes()
+    }
+
+    fn dim(&self) -> usize {
+        self.ds.dim()
+    }
+
+    fn k_experts(&self) -> usize {
+        self.ds.k_experts()
+    }
+
+    fn name(&self) -> &'static str {
+        "mitosis"
+    }
 }
 
 #[cfg(test)]
@@ -108,5 +199,23 @@ mod tests {
         let (traj, _) = s.trajectory();
         let last = *traj.last().unwrap();
         assert!(last >= 4.0 * 0.5 - 1e-9);
+    }
+
+    #[test]
+    fn engine_snapshot_serves_queries() {
+        let s = MitosisSchedule::paper(2, 8, 0.1);
+        let mut rng = Rng::new(9);
+        let e = MitosisEngine::at_phase(&s, 2, 128, 16, &mut rng);
+        assert_eq!(e.k_experts(), 8);
+        assert_eq!(e.n_classes(), 128);
+        e.ds.set.validate().unwrap();
+        let h = rng.normal_vec(16, 1.0);
+        let top = e.query(&h, 5);
+        assert_eq!(top.len(), 5);
+        assert!(e.route(&h).expert() < 8);
+        // later phases are sparser per expert than phase 0
+        let mut rng2 = Rng::new(9);
+        let e0 = MitosisEngine::at_phase(&s, 0, 128, 16, &mut rng2);
+        assert!(e.alive_frac <= e0.alive_frac);
     }
 }

@@ -1,10 +1,15 @@
 //! Inference engines: the DS-Softmax engine (the paper's contribution)
 //! and every baseline it is evaluated against in Tables 1–5.
 //!
-//! All engines implement [`SoftmaxEngine`]: given a context vector `h`,
-//! return the top-k `(class, probability)` pairs, and report their
-//! analytic FLOPs per query so the benches can print the paper's
-//! "Speedup" columns from one audited source (`crate::flops`).
+//! All engines — and the coordinator's production batch executors —
+//! implement one trait, [`SoftmaxEngine`], whose primary shape is
+//! *batched*: `route_batch` gates a packed batch of context vectors
+//! into [`Route`]s, and `query_batch` writes per-row top-k results into
+//! a caller-owned [`TopKBuf`] arena.  Single-row `query`/`route` are
+//! provided wrappers, so existing callers keep working.  The serving
+//! coordinator additionally uses `run_expert_batch` — execution of a
+//! batch already routed to one expert — which is a provided method for
+//! single-expert baselines and overridden by the expert engines.
 
 pub mod dsoftmax;
 pub mod dssoftmax;
@@ -12,10 +17,65 @@ pub mod full;
 pub mod mitosis;
 pub mod svd;
 
-/// A top-k softmax inference engine.
+use crate::query::{MatrixView, Route, TopKBuf};
+
+/// A top-k softmax inference engine with a batched hot path.
 pub trait SoftmaxEngine: Send + Sync {
-    /// Top-k classes for one context vector, descending probability.
-    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)>;
+    /// Top-k classes for a batch of context vectors (rows of `hs`),
+    /// descending probability per row, written into `out`.  The buffer
+    /// is reset to `hs.rows × k` on entry; storage is reused, so a
+    /// long-lived `out` makes this allocation-free for the native
+    /// engines.
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf);
+
+    /// Gate a batch: one [`Route`] per row of `hs` (`out.len()` must
+    /// equal `hs.rows`).  Single-expert baselines route everything to
+    /// expert 0 with gate 1.0.
+    fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
+        assert_eq!(hs.rows, out.len(), "route_batch shape mismatch");
+        for r in out.iter_mut() {
+            *r = Route::single(0, 1.0);
+        }
+    }
+
+    /// Execute a batch whose rows were all routed to `expert` with the
+    /// given per-row gate values (the coordinator's per-expert flush).
+    /// Resets `out` to `hs.rows × k`.  The default ignores the routing
+    /// (correct for single-expert engines) and answers each row
+    /// directly.
+    fn run_expert_batch(
+        &self,
+        expert: usize,
+        hs: MatrixView<'_>,
+        gates: &[f32],
+        k: usize,
+        out: &mut TopKBuf,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            hs.rows == gates.len(),
+            "run_expert_batch: {} rows vs {} gates",
+            hs.rows,
+            gates.len()
+        );
+        let _ = expert;
+        self.query_batch(hs, k, out);
+        Ok(())
+    }
+
+    /// Single-row convenience: gate one context vector.
+    fn route(&self, h: &[f32]) -> Route {
+        let mut out = [Route::empty()];
+        self.route_batch(MatrixView::single(h), &mut out);
+        out[0]
+    }
+
+    /// Single-row convenience: top-k `(class, prob)` for one context
+    /// vector (allocates the result; use `query_batch` on hot paths).
+    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let mut out = TopKBuf::with_shape(1, k);
+        self.query_batch(MatrixView::single(h), k, &mut out);
+        out.row_vec(0)
+    }
 
     /// Analytic FLOPs for one query (see `crate::flops` conventions).
     fn flops_per_query(&self) -> u64;
@@ -25,6 +85,11 @@ pub trait SoftmaxEngine: Send + Sync {
 
     /// Context dimensionality d.
     fn dim(&self) -> usize;
+
+    /// Number of first-level experts (1 for single-expert baselines).
+    fn k_experts(&self) -> usize {
+        1
+    }
 
     fn name(&self) -> &'static str;
 }
@@ -77,5 +142,6 @@ mod tests {
         }
         let ds = DsSoftmax::new(set);
         assert_eq!(ds.query(&h, 1)[0].0, target as u32);
+        assert_eq!(ds.route(&h).expert(), owner);
     }
 }

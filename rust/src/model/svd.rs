@@ -13,6 +13,7 @@
 //! refinement of the top 5% / 10% classes (§3.5).
 
 use crate::model::SoftmaxEngine;
+use crate::query::{MatrixView, TopKBuf};
 use crate::tensor::{dot, softmax_inplace, Matrix};
 use crate::util::topk::{topk, TopK};
 
@@ -56,10 +57,10 @@ impl SvdSoftmax {
         }
         out
     }
-}
 
-impl SoftmaxEngine for SvdSoftmax {
-    fn query(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
+    /// One row's preview → refine → top-k pipeline (the engine's unit
+    /// of work; `query_batch` maps it over the batch).
+    fn query_row(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
         let ht = self.rotate(h);
         let n = self.b.rows;
         let w = self.window;
@@ -82,6 +83,18 @@ impl SoftmaxEngine for SvdSoftmax {
             heap.push(logits[r as usize], r);
         }
         heap.into_sorted().into_iter().map(|(p, i)| (i, p)).collect()
+    }
+}
+
+impl SoftmaxEngine for SvdSoftmax {
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        assert_eq!(hs.cols, self.b.cols, "row width vs model dim");
+        out.reset(hs.rows, k);
+        for r in 0..hs.rows {
+            for (id, p) in self.query_row(hs.row(r), k) {
+                out.push(r, id, p);
+            }
+        }
     }
 
     fn flops_per_query(&self) -> u64 {

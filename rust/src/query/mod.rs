@@ -1,0 +1,435 @@
+//! The unified batched, zero-allocation query API shared by every
+//! inference engine and the serving coordinator.
+//!
+//! Three ideas:
+//!
+//! * [`Route`] — the gating outcome, generalized from a single-expert
+//!   decision to the paper's top-m *overlapping experts* form (§2.2:
+//!   classes may live in several experts, and a gate may hedge across
+//!   them).  `m = 1` is the default everywhere and preserves the
+//!   original single-expert semantics; the type is `Copy` and holds its
+//!   assignments inline, so routing a batch never touches the heap.
+//! * [`TopKBuf`] — a caller-owned, reusable flat `(ids, probs, lens)`
+//!   arena for batched top-k results.  One allocation amortized over
+//!   the buffer's lifetime instead of `Vec<Vec<(u32, f32)>>` per batch.
+//! * [`MatrixView`] — a borrowed row-major batch of context vectors, so
+//!   `query_batch`/`route_batch` accept packed rows without copying.
+//!
+//! [`RowPack`] gathers non-contiguous rows (e.g. the batcher's queued
+//! queries) into a reusable contiguous buffer, and [`with_scratch`]
+//! hands engines a per-thread scratch (gate logits, expert logits,
+//! top-k heap) so the hot loop allocates nothing once warm.
+
+use std::cell::RefCell;
+
+use crate::tensor::Matrix;
+use crate::util::topk::TopK;
+
+/// Maximum number of overlapping experts a single [`Route`] can carry.
+/// The paper's mixtures are strongly top-1 dominated; 4 leaves room for
+/// future top-m serving without a heap allocation.
+pub const MAX_ROUTE_WIDTH: usize = 4;
+
+/// One (expert, gate value) assignment within a [`Route`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExpertGate {
+    pub expert: u32,
+    pub gate: f32,
+}
+
+/// Gating outcome for one query: the top-m experts (descending gate
+/// value) the query should be executed against.  `m = 1` reproduces the
+/// original `GateDecision` semantics; [`Route::primary`] is that case's
+/// accessor.  Inline storage — `Copy`, no allocation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Route {
+    slots: [ExpertGate; MAX_ROUTE_WIDTH],
+    width: u8,
+}
+
+impl Default for Route {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl Route {
+    pub const fn empty() -> Self {
+        Self {
+            slots: [ExpertGate { expert: 0, gate: 0.0 }; MAX_ROUTE_WIDTH],
+            width: 0,
+        }
+    }
+
+    /// The single-expert route (the `m = 1` common case).
+    pub fn single(expert: usize, gate: f32) -> Self {
+        let mut r = Self::empty();
+        r.push(expert, gate);
+        r
+    }
+
+    /// Append an assignment.  Callers push in descending gate order.
+    pub fn push(&mut self, expert: usize, gate: f32) {
+        assert!(
+            (self.width as usize) < MAX_ROUTE_WIDTH,
+            "route width exceeds MAX_ROUTE_WIDTH ({MAX_ROUTE_WIDTH})"
+        );
+        self.slots[self.width as usize] = ExpertGate { expert: expert as u32, gate };
+        self.width += 1;
+    }
+
+    pub fn width(&self) -> usize {
+        self.width as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.width == 0
+    }
+
+    /// All assignments, descending gate value.
+    pub fn experts(&self) -> &[ExpertGate] {
+        &self.slots[..self.width as usize]
+    }
+
+    /// The highest-gate assignment.
+    pub fn primary(&self) -> ExpertGate {
+        assert!(self.width > 0, "primary() on an empty route");
+        self.slots[0]
+    }
+
+    /// Primary expert index (the original `GateDecision::expert`).
+    pub fn expert(&self) -> usize {
+        self.primary().expert as usize
+    }
+
+    /// Primary gate value (the original `GateDecision::gate_value`).
+    pub fn gate_value(&self) -> f32 {
+        self.primary().gate
+    }
+}
+
+/// Borrowed row-major batch of context vectors: `rows × cols` over one
+/// contiguous `&[f32]`.
+#[derive(Clone, Copy, Debug)]
+pub struct MatrixView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    data: &'a [f32],
+}
+
+impl<'a> MatrixView<'a> {
+    pub fn new(data: &'a [f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatrixView shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// A 1×d view over a single context vector.
+    pub fn single(h: &'a [f32]) -> Self {
+        Self { rows: 1, cols: h.len(), data: h }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+}
+
+impl<'a> From<&'a Matrix> for MatrixView<'a> {
+    fn from(m: &'a Matrix) -> Self {
+        Self { rows: m.rows, cols: m.cols, data: &m.data }
+    }
+}
+
+/// Caller-owned arena for batched top-k results: flat `ids`/`probs`
+/// with a per-row stride of `k` and a per-row valid length (an expert
+/// may hold fewer than k classes).  `reset` re-shapes in place; storage
+/// is reused across batches, so a long-lived buffer makes `query_batch`
+/// allocation-free once warm.
+#[derive(Default)]
+pub struct TopKBuf {
+    k: usize,
+    rows: usize,
+    ids: Vec<u32>,
+    probs: Vec<f32>,
+    lens: Vec<u32>,
+}
+
+impl TopKBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_shape(rows: usize, k: usize) -> Self {
+        let mut b = Self::new();
+        b.reset(rows, k);
+        b
+    }
+
+    /// Re-shape to `rows × k` and clear every row.  Called by
+    /// `query_batch`/`run_expert_batch` on entry, so a reused buffer can
+    /// never leak rows from a previous (larger) batch.
+    pub fn reset(&mut self, rows: usize, k: usize) {
+        self.k = k;
+        self.rows = rows;
+        self.ids.clear();
+        self.ids.resize(rows * k, 0);
+        self.probs.clear();
+        self.probs.resize(rows * k, 0.0);
+        self.lens.clear();
+        self.lens.resize(rows, 0);
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Append one (id, prob) to `row`; entries are pushed in descending
+    /// probability order by the engines.
+    #[inline]
+    pub fn push(&mut self, row: usize, id: u32, prob: f32) {
+        let len = self.lens[row] as usize;
+        assert!(len < self.k, "row {row} already holds k={} entries", self.k);
+        let at = row * self.k + len;
+        self.ids[at] = id;
+        self.probs[at] = prob;
+        self.lens[row] = (len + 1) as u32;
+    }
+
+    /// Valid entry count of `row` (≤ k).
+    pub fn len(&self, row: usize) -> usize {
+        self.lens[row] as usize
+    }
+
+    /// Is the whole buffer zero rows?
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Borrow one row's (ids, probs), valid entries only.
+    pub fn row(&self, row: usize) -> (&[u32], &[f32]) {
+        let len = self.lens[row] as usize;
+        let start = row * self.k;
+        (&self.ids[start..start + len], &self.probs[start..start + len])
+    }
+
+    /// Owned copy of one row in the legacy `(class, prob)` shape.
+    pub fn row_vec(&self, row: usize) -> Vec<(u32, f32)> {
+        let (ids, probs) = self.row(row);
+        ids.iter().copied().zip(probs.iter().copied()).collect()
+    }
+
+    /// Owned copy of every row (tests / non-hot-path callers).
+    pub fn to_vecs(&self) -> Vec<Vec<(u32, f32)>> {
+        (0..self.rows).map(|r| self.row_vec(r)).collect()
+    }
+}
+
+/// Reusable gather buffer: packs scattered rows (e.g. the per-expert
+/// batch the coordinator assembles from queued queries) into contiguous
+/// storage viewable as a [`MatrixView`].  Capacity persists across
+/// `reset`, so steady-state packing is allocation-free.
+#[derive(Default)]
+pub struct RowPack {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl RowPack {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn reset(&mut self, cols: usize) {
+        self.data.clear();
+        self.rows = 0;
+        self.cols = cols;
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "RowPack row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn view(&self) -> MatrixView<'_> {
+        MatrixView::new(&self.data, self.rows, self.cols)
+    }
+}
+
+/// Per-thread scratch shared by the native engines: gate logits, dense
+/// logits, and a bounded top-k heap.  Buffers only grow (resize is a
+/// no-op once warm), so the steady-state hot path never allocates.
+pub struct QueryScratch {
+    pub gate: Vec<f32>,
+    pub logits: Vec<f32>,
+    pub heap: TopK,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<QueryScratch> = RefCell::new(QueryScratch {
+        gate: Vec::new(),
+        logits: Vec::new(),
+        heap: TopK::new(1),
+    });
+}
+
+/// Run `f` with this thread's [`QueryScratch`].  Not re-entrant: an
+/// engine must not call another engine's scratch-using path from inside
+/// `f` (none does — batch loops are flat).
+pub fn with_scratch<R>(f: impl FnOnce(&mut QueryScratch) -> R) -> R {
+    SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+/// Generic batched query for engines whose batch execution is
+/// expert-grouped (PJRT, mock): route every row, gather each expert's
+/// rows contiguously, run `run_expert_batch` per group, and scatter the
+/// results back into row order.
+pub fn query_batch_grouped(
+    engine: &dyn crate::model::SoftmaxEngine,
+    hs: MatrixView<'_>,
+    k: usize,
+    out: &mut TopKBuf,
+) -> anyhow::Result<()> {
+    out.reset(hs.rows, k);
+    if hs.rows == 0 {
+        return Ok(());
+    }
+    let mut routes = vec![Route::empty(); hs.rows];
+    engine.route_batch(hs, &mut routes);
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); engine.k_experts()];
+    for (r, route) in routes.iter().enumerate() {
+        groups[route.expert()].push(r);
+    }
+    let mut pack = RowPack::new();
+    let mut gates: Vec<f32> = Vec::new();
+    let mut tmp = TopKBuf::new();
+    for (expert, rows) in groups.iter().enumerate() {
+        if rows.is_empty() {
+            continue;
+        }
+        pack.reset(hs.cols);
+        gates.clear();
+        for &r in rows {
+            pack.push_row(hs.row(r));
+            gates.push(routes[r].gate_value());
+        }
+        engine.run_expert_batch(expert, pack.view(), &gates, k, &mut tmp)?;
+        for (i, &r) in rows.iter().enumerate() {
+            let (ids, probs) = tmp.row(i);
+            for (&id, &p) in ids.iter().zip(probs) {
+                out.push(r, id, p);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_single_matches_legacy_semantics() {
+        let r = Route::single(3, 0.75);
+        assert_eq!(r.width(), 1);
+        assert_eq!(r.expert(), 3);
+        assert_eq!(r.gate_value(), 0.75);
+        assert_eq!(r.experts(), &[ExpertGate { expert: 3, gate: 0.75 }]);
+    }
+
+    #[test]
+    fn route_top_m_keeps_order() {
+        let mut r = Route::empty();
+        r.push(7, 0.6);
+        r.push(1, 0.3);
+        r.push(4, 0.1);
+        assert_eq!(r.width(), 3);
+        assert_eq!(r.expert(), 7);
+        let gates: Vec<f32> = r.experts().iter().map(|e| e.gate).collect();
+        assert_eq!(gates, vec![0.6, 0.3, 0.1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "route width")]
+    fn route_overflow_panics() {
+        let mut r = Route::empty();
+        for i in 0..=MAX_ROUTE_WIDTH {
+            r.push(i, 0.1);
+        }
+    }
+
+    #[test]
+    fn matrix_view_rows() {
+        let data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let v = MatrixView::new(&data, 2, 3);
+        assert_eq!(v.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(v.row(1), &[4.0, 5.0, 6.0]);
+        let s = MatrixView::single(&data);
+        assert_eq!(s.rows, 1);
+        assert_eq!(s.cols, 6);
+    }
+
+    #[test]
+    fn topkbuf_push_and_read() {
+        let mut b = TopKBuf::with_shape(2, 3);
+        b.push(0, 10, 0.5);
+        b.push(0, 11, 0.3);
+        b.push(1, 20, 0.9);
+        assert_eq!(b.len(0), 2);
+        assert_eq!(b.row(0), (&[10u32, 11][..], &[0.5f32, 0.3][..]));
+        assert_eq!(b.row_vec(1), vec![(20, 0.9)]);
+    }
+
+    #[test]
+    fn topkbuf_reset_clears_stale_rows() {
+        let mut b = TopKBuf::with_shape(4, 2);
+        for r in 0..4 {
+            b.push(r, r as u32, 1.0);
+        }
+        b.reset(2, 2);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.len(0), 0);
+        assert_eq!(b.len(1), 0);
+        assert!(b.to_vecs().iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    #[should_panic(expected = "already holds")]
+    fn topkbuf_overflow_panics() {
+        let mut b = TopKBuf::with_shape(1, 1);
+        b.push(0, 0, 1.0);
+        b.push(0, 1, 0.5);
+    }
+
+    #[test]
+    fn rowpack_gathers_contiguously() {
+        let mut p = RowPack::new();
+        p.reset(2);
+        p.push_row(&[1.0, 2.0]);
+        p.push_row(&[3.0, 4.0]);
+        let v = p.view();
+        assert_eq!(v.rows, 2);
+        assert_eq!(v.row(1), &[3.0, 4.0]);
+        // reuse keeps capacity, drops contents
+        p.reset(2);
+        assert_eq!(p.rows(), 0);
+        assert_eq!(p.view().rows, 0);
+    }
+}

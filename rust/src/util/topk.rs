@@ -20,6 +20,18 @@ impl TopK {
         self.heap.clear();
     }
 
+    /// Re-target the heap to a new k in place, keeping the allocation
+    /// when shrinking and growing it at most once — the batched query
+    /// paths reuse one heap across batches of differing k.
+    pub fn set_k(&mut self, k: usize) {
+        assert!(k > 0);
+        self.k = k;
+        self.heap.clear();
+        if self.heap.capacity() < k {
+            self.heap.reserve_exact(k);
+        }
+    }
+
     pub fn k(&self) -> usize {
         self.k
     }
@@ -64,6 +76,19 @@ impl TopK {
         let mut v = self.heap.clone();
         v.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
         v
+    }
+
+    /// Sort the retained entries descending *in place* (no allocation)
+    /// and borrow them.  The heap order is destroyed: call [`clear`]
+    /// (or [`set_k`]) before the next round of pushes — every batched
+    /// engine loop does.
+    ///
+    /// [`clear`]: TopK::clear
+    /// [`set_k`]: TopK::set_k
+    pub fn sorted_in_place(&mut self) -> &[(f32, u32)] {
+        self.heap
+            .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        &self.heap
     }
 
     fn sift_up(&mut self, mut i: usize) {
@@ -166,6 +191,32 @@ mod tests {
         let r = h.sorted();
         assert_eq!(r.len(), 2);
         assert_eq!(r[0].0, 6.0);
+    }
+
+    #[test]
+    fn sorted_in_place_matches_sorted() {
+        let mut h = TopK::new(3);
+        h.push_slice(&[0.2, 0.9, 0.1, 0.7, 0.5]);
+        let want = h.sorted();
+        assert_eq!(h.sorted_in_place(), &want[..]);
+        // reuse after clear still works
+        h.clear();
+        h.push_slice(&[1.0, 3.0, 2.0]);
+        let top: Vec<f32> = h.sorted_in_place().iter().map(|&(s, _)| s).collect();
+        assert_eq!(top, vec![3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn set_k_retargets() {
+        let mut h = TopK::new(2);
+        h.push_slice(&[1.0, 2.0, 3.0]);
+        h.set_k(4);
+        assert_eq!(h.k(), 4);
+        h.push_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(h.sorted().len(), 3);
+        h.set_k(1);
+        h.push_slice(&[5.0, 9.0]);
+        assert_eq!(h.sorted(), vec![(9.0, 1)]);
     }
 
     #[test]

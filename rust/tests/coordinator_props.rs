@@ -50,11 +50,12 @@ fn prop_routing_deterministic_in_range() {
             let a = ds.route(&h);
             let b = ds.route(&h);
             prop_assert!(a == b, "routing not deterministic");
-            prop_assert!(a.expert < k, "expert out of range");
+            prop_assert!(a.width() == 1, "default route must be single-expert");
+            prop_assert!(a.expert() < k, "expert out of range");
             prop_assert!(
-                a.gate_value > 0.0 && a.gate_value <= 1.0,
+                a.gate_value() > 0.0 && a.gate_value() <= 1.0,
                 "gate value {} out of (0,1]",
-                a.gate_value
+                a.gate_value()
             );
         }
         Ok(())
@@ -157,7 +158,7 @@ fn metrics_utilization_consistent() {
     let mut counts = vec![0u64; 4];
     for _ in 0..300 {
         let h = rng.normal_vec(8, 1.0);
-        counts[reference.route(&h).expert] += 1;
+        counts[reference.route(&h).expert()] += 1;
         let _ = c.query(h, 1);
     }
     let u = c.metrics.utilization();

@@ -2,6 +2,8 @@
 //! HLO → contexts → DS-Softmax vs full softmax, all through PJRT.
 //! Skipped (with a notice) when the lm artifacts have not been built.
 
+#![cfg(feature = "pjrt")]
+
 use ds_softmax::artifacts::Manifest;
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;

@@ -6,6 +6,8 @@
 //! matches the native Rust engine bit-for-bit in ranking and to 1e-4 in
 //! probability.
 
+#![cfg(feature = "pjrt")]
+
 use ds_softmax::artifacts::Manifest;
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;
@@ -46,10 +48,10 @@ fn gate_hlo_matches_native() {
         let (probs, top1) = engine.gate(&h, bucket).unwrap();
         assert_eq!(probs.len(), bucket * m.k);
         for r in 0..bucket {
-            let dec = native.route(h.row(r));
-            assert_eq!(top1[r] as usize, dec.expert, "bucket {bucket} row {r}");
+            let route = native.route(h.row(r));
+            assert_eq!(top1[r] as usize, route.expert(), "bucket {bucket} row {r}");
             let row = &probs[r * m.k..(r + 1) * m.k];
-            assert!((row[dec.expert] - dec.gate_value).abs() < 1e-4);
+            assert!((row[route.expert()] - route.gate_value()).abs() < 1e-4);
             assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-4);
         }
     }

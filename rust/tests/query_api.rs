@@ -1,0 +1,172 @@
+//! Cross-engine contract of the unified batched query API:
+//!
+//! * `query_batch` must agree element-wise with per-row `query` for
+//!   every engine (ds, d-softmax, full, svd, mitosis) across batch
+//!   sizes including 0 and 1 — rows are independent, scratch reuse
+//!   leaks nothing across rows or engines;
+//! * a reused [`TopKBuf`] never exposes stale rows from an earlier,
+//!   larger batch;
+//! * `route_batch` matches single-row `route`;
+//! * the expert-grouped execution helper (the PJRT/mock path) produces
+//!   the same answers as the direct batched path.
+
+use ds_softmax::model::dsoftmax::DSoftmax;
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::full::FullSoftmax;
+use ds_softmax::model::mitosis::{MitosisEngine, MitosisSchedule};
+use ds_softmax::model::svd::SvdSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::query::{query_batch_grouped, MatrixView, Route, TopKBuf};
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::tensor::Matrix;
+use ds_softmax::util::rng::Rng;
+
+const N: usize = 256;
+const D: usize = 16;
+
+fn engines(rng: &mut Rng) -> Vec<Box<dyn SoftmaxEngine>> {
+    let w = Matrix::random(N, D, rng, 0.5);
+    let schedule = MitosisSchedule::paper(2, 8, 0.1);
+    vec![
+        Box::new(DsSoftmax::new(ExpertSet::synthetic(N, D, 4, 1.2, rng))),
+        Box::new(FullSoftmax::new(w.clone())),
+        // full refinement → the SVD engine is exact and deterministic
+        Box::new(SvdSoftmax::new(&w, D, 1.0)),
+        Box::new(DSoftmax::new(&w, &DSoftmax::paper_plan(N, D))),
+        Box::new(MitosisEngine::at_phase(&schedule, 2, N, D, rng)),
+    ]
+}
+
+fn pack(rows: &[Vec<f32>]) -> Vec<f32> {
+    rows.iter().flatten().copied().collect()
+}
+
+#[test]
+fn query_batch_agrees_with_single_query_across_engines() {
+    let mut rng = Rng::new(101);
+    let engines = engines(&mut rng);
+    let mut out = TopKBuf::new();
+    for e in &engines {
+        // fixed edge sizes plus random ones
+        let mut sizes = vec![0usize, 1, 2];
+        for _ in 0..3 {
+            sizes.push(1 + rng.below(24));
+        }
+        for &b in &sizes {
+            let hs: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(D, 1.0)).collect();
+            let packed = pack(&hs);
+            let k = 1 + rng.below(8);
+            e.query_batch(MatrixView::new(&packed, b, D), k, &mut out);
+            assert_eq!(out.rows(), b, "{}: batch rows", e.name());
+            assert_eq!(out.k(), k);
+            for (r, h) in hs.iter().enumerate() {
+                let want = e.query(h, k);
+                assert_eq!(
+                    out.row_vec(r),
+                    want,
+                    "{}: row {r} of batch {b} diverged from single query",
+                    e.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn query_batch_rows_are_order_independent() {
+    // the same row must get the same answer regardless of its position
+    // or neighbors (no scratch leakage between rows)
+    let mut rng = Rng::new(102);
+    let engines = engines(&mut rng);
+    for e in &engines {
+        let a = rng.normal_vec(D, 1.0);
+        let b = rng.normal_vec(D, 1.0);
+        let fwd = pack(&[a.clone(), b.clone()]);
+        let rev = pack(&[b.clone(), a.clone()]);
+        let mut out_f = TopKBuf::new();
+        let mut out_r = TopKBuf::new();
+        e.query_batch(MatrixView::new(&fwd, 2, D), 5, &mut out_f);
+        e.query_batch(MatrixView::new(&rev, 2, D), 5, &mut out_r);
+        assert_eq!(out_f.row_vec(0), out_r.row_vec(1), "{}", e.name());
+        assert_eq!(out_f.row_vec(1), out_r.row_vec(0), "{}", e.name());
+    }
+}
+
+#[test]
+fn topkbuf_reuse_leaves_no_stale_rows() {
+    let mut rng = Rng::new(103);
+    let ds = DsSoftmax::new(ExpertSet::synthetic(N, D, 4, 1.2, &mut rng));
+    let mut out = TopKBuf::new();
+
+    let big: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(D, 1.0)).collect();
+    let packed_big = pack(&big);
+    ds.query_batch(MatrixView::new(&packed_big, 8, D), 6, &mut out);
+    assert_eq!(out.rows(), 8);
+
+    // a smaller second batch into the same buffer
+    let small: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(D, 1.0)).collect();
+    let packed_small = pack(&small);
+    ds.query_batch(MatrixView::new(&packed_small, 3, D), 4, &mut out);
+    assert_eq!(out.rows(), 3, "buffer must shrink to the new batch");
+    assert_eq!(out.k(), 4);
+    assert_eq!(out.to_vecs().len(), 3);
+    for (r, h) in small.iter().enumerate() {
+        assert_eq!(out.row_vec(r), ds.query(h, 4), "row {r} stale after reuse");
+    }
+
+    // and an empty batch leaves an empty buffer
+    ds.query_batch(MatrixView::new(&[], 0, D), 4, &mut out);
+    assert_eq!(out.rows(), 0);
+    assert!(out.to_vecs().is_empty());
+}
+
+#[test]
+fn route_batch_matches_single_route() {
+    let mut rng = Rng::new(104);
+    let engines = engines(&mut rng);
+    for e in &engines {
+        let hs: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(D, 1.0)).collect();
+        let packed = pack(&hs);
+        let mut routes = vec![Route::empty(); 9];
+        e.route_batch(MatrixView::new(&packed, 9, D), &mut routes);
+        for (r, h) in hs.iter().enumerate() {
+            assert_eq!(routes[r], e.route(h), "{}: row {r}", e.name());
+            assert!(routes[r].expert() < e.k_experts(), "{}", e.name());
+        }
+        // empty batch is a no-op
+        e.route_batch(MatrixView::new(&[], 0, D), &mut []);
+    }
+}
+
+#[test]
+fn grouped_execution_matches_direct_batch() {
+    // query_batch_grouped is the pathway of the expert-grouped engines
+    // (PJRT, mock); over the native DS engine it must reproduce the
+    // direct batched path exactly.
+    let mut rng = Rng::new(105);
+    let ds = DsSoftmax::new(ExpertSet::synthetic(N, D, 4, 1.2, &mut rng));
+    let hs: Vec<Vec<f32>> = (0..20).map(|_| rng.normal_vec(D, 1.0)).collect();
+    let packed = pack(&hs);
+    let view = MatrixView::new(&packed, 20, D);
+    let mut direct = TopKBuf::new();
+    ds.query_batch(view, 5, &mut direct);
+    let mut grouped = TopKBuf::new();
+    query_batch_grouped(&ds, view, 5, &mut grouped).unwrap();
+    assert_eq!(direct.to_vecs(), grouped.to_vecs());
+}
+
+#[test]
+fn run_expert_batch_rejects_shape_mismatch() {
+    let mut rng = Rng::new(106);
+    let ds = DsSoftmax::new(ExpertSet::synthetic(N, D, 4, 1.2, &mut rng));
+    let h = rng.normal_vec(D, 1.0);
+    let mut out = TopKBuf::new();
+    // gates length != rows
+    assert!(ds
+        .run_expert_batch(0, MatrixView::single(&h), &[0.5, 0.5], 3, &mut out)
+        .is_err());
+    // expert out of range
+    assert!(ds
+        .run_expert_batch(99, MatrixView::single(&h), &[0.5], 3, &mut out)
+        .is_err());
+}
