@@ -8,6 +8,7 @@
 //!   top-k             bounded-heap selection
 //!   full query        gate + expert + topk
 //!   query_batch       the zero-allocation batched path (TopKBuf arena)
+//!   sharded S=4       expert-parallel scatter/merge (serial + pooled)
 //!   coordinator       submit→complete round-trip (batching overhead)
 //!
 //!     cargo bench --bench micro_hotpath
@@ -20,6 +21,7 @@ use ds_softmax::model::dssoftmax::{DsScratch, DsSoftmax};
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, Route, TopKBuf};
+use ds_softmax::shard::{ShardPlan, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::tensor::{dot, softmax_inplace, Matrix};
 use ds_softmax::util::rng::Rng;
@@ -182,6 +184,46 @@ fn main() {
         ),
     ]);
 
+    // expert-parallel sharded path (S=4): serial dispatch isolates the
+    // scatter/merge overhead of sharding vs the single-engine batched
+    // baseline; pooled dispatch adds the per-shard handoff and shows
+    // wall clock with one dedicated worker per shard
+    let plan = ShardPlan::greedy(&ds.set, 4);
+    let sharded = ShardedEngine::new(ds.set.clone(), plan.clone()).expect("sharded engine");
+    let mut sh_out = TopKBuf::new();
+    sharded.query_batch(view, 10, &mut sh_out); // warm scratch pool
+    let m = bench_batched("sharded serial", 10, 500, bsz, || {
+        sharded.query_batch(view, 10, &mut sh_out);
+        std::hint::black_box(&sh_out);
+    });
+    table.row(vec![
+        "sharded S=4 serial".into(),
+        format!("B={bsz} N=10048 K=64"),
+        format!("{:.1}µs/q", m.median_ns / 1e3),
+        format!(
+            "{} (overhead {:.2}x of query_batch)",
+            fmt_qps(m.median_ns),
+            m.median_ns / ds_batched
+        ),
+    ]);
+    let pooled =
+        ShardedEngine::with_pools(ds.set.clone(), plan, 1).expect("sharded pools");
+    pooled.query_batch(view, 10, &mut sh_out); // warm pools + scratch
+    let m = bench_batched("sharded pooled", 10, 500, bsz, || {
+        pooled.query_batch(view, 10, &mut sh_out);
+        std::hint::black_box(&sh_out);
+    });
+    table.row(vec![
+        "sharded S=4 pooled".into(),
+        format!("B={bsz} N=10048 K=64"),
+        format!("{:.1}µs/q", m.median_ns / 1e3),
+        format!(
+            "{} ({:.2}x of query_batch)",
+            fmt_qps(m.median_ns),
+            m.median_ns / ds_batched
+        ),
+    ]);
+
     // coordinator round-trip: batching + channel + threadpool overhead
     let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(ds.set.clone())));
     let c = Coordinator::start(engine, CoordinatorConfig::default());
@@ -209,4 +251,7 @@ fn main() {
     ]);
 
     table.print();
+    // counters + quantiles exported the same way `dss serve` does on
+    // shutdown — keeps the bench's JSON trail machine-readable
+    println!("\ncoordinator metrics snapshot: {}", c.metrics.snapshot().render());
 }

@@ -4,7 +4,11 @@
 //! (Rust) exactly as the paper re-implemented all in NumPy (§3.5).
 //!
 //! Reported per method: task value proxy (top-1 agreement with the exact
-//! softmax), FLOPs speedup, and measured per-query latency.
+//! softmax), FLOPs speedup, and measured per-query latency.  The DS row
+//! also carries a "shard4 b32" column — the same batch-32 workload
+//! through an expert-parallel `ShardedEngine` (S=4, serial dispatch) —
+//! so the BENCH trail captures sharding overhead vs the single-engine
+//! baseline.
 //!
 //!     cargo bench --bench table4_latency
 
@@ -17,6 +21,7 @@ use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::svd::SvdSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, TopKBuf};
+use ds_softmax::shard::{ShardPlan, ShardedEngine};
 use ds_softmax::tensor::Matrix;
 use ds_softmax::util::rng::Rng;
 
@@ -91,6 +96,11 @@ fn main() {
             ClusteredWorld::with_head_redundancy(t.n, t.d, 64, t.zipf, 1.0, t.n / 25, &mut rng);
         let full = FullSoftmax::new(world.w.clone());
         let ds = DsSoftmax::new(world.set.clone());
+        // expert-parallel DS across 4 shards (serial dispatch, so the
+        // column reads as pure sharding overhead vs the DS-64 baseline)
+        let ds_shard4 =
+            ShardedEngine::new(world.set.clone(), ShardPlan::greedy(&world.set, 4))
+                .expect("shard plan");
         let svd5 = svd_engine(&world.w, 16, 0.05);
         let svd10 = svd_engine(&world.w, 16, 0.10);
         let dsm = (t.zipf > 0.5).then(|| DSoftmax::new(&world.w, &DSoftmax::paper_plan(t.n, t.d)));
@@ -140,6 +150,7 @@ fn main() {
                 "FLOPs speedup",
                 "latency ms",
                 "batch32 ms/q",
+                "shard4 b32 ms/q",
                 "paper ms (speedup)",
             ],
         );
@@ -151,6 +162,7 @@ fn main() {
             "-".into(),
             format!("{:.3}", lat(&full)),
             format!("{:.3}", lat_batch(&full)),
+            "-".into(),
             p.1.into(),
         ]);
         table.row(vec![
@@ -159,6 +171,7 @@ fn main() {
             fmt_speedup(full_flops / ds.flops_per_query() as f64),
             format!("{:.3}", lat(&ds)),
             format!("{:.3}", lat_batch(&ds)),
+            format!("{:.3}", lat_batch(&ds_shard4)),
             p.2.into(),
         ]);
         table.row(vec![
@@ -167,6 +180,7 @@ fn main() {
             fmt_speedup(full_flops / svd5.flops_per_query() as f64),
             format!("{:.3}", lat(&svd5)),
             format!("{:.3}", lat_batch(&svd5)),
+            "-".into(),
             p.3.into(),
         ]);
         table.row(vec![
@@ -175,6 +189,7 @@ fn main() {
             fmt_speedup(full_flops / svd10.flops_per_query() as f64),
             format!("{:.3}", lat(&svd10)),
             format!("{:.3}", lat_batch(&svd10)),
+            "-".into(),
             p.4.into(),
         ]);
         match &dsm {
@@ -184,12 +199,14 @@ fn main() {
                 fmt_speedup(full_flops / dsm.flops_per_query() as f64),
                 format!("{:.3}", lat(dsm)),
                 format!("{:.3}", lat_batch(dsm)),
+                "-".into(),
                 p.5.into(),
             ]),
             None => table.row(vec![
                 "D-softmax".into(),
                 "-".into(),
                 "- (no speedup on uniform classes)".into(),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 p.5.into(),

@@ -181,10 +181,12 @@ impl Manifest {
         anyhow::ensure!(class_ids.len() == k * p, "class_ids shape mismatch");
         anyhow::ensure!(valid.len() == k, "valid shape mismatch");
         let experts = (0..k)
-            .map(|e| SparseExpert {
-                weights: Matrix::from_vec(p, d, packed[e * p * d..(e + 1) * p * d].to_vec()),
-                class_ids: class_ids[e * p..(e + 1) * p].to_vec(),
-                valid: valid[e] as usize,
+            .map(|e| {
+                SparseExpert::new(
+                    Matrix::from_vec(p, d, packed[e * p * d..(e + 1) * p * d].to_vec()),
+                    class_ids[e * p..(e + 1) * p].to_vec(),
+                    valid[e] as usize,
+                )
             })
             .collect();
         Ok(ExpertSet {

@@ -2,6 +2,11 @@
 //! flush policy (the serving-system half of the paper's speedup — the
 //! packed expert matmul amortizes across a batch only if the router can
 //! accumulate same-expert queries without hurting tail latency).
+//!
+//! Per-expert queues are also what keeps sharded dispatch simple: a
+//! flushed batch shares one expert, and the engine's `ShardPlan` maps
+//! each expert to exactly one shard, so every flush is shard-local
+//! without a second routing layer.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -79,6 +84,12 @@ impl Batcher {
             }
         }
         out
+    }
+
+    /// Deepest single per-expert queue — a hot-expert backlog signal
+    /// (the aggregate gauge is `Metrics::queue_depth`).
+    pub fn max_depth(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).max().unwrap_or(0)
     }
 
     /// Earliest deadline across queues — how long the dispatcher may
@@ -179,6 +190,17 @@ mod tests {
         let total: usize = all.iter().map(|(_, v)| v.len()).sum();
         assert_eq!(total, 5);
         assert_eq!(b.pending, 0);
+    }
+
+    #[test]
+    fn max_depth_tracks_hot_expert() {
+        let mut b = Batcher::new(3, BatchPolicy { max_batch: 100, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        assert_eq!(b.max_depth(), 0);
+        b.push(q(1, now));
+        b.push(q(1, now));
+        b.push(q(2, now));
+        assert_eq!(b.max_depth(), 2);
     }
 
     #[test]

@@ -62,6 +62,14 @@ impl SoftmaxEngine for NativeBatchEngine {
         self.ds.k_experts()
     }
 
+    fn n_shards(&self) -> usize {
+        self.ds.n_shards()
+    }
+
+    fn shard_of(&self, expert: usize) -> usize {
+        self.ds.shard_of(expert)
+    }
+
     fn name(&self) -> &'static str {
         "native-batch"
     }

@@ -1,10 +1,17 @@
 //! Coordinator metrics plane: stage latencies, batch shapes, routing
-//! distribution, rejections.  Lock scope is one histogram at a time; the
-//! hot path records with a single mutex acquisition per stage.
+//! distribution, per-shard load, backlog gauge, rejections.  Lock scope
+//! is one histogram at a time; the hot path records with a single mutex
+//! acquisition per stage (counters and the gauge are lock-free atomics).
+//!
+//! Counters are write-only on the hot path; [`Metrics::snapshot`] is the
+//! export path — a plain-struct copy (plus histogram quantiles) that
+//! renders as JSON through [`crate::util::json`], printed by `dss serve`
+//! and the bench harness on shutdown.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::util::json::Json;
 use crate::util::stats::LatencyHisto;
 
 #[derive(Default)]
@@ -14,8 +21,18 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
     pub batched_queries: AtomicU64,
+    /// backlog gauge: queries admitted but not yet flushed (ingress +
+    /// batcher pending), set by the dispatcher each loop
+    pub queue_depth: AtomicU64,
+    /// deepest single per-expert queue (`Batcher::max_depth`) — a
+    /// hot-expert skew signal that motivates a weighted re-plan
+    pub hot_queue_depth: AtomicU64,
     /// routing counts per expert (fixed at construction)
     pub per_expert: Vec<AtomicU64>,
+    /// queries flushed per shard (len = shard count; 1 when unsharded)
+    pub per_shard: Vec<AtomicU64>,
+    /// batches flushed per shard
+    pub per_shard_batches: Vec<AtomicU64>,
     pub queue_latency: Mutex<LatencyHisto>,
     pub execute_latency: Mutex<LatencyHisto>,
     pub total_latency: Mutex<LatencyHisto>,
@@ -23,8 +40,16 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn new(k: usize) -> Self {
+        Self::with_shards(k, 1)
+    }
+
+    /// Metrics plane for `k` experts executing across `shards` shards.
+    pub fn with_shards(k: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
         Self {
             per_expert: (0..k).map(|_| AtomicU64::new(0)).collect(),
+            per_shard: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            per_shard_batches: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             ..Default::default()
         }
     }
@@ -38,6 +63,20 @@ impl Metrics {
         self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// One flushed batch of `size` queries on `shard`.
+    pub fn record_shard_batch(&self, shard: usize, size: usize) {
+        self.per_shard[shard].fetch_add(size as u64, Ordering::Relaxed);
+        self.per_shard_batches[shard].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn set_hot_queue_depth(&self, depth: usize) {
+        self.hot_queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -47,13 +86,18 @@ impl Metrics {
         }
     }
 
-    /// Empirical utilization u_k (paper §2.3) from routing counts.
-    pub fn utilization(&self) -> Vec<f64> {
-        let counts: Vec<u64> = self
-            .per_expert
+    /// Raw per-expert routing counts — the input to load-aware
+    /// re-planning (`shard::ShardPlan::weighted`).
+    pub fn routed_counts(&self) -> Vec<u64> {
+        self.per_expert
             .iter()
             .map(|c| c.load(Ordering::Relaxed))
-            .collect();
+            .collect()
+    }
+
+    /// Empirical utilization u_k (paper §2.3) from routing counts.
+    pub fn utilization(&self) -> Vec<f64> {
+        let counts = self.routed_counts();
         let total: u64 = counts.iter().sum();
         counts
             .iter()
@@ -61,18 +105,139 @@ impl Metrics {
             .collect()
     }
 
+    /// Plain-struct copy of every counter plus histogram quantiles.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_queries: self.batched_queries.load(Ordering::Relaxed),
+            mean_batch: self.mean_batch_size(),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            hot_queue_depth: self.hot_queue_depth.load(Ordering::Relaxed),
+            per_expert: self.routed_counts(),
+            per_shard: self
+                .per_shard
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            per_shard_batches: self
+                .per_shard_batches
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            queue: HistoSnapshot::of(&self.queue_latency.lock().unwrap()),
+            execute: HistoSnapshot::of(&self.execute_latency.lock().unwrap()),
+            total: HistoSnapshot::of(&self.total_latency.lock().unwrap()),
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "submitted={} completed={} rejected={} batches={} mean_batch={:.2}\n  queue: {}\n  exec:  {}\n  total: {}",
+            "submitted={} completed={} rejected={} batches={} mean_batch={:.2} queue_depth={}\n  shards: {:?} queries / {:?} batches\n  queue: {}\n  exec:  {}\n  total: {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
+            self.queue_depth.load(Ordering::Relaxed),
+            self.per_shard
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect::<Vec<_>>(),
+            self.per_shard_batches
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect::<Vec<_>>(),
             self.queue_latency.lock().unwrap().summary(),
             self.execute_latency.lock().unwrap().summary(),
             self.total_latency.lock().unwrap().summary(),
         )
+    }
+}
+
+/// Quantile summary of one latency histogram.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistoSnapshot {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistoSnapshot {
+    fn of(h: &LatencyHisto) -> Self {
+        Self {
+            count: h.count(),
+            mean_ns: h.mean_ns(),
+            p50_ns: h.percentile_ns(0.50),
+            p95_ns: h.percentile_ns(0.95),
+            p99_ns: h.percentile_ns(0.99),
+            max_ns: h.max_ns(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns as f64)),
+            ("p95_ns", Json::Num(self.p95_ns as f64)),
+            ("p99_ns", Json::Num(self.p99_ns as f64)),
+            ("max_ns", Json::Num(self.max_ns as f64)),
+        ])
+    }
+}
+
+/// Point-in-time copy of the whole metrics plane, JSON-renderable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batched_queries: u64,
+    pub mean_batch: f64,
+    pub queue_depth: u64,
+    pub hot_queue_depth: u64,
+    pub per_expert: Vec<u64>,
+    pub per_shard: Vec<u64>,
+    pub per_shard_batches: Vec<u64>,
+    pub queue: HistoSnapshot,
+    pub execute: HistoSnapshot,
+    pub total: HistoSnapshot,
+}
+
+fn arr_u64(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batched_queries", Json::Num(self.batched_queries as f64)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("hot_queue_depth", Json::Num(self.hot_queue_depth as f64)),
+            ("per_expert", arr_u64(&self.per_expert)),
+            ("per_shard", arr_u64(&self.per_shard)),
+            ("per_shard_batches", arr_u64(&self.per_shard_batches)),
+            ("queue_latency", self.queue.to_json()),
+            ("execute_latency", self.execute.to_json()),
+            ("total_latency", self.total.to_json()),
+        ])
+    }
+
+    /// One-line JSON rendering (the shutdown export format).
+    pub fn render(&self) -> String {
+        self.to_json().to_string()
     }
 }
 
@@ -91,6 +256,7 @@ mod tests {
         assert!((u.iter().sum::<f64>() - 1.0).abs() < 1e-12);
         assert!((u[0] - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(u[1], 0.0);
+        assert_eq!(m.routed_counts(), vec![2, 0, 1, 0]);
     }
 
     #[test]
@@ -107,5 +273,52 @@ mod tests {
         m.total_latency.lock().unwrap().record_ns(1000);
         let r = m.report();
         assert!(r.contains("queue:") && r.contains("exec:") && r.contains("total:"));
+    }
+
+    #[test]
+    fn shard_counters_and_gauge() {
+        let m = Metrics::with_shards(8, 3);
+        assert_eq!(m.per_shard.len(), 3);
+        m.record_shard_batch(1, 5);
+        m.record_shard_batch(1, 2);
+        m.record_shard_batch(2, 1);
+        m.set_queue_depth(17);
+        let s = m.snapshot();
+        assert_eq!(s.per_shard, vec![0, 7, 1]);
+        assert_eq!(s.per_shard_batches, vec![0, 2, 1]);
+        assert_eq!(s.queue_depth, 17);
+    }
+
+    #[test]
+    fn snapshot_renders_parseable_json() {
+        let m = Metrics::with_shards(2, 2);
+        m.submitted.fetch_add(9, Ordering::Relaxed);
+        m.record_route(1);
+        m.record_batch(3);
+        m.record_shard_batch(0, 3);
+        m.queue_latency.lock().unwrap().record_ns(1_000);
+        m.total_latency.lock().unwrap().record_ns(5_000);
+        let snap = m.snapshot();
+        let j = Json::parse(&snap.render()).unwrap();
+        assert_eq!(j.get("submitted").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(
+            j.get("per_expert").unwrap().usize_vec().unwrap(),
+            vec![0, 1]
+        );
+        assert_eq!(
+            j.get("per_shard").unwrap().usize_vec().unwrap(),
+            vec![3, 0]
+        );
+        let q = j.get("total_latency").unwrap();
+        assert_eq!(q.get("count").unwrap().as_usize().unwrap(), 1);
+        assert!(q.get("p50_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn unsharded_metrics_have_one_shard_row() {
+        let m = Metrics::new(4);
+        assert_eq!(m.per_shard.len(), 1);
+        m.record_shard_batch(0, 2);
+        assert_eq!(m.snapshot().per_shard, vec![2]);
     }
 }

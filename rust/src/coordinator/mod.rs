@@ -5,21 +5,34 @@
 //!   clients ──▶ ingress queue (bounded, backpressure)
 //!                  │ router: sparse gate → Route (O(K·d), native)
 //!                  ▼
-//!          per-expert pending queues
-//!                  │ dynamic batcher: flush on size or deadline
-//!                  ▼
+//!          per-expert pending queues ──── expert→shard map
+//!                  │ dynamic batcher:      (SoftmaxEngine::shard_of;
+//!                  │ flush on size or      every flush is shard-local
+//!                  ▼ deadline              by construction)
 //!          worker pool ── RowPack (contiguous MatrixView of the batch)
 //!                  │         │
 //!                  │         ▼ SoftmaxEngine::run_expert_batch
 //!                  │       pooled TopKBuf arena (no per-row Vecs)
-//!                  ▼
+//!                  ▼       (sharded engine: shard-local expert engine)
 //!          per-request response channels + metrics
+//!                            (per-expert + per-shard counts,
+//!                             queue-depth gauge, latency histograms)
 //! ```
 //!
 //! The gate runs *before* batching so requests are grouped by expert —
 //! the DS-Softmax analogue of vLLM-style continuous batching: batches
 //! are only formed across requests that share the same sparse expert,
 //! which is what makes the packed-expert matmul dense and fast.
+//!
+//! **Sharding.**  Because every flushed batch shares one expert, and a
+//! `shard::ShardPlan` maps each expert to exactly one shard, dispatch is
+//! shard-local without any extra queueing layer: put a
+//! `shard::ShardedEngine` behind the coordinator and each
+//! `run_expert_batch` executes on the owning shard's local engine.  The
+//! engine trait's `n_shards`/`shard_of` hooks size the per-shard metrics
+//! ([`Metrics::record_shard_batch`]) and validate `CoordinatorConfig::
+//! shards`; [`Metrics::snapshot`] exports the whole plane as JSON on
+//! shutdown.
 //!
 //! There is no separate batch-engine trait: the coordinator drives the
 //! same [`SoftmaxEngine`] the model layer defines, so native, PJRT, and
@@ -35,7 +48,7 @@ pub mod server;
 pub use engine::NativeBatchEngine;
 #[cfg(feature = "pjrt")]
 pub use engine::PjrtBatchEngine;
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{Coordinator, CoordinatorConfig, QueryError};
 
 /// The one engine trait, re-exported where the old `BatchEngine` lived.

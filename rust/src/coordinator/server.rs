@@ -38,6 +38,11 @@ pub struct CoordinatorConfig {
     pub queue_capacity: usize,
     pub workers: usize,
     pub policy: BatchPolicy,
+    /// Expected expert-parallel shard count.  `0` (the default) follows
+    /// the engine (`SoftmaxEngine::n_shards`); a nonzero value is
+    /// validated against the engine at startup so a misconfigured
+    /// deployment fails fast instead of mis-bucketing shard metrics.
+    pub shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -48,6 +53,7 @@ impl Default for CoordinatorConfig {
                 .map(|p| p.get().saturating_sub(2).max(1))
                 .unwrap_or(2),
             policy: BatchPolicy::default(),
+            shards: 0,
         }
     }
 }
@@ -80,8 +86,15 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn start(engine: Arc<dyn SoftmaxEngine>, cfg: CoordinatorConfig) -> Self {
+        let n_shards = engine.n_shards().max(1);
+        assert!(
+            cfg.shards == 0 || cfg.shards == n_shards,
+            "config expects {} shards but engine '{}' reports {n_shards}",
+            cfg.shards,
+            engine.name()
+        );
         let ingress = Arc::new(BoundedQueue::new(cfg.queue_capacity));
-        let metrics = Arc::new(Metrics::new(engine.k_experts()));
+        let metrics = Arc::new(Metrics::with_shards(engine.k_experts(), n_shards));
         let stop = Arc::new(AtomicBool::new(false));
 
         let dispatcher = {
@@ -191,6 +204,9 @@ fn dispatch_loop(
             }
             let kmax = batch.iter().map(|q| q.k).max().unwrap_or(1);
             metrics.record_batch(batch.len());
+            // per-expert flushes are shard-local by construction: the
+            // whole batch shares one expert, hence one shard
+            metrics.record_shard_batch(engine.shard_of(expert), batch.len());
             for q in &batch {
                 metrics
                     .queue_latency
@@ -235,6 +251,11 @@ fn dispatch_loop(
         for q in drained {
             batcher.push(q);
         }
+        // backlog gauges: admitted-but-unflushed queries (batcher) plus
+        // whatever raced into the ingress since the drain, and the
+        // deepest single expert queue (hot-expert skew signal)
+        metrics.set_queue_depth(batcher.pending + ingress.len());
+        metrics.set_hot_queue_depth(batcher.max_depth());
         for (expert, batch) in batcher.ready(Instant::now()) {
             run_batch(expert, batch);
         }
@@ -256,6 +277,8 @@ fn dispatch_loop(
             }
         }
     }
+    metrics.set_queue_depth(0); // fully drained
+    metrics.set_hot_queue_depth(0);
     // pool drop joins workers, flushing in-flight batches
 }
 
@@ -371,6 +394,7 @@ mod tests {
             queue_capacity: 4,
             workers: 1,
             policy: BatchPolicy { max_batch: 1024, max_wait: Duration::from_secs(5) },
+            shards: 0,
         };
         let c = Coordinator::start(engine, cfg);
         // flood; queue of 4 + slow flush (5s deadline, huge batch) → rejections
@@ -395,6 +419,47 @@ mod tests {
         }
         let u = c.metrics.utilization();
         assert!((u.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    /// A sharded engine slots behind the coordinator unchanged, and the
+    /// metrics plane picks up its shard topology: per-shard flush counts
+    /// sum to the completed total and the snapshot exports them.
+    #[test]
+    fn coordinator_serves_sharded_engine_with_shard_metrics() {
+        use crate::shard::{ShardPlan, ShardedEngine};
+        let mut rng = Rng::new(21);
+        let set = ExpertSet::synthetic(256, 16, 6, 1.2, &mut rng);
+        let reference = DsSoftmax::new(set.clone());
+        let plan = ShardPlan::greedy(&set, 3);
+        let engine = Arc::new(ShardedEngine::new(set, plan).unwrap());
+        let cfg = CoordinatorConfig { shards: 3, ..Default::default() };
+        let mut c = Coordinator::start(engine, cfg);
+        let queries: Vec<Vec<f32>> = (0..120).map(|_| rng.normal_vec(16, 1.0)).collect();
+        let pend: Vec<_> = queries
+            .iter()
+            .map(|h| c.submit(h.clone(), 4).unwrap())
+            .collect();
+        for (h, p) in queries.iter().zip(pend) {
+            assert_eq!(p.wait().unwrap(), reference.query(h, 4));
+        }
+        c.shutdown();
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.completed, 120);
+        assert_eq!(snap.per_shard.len(), 3);
+        assert_eq!(snap.per_shard.iter().sum::<u64>(), 120);
+        assert_eq!(snap.queue_depth, 0);
+        // the snapshot renders as parseable JSON with the shard rows
+        let j = crate::util::json::Json::parse(&snap.render()).unwrap();
+        assert_eq!(j.get("completed").unwrap().as_usize().unwrap(), 120);
+        assert_eq!(j.get("per_shard").unwrap().usize_vec().unwrap().len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shards")]
+    fn mismatched_shard_config_fails_fast() {
+        let engine = Arc::new(MockEngine { k: 2, d: 4, fail_expert: None });
+        let cfg = CoordinatorConfig { shards: 5, ..Default::default() };
+        let _ = Coordinator::start(engine, cfg);
     }
 
     /// The unified trait means *any* engine — including the full-softmax

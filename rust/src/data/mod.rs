@@ -156,7 +156,7 @@ impl ClusteredWorld {
                     wm.row_mut(r).copy_from_slice(w.row(c as usize));
                     ids[r] = c;
                 }
-                crate::sparse::SparseExpert { weights: wm, class_ids: ids, valid }
+                crate::sparse::SparseExpert::new(wm, ids, valid)
             })
             .collect();
         let mut set = crate::sparse::ExpertSet { gate: dirs, experts, n_classes: n };

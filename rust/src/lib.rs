@@ -10,11 +10,13 @@
 //!   layer (group-lasso pruning, load balancing, mitosis training) and
 //!   AOT-lowers the inference graphs to HLO text.
 //! * **L3** — this crate: the serving coordinator (router → group-by-
-//!   expert dynamic batcher → engines), the PJRT runtime that executes
-//!   the AOT artifacts (`pjrt` feature), native fallback engines, all
-//!   paper baselines (full softmax, SVD-softmax, D-softmax), FLOPs
-//!   accounting, and the benchmark harness that regenerates every table
-//!   and figure.
+//!   expert dynamic batcher → engines), the expert-parallel sharding
+//!   layer ([`shard`]: a serializable [`shard::ShardPlan`] partitions
+//!   the experts across shard-local engines behind a replicated gate),
+//!   the PJRT runtime that executes the AOT artifacts (`pjrt` feature),
+//!   native fallback engines, all paper baselines (full softmax,
+//!   SVD-softmax, D-softmax), FLOPs accounting, and the benchmark
+//!   harness that regenerates every table and figure.
 //!
 //! Python never runs at serving time: after `make artifacts`, the `dss`
 //! binary and the examples are self-contained.
@@ -55,7 +57,10 @@
 //!
 //! The serving coordinator (`coordinator::Coordinator`) drives the same
 //! trait: routing happens at ingress, per-expert batches flush through
-//! `run_expert_batch` into pooled buffers.
+//! `run_expert_batch` into pooled buffers.  To scale capacity, wrap the
+//! expert set in a [`shard::ShardedEngine`] — same trait, same results,
+//! experts partitioned across shards by a [`shard::ShardPlan`] — and the
+//! coordinator's dispatch and metrics become shard-aware automatically.
 
 pub mod artifacts;
 pub mod benchlib;
@@ -67,6 +72,7 @@ pub mod model;
 pub mod query;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod shard;
 pub mod sparse;
 pub mod tensor;
 pub mod util;

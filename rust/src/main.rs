@@ -18,6 +18,7 @@ use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, TopKBuf};
+use ds_softmax::shard::{ShardPlan, ShardStrategy, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::util::cli::Args;
 use ds_softmax::util::rng::Rng;
@@ -27,11 +28,15 @@ dss — Doubly Sparse Softmax serving CLI
 
 USAGE: dss <serve|query|inspect|gen|bench> [options]
 
-  serve    --artifact <name> --queries N --qps Q --k K --pjrt
+  serve    --artifact <name> --queries N --k K --pjrt
+           --shards S --shard-plan <contiguous|greedy|weighted|file.json>
+           --shard-plan-out <file.json>
+           (without an artifact set, serves a synthetic index:
+            --n N --d D --experts K --redundancy M)
   query    --artifact <name> --k K [--seed S]
   inspect  --artifact <name>
   gen      --n N --d D --experts K --redundancy M
-  bench    --n N --d D --experts K [--iters I] [--batch B]
+  bench    --n N --d D --experts K [--iters I] [--batch B] [--shards S]
 
 Common: --artifacts-dir <path> (default ./artifacts or $DSS_ARTIFACTS)
 ";
@@ -73,25 +78,152 @@ fn manifest_from(args: &Args) -> anyhow::Result<Manifest> {
     Ok(Manifest::load(root.join(name))?)
 }
 
+/// Resolve the shard plan for `serve`: the preloaded plan artifact when
+/// `--shard-plan` named a file, otherwise a strategy built against the
+/// set.  `util` feeds the weighted strategy with export-time
+/// pseudo-counts.
+fn shard_plan_from(
+    args: &Args,
+    set: &ExpertSet,
+    shards: usize,
+    util: &[f64],
+    plan_file: Option<ShardPlan>,
+) -> anyhow::Result<ShardPlan> {
+    if let Some(plan) = plan_file {
+        plan.validate(set.k()).map_err(anyhow::Error::msg)?;
+        return Ok(plan);
+    }
+    let spec = args.get_or("shard-plan", "greedy");
+    let strategy = ShardStrategy::parse(spec).ok_or_else(|| {
+        anyhow::anyhow!("unknown shard plan '{spec}' (contiguous|greedy|weighted|<file.json>)")
+    })?;
+    let counts: Vec<u64> = util.iter().map(|&u| (u * 1e6) as u64).collect();
+    Ok(ShardPlan::build(strategy, set, shards, Some(&counts)))
+}
+
 fn serve(args: &Args) -> anyhow::Result<()> {
-    let m = manifest_from(args)?;
     let n_queries = args.usize_or("queries", 10_000);
     let k = args.usize_or("k", 10);
-    let set = m.expert_set()?;
+    // Shard-count resolution: a --shard-plan file (loaded exactly once)
+    // carries its own count, which must agree with --shards when both
+    // are given.  Inconsistent or orphaned sharding flags are an error,
+    // not a silent no-op.
+    let mut shards = args.usize_or("shards", 0);
+    let plan_spec = args.get("shard-plan");
+    let plan_file: Option<ShardPlan> = match plan_spec {
+        Some(spec) if spec.ends_with(".json") => Some(ShardPlan::load(spec)?),
+        _ => None,
+    };
+    match (&plan_file, plan_spec) {
+        (Some(p), _) => {
+            if shards == 0 {
+                shards = p.shards;
+            } else {
+                anyhow::ensure!(
+                    p.shards == shards,
+                    "plan file has {} shards but --shards is {shards}",
+                    p.shards
+                );
+            }
+        }
+        (None, Some(spec)) => {
+            // strategy name: needs an explicit shard count to act on
+            anyhow::ensure!(shards > 1, "--shard-plan {spec} needs --shards > 1");
+        }
+        (None, None) => {}
+    }
+    if shards == 0 {
+        shards = 1;
+    }
+    if shards <= 1 {
+        anyhow::ensure!(
+            args.get("shard-plan-out").is_none(),
+            "--shard-plan-out needs sharding enabled (--shards S or a plan file)"
+        );
+    }
+
+    if args.flag("pjrt") {
+        anyhow::ensure!(
+            shards <= 1,
+            "--pjrt and --shards are mutually exclusive (PJRT shards are a roadmap item)"
+        );
+    }
+
+    // artifact set when available; otherwise a synthetic index so the
+    // serving path (including --shards) runs without the Python export
+    let (set, util, label) = match manifest_from(args) {
+        Ok(m) => {
+            let set = m.expert_set()?;
+            println!(
+                "serving '{}': N={} d={} K={} p={} (theoretical speedup {:.2}x)",
+                m.name,
+                m.n_classes,
+                set.dim(),
+                m.k,
+                m.p,
+                m.speedup_theoretical
+            );
+            if args.flag("pjrt") {
+                let engine = pjrt_engine(&m)?;
+                return drive(args, engine, set.dim(), n_queries, k, shards);
+            }
+            (set, m.utilization.clone(), m.name.clone())
+        }
+        Err(e) => {
+            if args.get("artifact").is_some() || args.flag("pjrt") {
+                return Err(e);
+            }
+            let n = args.usize_or("n", 10_000);
+            let d = args.usize_or("d", 200);
+            let kx = args.usize_or("experts", 64);
+            let m = args.f64_or("redundancy", 1.2);
+            let mut rng = Rng::new(args.u64_or("gen-seed", 42));
+            let set = ExpertSet::synthetic(n, d, kx, m, &mut rng);
+            set.validate().map_err(anyhow::Error::msg)?;
+            println!("no artifact set ({e:#}); serving a synthetic index N={n} d={d} K={kx}");
+            (set, vec![1.0 / kx as f64; kx], "synthetic".to_string())
+        }
+    };
+
     let d = set.dim();
-    println!(
-        "serving '{}': N={} d={} K={} p={} (theoretical speedup {:.2}x)",
-        m.name, m.n_classes, d, m.k, m.p, m.speedup_theoretical
-    );
-    let engine: Arc<dyn SoftmaxEngine> = if args.flag("pjrt") {
-        pjrt_engine(&m)?
+    let engine: Arc<dyn SoftmaxEngine> = if shards > 1 {
+        let plan = shard_plan_from(args, &set, shards, &util, plan_file)?;
+        println!(
+            "shard plan [{}] for '{label}': {} experts over {shards} shards, expert counts {:?}, loads {:?}",
+            plan.strategy.name(),
+            set.k(),
+            plan.shard_expert_counts(),
+            plan.shard_loads(&set)
+        );
+        if let Some(path) = args.get("shard-plan-out") {
+            plan.save(path)?;
+            println!("shard plan written to {path}");
+        }
+        // serial dispatch: the coordinator's worker pool is the
+        // parallelism at this layer (its per-expert flushes call
+        // `run_expert_batch`, which is inline and shard-local); per-
+        // shard pools only serve the direct `query_batch` path
+        Arc::new(ShardedEngine::new(set, plan)?)
     } else {
         Arc::new(NativeBatchEngine::new(DsSoftmax::with_utilization(
-            set,
-            m.utilization.clone(),
+            set, util,
         )))
     };
-    let c = Coordinator::start(engine, CoordinatorConfig::default());
+    drive(args, engine, d, n_queries, k, shards)
+}
+
+/// Shared serve driver: start the coordinator, push the workload, wait,
+/// report, and print the metrics snapshot (JSON) after shutdown.
+fn drive(
+    args: &Args,
+    engine: Arc<dyn SoftmaxEngine>,
+    d: usize,
+    n_queries: usize,
+    k: usize,
+    shards: usize,
+) -> anyhow::Result<()> {
+    let cfg = CoordinatorConfig { shards, ..Default::default() };
+    let mut c = Coordinator::start(engine, cfg);
     let mut rng = Rng::new(args.u64_or("seed", 0));
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n_queries);
@@ -114,6 +246,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         ok as f64 / dt.as_secs_f64()
     );
     println!("{}", c.metrics.report());
+    c.shutdown();
+    println!("metrics snapshot: {}", c.metrics.snapshot().render());
     Ok(())
 }
 
@@ -216,5 +350,32 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         benchlib::qps(md.median_ns),
         md.median_ns / mb.median_ns,
     );
+    // expert-parallel sharded path: serial dispatch isolates the
+    // scatter/merge overhead vs the single-engine batched baseline;
+    // pooled dispatch shows wall clock with one worker per shard
+    let shards = args.usize_or("shards", 0);
+    if shards > 1 {
+        let plan = ShardPlan::greedy(&ds.set, shards);
+        let serial = ShardedEngine::new(ds.set.clone(), plan.clone())?;
+        let mut sh_out = TopKBuf::new();
+        serial.query_batch(view, 10, &mut sh_out); // warm
+        let ms = benchlib::bench_batched("sharded serial", 5, iters.max(20), bsz, || {
+            serial.query_batch(view, 10, &mut sh_out);
+            std::hint::black_box(&sh_out);
+        });
+        let pooled = ShardedEngine::with_pools(ds.set.clone(), plan, 1)?;
+        pooled.query_batch(view, 10, &mut sh_out); // warm
+        let mp = benchlib::bench_batched("sharded pooled", 5, iters.max(20), bsz, || {
+            pooled.query_batch(view, 10, &mut sh_out);
+            std::hint::black_box(&sh_out);
+        });
+        println!(
+            "ds-{k} sharded S={shards} (B={bsz}): serial {:.1}µs/query ({:.2}x of batched), pooled {:.1}µs/query ({:.2}x of batched)",
+            ms.per_iter_us(),
+            ms.median_ns / mb.median_ns,
+            mp.per_iter_us(),
+            mp.median_ns / mb.median_ns,
+        );
+    }
     Ok(())
 }

@@ -25,6 +25,19 @@ pub struct DsSoftmax {
     utilization: Vec<f64>,
 }
 
+/// The m = 1 sparse-gate routing (Eq. 1): softmax over the K gate
+/// logits, argmax, single-expert [`Route`].  One definition shared by
+/// `DsSoftmax` and the sharded engine's replicated gate, so the
+/// sharded==unsharded route guarantee rests on shared code rather than
+/// hand-synchronized copies.  `logits` must hold exactly `gate.rows`
+/// slots.
+pub(crate) fn route_m1(gate: &crate::tensor::Matrix, h: &[f32], logits: &mut [f32]) -> Route {
+    gate.matvec_into(h, logits);
+    softmax_inplace(logits);
+    let e = argmax(logits);
+    Route::single(e, logits[e])
+}
+
 /// Reusable caller-owned buffers for the explicit-scratch hot path.
 pub struct DsScratch {
     pub gate_logits: Vec<f32>,
@@ -72,12 +85,11 @@ impl DsSoftmax {
             (1..=MAX_ROUTE_WIDTH).contains(&m),
             "m={m} out of 1..={MAX_ROUTE_WIDTH}"
         );
+        if m == 1 {
+            return route_m1(&self.set.gate, h, gate_logits);
+        }
         self.set.gate.matvec_into(h, gate_logits);
         softmax_inplace(gate_logits);
-        if m == 1 {
-            let e = argmax(gate_logits);
-            return Route::single(e, gate_logits[e]);
-        }
         // m is tiny: repeated masked argmax is O(m·K) with no allocation.
         let mut route = Route::empty();
         let mut taken = [usize::MAX; MAX_ROUTE_WIDTH];

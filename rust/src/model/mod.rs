@@ -91,6 +91,21 @@ pub trait SoftmaxEngine: Send + Sync {
         1
     }
 
+    /// Number of expert-parallel shards executing behind this engine
+    /// (1 = unsharded).  The coordinator sizes its per-shard metrics
+    /// from this.
+    fn n_shards(&self) -> usize {
+        1
+    }
+
+    /// The shard that executes `expert` — always 0 for unsharded
+    /// engines; overridden by `shard::ShardedEngine` with its
+    /// `ShardPlan` mapping.  Must be `< n_shards()`.
+    fn shard_of(&self, expert: usize) -> usize {
+        let _ = expert;
+        0
+    }
+
     fn name(&self) -> &'static str;
 }
 

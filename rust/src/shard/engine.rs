@@ -1,0 +1,442 @@
+//! [`ShardedEngine`] — expert-parallel execution of a DS-Softmax index
+//! behind the unified [`SoftmaxEngine`] API.
+//!
+//! The two-level hierarchy shards naturally: the gate is tiny (K×d) and
+//! is **replicated** on the engine, while the experts — the memory — are
+//! **partitioned** across S shard-local [`DsSoftmax`] engines according
+//! to a [`ShardPlan`].  A batched query then runs as
+//!
+//! ```text
+//!   route_batch (replicated gate, caller thread)
+//!        │ scatter: rows grouped by shard, then by expert (counting
+//!        ▼          sort into pooled per-shard scratch)
+//!   shard 0 .. shard S-1   each: per-expert run_expert_batch on the
+//!        │                 shard-local engine — inline (serial mode) or
+//!        ▼                 on the shard's dedicated threadpool
+//!   merge: per-shard TopKBuf arenas copied into the caller's arena
+//! ```
+//!
+//! Results are **bit-identical** to the unsharded [`DsSoftmax`]: routing
+//! uses the same gate math, and every expert batch performs the same
+//! packed matvec/softmax/top-k on the same rows in the same order.
+//!
+//! Allocation discipline: all scatter/merge state (routes, counting-sort
+//! workspace, row packs, result arenas) lives in pooled
+//! [`BatchScratch`]es, so the warm serial path performs **zero** heap
+//! allocations (proven in `rust/tests/query_alloc.rs`).  Pooled dispatch
+//! ([`with_pools`](ShardedEngine::with_pools)) additionally pays O(S)
+//! small allocations per batch for the scoped-job handoff — amortized
+//! across the batch and kept off the per-row path.
+
+use std::sync::Mutex;
+
+use crate::model::dssoftmax::DsSoftmax;
+use crate::model::SoftmaxEngine;
+use crate::query::{with_scratch, MatrixView, Route, RowPack, TopKBuf};
+use crate::shard::plan::ShardPlan;
+use crate::sparse::ExpertSet;
+use crate::tensor::Matrix;
+use crate::util::threadpool::ThreadPool;
+
+/// One shard: a shard-local expert engine and, in pooled mode, its
+/// dedicated worker pool.
+struct Shard {
+    /// Owns only this shard's experts (the gate matrix is replicated so
+    /// `run_expert_batch`'s scratch sizing stays self-contained; local
+    /// routing is never used).
+    engine: DsSoftmax,
+    pool: Option<ThreadPool>,
+}
+
+/// Per-shard scatter/execute workspace (pooled inside [`BatchScratch`]).
+#[derive(Default)]
+struct ShardScratch {
+    /// counting-sort workspace: per-local-expert counts, then cursors
+    counts: Vec<u32>,
+    /// per-local-expert segment starts (len = local experts + 1)
+    starts: Vec<u32>,
+    /// global row indices grouped by local expert (len = shard's rows)
+    order: Vec<u32>,
+    pack: RowPack,
+    gates: Vec<f32>,
+    /// per-expert-segment result arena
+    tmp: TopKBuf,
+    /// accumulated results for all of this shard's rows, in `order`
+    acc: TopKBuf,
+    /// set by a failed shard job; checked (and panicked on) at merge
+    err: Option<String>,
+    /// set once the shard job ran to completion (Ok or Err); a job
+    /// that panicked on a pool worker leaves this false, which the
+    /// merge turns into a caller-side panic instead of silently
+    /// copying stale rows
+    done: bool,
+}
+
+/// Whole-batch workspace: routes plus one [`ShardScratch`] per shard.
+/// Checked out of a pool per `query_batch` call, so concurrent callers
+/// never contend on buffers and the steady state allocates nothing.
+#[derive(Default)]
+struct BatchScratch {
+    routes: Vec<Route>,
+    shards: Vec<ShardScratch>,
+}
+
+/// Expert-parallel [`SoftmaxEngine`]: replicated gate, partitioned
+/// experts, per-shard execution, exact-equivalence merge.
+pub struct ShardedEngine {
+    plan: ShardPlan,
+    /// replicated K×d gating matrix (identical to the unsharded gate)
+    gate: Matrix,
+    /// global expert → (shard, local expert index)
+    local: Vec<(u32, u32)>,
+    shards: Vec<Shard>,
+    n_classes: usize,
+    dim: usize,
+    flops: u64,
+    scratch: Mutex<Vec<BatchScratch>>,
+}
+
+impl ShardedEngine {
+    /// Serial dispatch: shards execute inline on the calling thread.
+    /// This is the allocation-free configuration (and the right one for
+    /// S=1 or when the caller already parallelizes across requests,
+    /// e.g. the coordinator's worker pool).
+    pub fn new(set: ExpertSet, plan: ShardPlan) -> anyhow::Result<Self> {
+        Self::build(set, plan, 0)
+    }
+
+    /// Pooled dispatch: each shard gets a dedicated
+    /// [`ThreadPool`] of `threads_per_shard` workers and batch scatter
+    /// runs shard-parallel (one scoped job per shard per batch).
+    pub fn with_pools(
+        set: ExpertSet,
+        plan: ShardPlan,
+        threads_per_shard: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(threads_per_shard >= 1, "threads_per_shard must be >= 1");
+        Self::build(set, plan, threads_per_shard)
+    }
+
+    fn build(set: ExpertSet, plan: ShardPlan, threads: usize) -> anyhow::Result<Self> {
+        plan.validate(set.k()).map_err(anyhow::Error::msg)?;
+        let k = set.k();
+        let dim = set.dim();
+        let n_classes = set.n_classes;
+        let uniform = vec![1.0 / k.max(1) as f64; k];
+        let flops =
+            crate::flops::ds_softmax_expected(&set.expert_sizes(), &uniform, dim) as u64;
+        let gate = set.gate.clone();
+        // partition experts; global order is preserved within a shard,
+        // so local indices are stable, reproducible functions of the plan
+        let mut local = vec![(0u32, 0u32); k];
+        let mut members: Vec<Vec<crate::sparse::SparseExpert>> =
+            (0..plan.shards).map(|_| Vec::new()).collect();
+        for (e, expert) in set.experts.into_iter().enumerate() {
+            let s = plan.shard_of(e);
+            local[e] = (s as u32, members[s].len() as u32);
+            members[s].push(expert);
+        }
+        let shards = members
+            .into_iter()
+            .map(|experts| Shard {
+                engine: DsSoftmax::new(ExpertSet {
+                    gate: gate.clone(),
+                    experts,
+                    n_classes,
+                }),
+                pool: (threads > 0).then(|| ThreadPool::new(threads)),
+            })
+            .collect();
+        Ok(Self {
+            plan,
+            gate,
+            local,
+            shards,
+            n_classes,
+            dim,
+            flops,
+            scratch: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Expert count per shard.
+    pub fn shard_expert_counts(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.engine.set.k()).collect()
+    }
+
+    /// True when shards dispatch onto dedicated pools.
+    pub fn is_pooled(&self) -> bool {
+        self.shards.iter().any(|s| s.pool.is_some())
+    }
+
+    /// Execute this batch's share of `shard`: counting-sort its rows by
+    /// local expert, then flush each expert segment through the
+    /// shard-local engine into the shard's accumulation arena.
+    fn run_shard(
+        &self,
+        shard: usize,
+        hs: MatrixView<'_>,
+        routes: &[Route],
+        k: usize,
+        ss: &mut ShardScratch,
+    ) -> anyhow::Result<()> {
+        let engine = &self.shards[shard].engine;
+        let n_local = engine.set.k();
+        ss.counts.clear();
+        ss.counts.resize(n_local, 0);
+        let mut total = 0u32;
+        for route in routes {
+            let (sh, le) = self.local[route.expert()];
+            if sh as usize == shard {
+                ss.counts[le as usize] += 1;
+                total += 1;
+            }
+        }
+        ss.starts.clear();
+        ss.starts.resize(n_local + 1, 0);
+        let mut acc = 0u32;
+        for le in 0..n_local {
+            ss.starts[le] = acc;
+            acc += ss.counts[le];
+        }
+        ss.starts[n_local] = acc;
+        ss.order.clear();
+        ss.order.resize(total as usize, 0);
+        // second pass: place rows; counts become per-expert cursors
+        ss.counts.copy_from_slice(&ss.starts[..n_local]);
+        for (r, route) in routes.iter().enumerate() {
+            let (sh, le) = self.local[route.expert()];
+            if sh as usize == shard {
+                let cur = &mut ss.counts[le as usize];
+                ss.order[*cur as usize] = r as u32;
+                *cur += 1;
+            }
+        }
+        ss.acc.reset(total as usize, k);
+        for le in 0..n_local {
+            let (lo, hi) = (ss.starts[le] as usize, ss.starts[le + 1] as usize);
+            if lo == hi {
+                continue;
+            }
+            ss.pack.reset(hs.cols);
+            ss.gates.clear();
+            for &r in &ss.order[lo..hi] {
+                ss.pack.push_row(hs.row(r as usize));
+                ss.gates.push(routes[r as usize].gate_value());
+            }
+            engine.run_expert_batch(le, ss.pack.view(), &ss.gates, k, &mut ss.tmp)?;
+            for i in 0..(hi - lo) {
+                let (ids, probs) = ss.tmp.row(i);
+                for (&id, &p) in ids.iter().zip(probs) {
+                    ss.acc.push(lo + i, id, p);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl SoftmaxEngine for ShardedEngine {
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        assert_eq!(hs.cols, self.dim, "row width vs model dim");
+        out.reset(hs.rows, k);
+        if hs.rows == 0 {
+            return;
+        }
+        let mut bs = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        bs.routes.clear();
+        bs.routes.resize(hs.rows, Route::empty());
+        if bs.shards.len() != self.shards.len() {
+            bs.shards.resize_with(self.shards.len(), ShardScratch::default);
+        }
+        self.route_batch(hs, &mut bs.routes);
+        {
+            let BatchScratch { routes, shards: workspaces } = &mut bs;
+            let routes: &[Route] = routes;
+            // scatter: one unit of work per shard — on its dedicated
+            // pool when present, inline otherwise.  Scoped jobs borrow
+            // `routes`/`hs`/`workspaces[s]`; every guard is waited on
+            // before this block ends (drop of `jobs`), which is what
+            // makes the borrows sound.
+            let mut jobs = Vec::new();
+            for (s, ss) in workspaces.iter_mut().enumerate() {
+                ss.err = None;
+                ss.done = false;
+                match &self.shards[s].pool {
+                    Some(pool) => {
+                        // SAFETY: every guard is pushed into `jobs` and
+                        // waited below before the borrowed `routes`/`ss`
+                        // are touched again; nothing leaks a guard.
+                        jobs.push(unsafe {
+                            pool.submit_scoped(move || {
+                                let res = self.run_shard(s, hs, routes, k, &mut *ss);
+                                ss.err = res.err().map(|e| format!("{e:#}"));
+                                ss.done = true;
+                            })
+                        });
+                    }
+                    None => {
+                        let res = self.run_shard(s, hs, routes, k, &mut *ss);
+                        ss.err = res.err().map(|e| format!("{e:#}"));
+                        ss.done = true;
+                    }
+                }
+            }
+            for j in jobs {
+                j.wait();
+            }
+        }
+        // merge: copy each shard's accumulated rows into the caller's
+        // arena (each global row belongs to exactly one shard)
+        let mut failed: Option<String> = None;
+        for ss in bs.shards.iter_mut() {
+            if !ss.done {
+                failed = Some("shard job died before completing".into());
+                continue;
+            }
+            if let Some(e) = ss.err.take() {
+                failed = Some(e);
+                continue;
+            }
+            for (i, &r) in ss.order.iter().enumerate() {
+                let (ids, probs) = ss.acc.row(i);
+                for (&id, &p) in ids.iter().zip(probs) {
+                    out.push(r as usize, id, p);
+                }
+            }
+        }
+        self.scratch.lock().unwrap().push(bs);
+        if let Some(e) = failed {
+            // a shard-local engine only fails on malformed internal
+            // dispatch — surface it at the fault, like the PJRT engine's
+            // infallible path does
+            panic!("sharded query_batch: {e}");
+        }
+    }
+
+    fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
+        assert_eq!(hs.rows, out.len(), "route_batch shape mismatch");
+        assert_eq!(hs.cols, self.dim, "row width vs model dim");
+        // the shared m = 1 gate routing on the replicated gate — the
+        // exact code path the unsharded engine runs, so routes are
+        // identical by construction
+        with_scratch(|s| {
+            s.gate.resize(self.gate.rows, 0.0);
+            for (r, route) in out.iter_mut().enumerate() {
+                *route = crate::model::dssoftmax::route_m1(&self.gate, hs.row(r), &mut s.gate);
+            }
+        });
+    }
+
+    fn run_expert_batch(
+        &self,
+        expert: usize,
+        hs: MatrixView<'_>,
+        gates: &[f32],
+        k: usize,
+        out: &mut TopKBuf,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            expert < self.local.len(),
+            "expert {expert} out of range (K={})",
+            self.local.len()
+        );
+        // shard-local by construction: a single-expert flush maps to
+        // exactly one shard and runs inline on the calling thread (the
+        // coordinator's workers are the parallelism at this layer)
+        let (s, le) = self.local[expert];
+        self.shards[s as usize]
+            .engine
+            .run_expert_batch(le as usize, hs, gates, k, out)
+    }
+
+    fn flops_per_query(&self) -> u64 {
+        self.flops
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn k_experts(&self) -> usize {
+        self.local.len()
+    }
+
+    fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, expert: usize) -> usize {
+        self.local[expert].0 as usize
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn set(seed: u64) -> ExpertSet {
+        let mut rng = Rng::new(seed);
+        ExpertSet::synthetic(256, 16, 6, 1.2, &mut rng)
+    }
+
+    #[test]
+    fn construction_partitions_all_experts() {
+        let s = set(1);
+        let plan = ShardPlan::greedy(&s, 3);
+        let engine = ShardedEngine::new(s.clone(), plan.clone()).unwrap();
+        assert_eq!(engine.k_experts(), s.k());
+        assert_eq!(engine.n_shards(), 3);
+        assert_eq!(
+            engine.shard_expert_counts().iter().sum::<usize>(),
+            s.k()
+        );
+        for e in 0..s.k() {
+            assert_eq!(engine.shard_of(e), plan.shard_of(e));
+        }
+        assert!(!engine.is_pooled());
+    }
+
+    #[test]
+    fn rejects_mismatched_plan() {
+        let s = set(2);
+        let plan = ShardPlan::contiguous(s.k() + 1, 2);
+        assert!(ShardedEngine::new(s, plan).is_err());
+    }
+
+    #[test]
+    fn single_row_matches_unsharded() {
+        let s = set(3);
+        let reference = DsSoftmax::new(s.clone());
+        let engine =
+            ShardedEngine::new(s.clone(), ShardPlan::contiguous(s.k(), 2)).unwrap();
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let h = rng.normal_vec(16, 1.0);
+            assert_eq!(engine.query(&h, 5), reference.query(&h, 5));
+            assert_eq!(engine.route(&h), reference.route(&h));
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_clean() {
+        let s = set(4);
+        let engine = ShardedEngine::new(s.clone(), ShardPlan::greedy(&s, 2)).unwrap();
+        let mut out = TopKBuf::with_shape(3, 2);
+        engine.query_batch(MatrixView::new(&[], 0, 16), 4, &mut out);
+        assert_eq!(out.rows(), 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Expert-parallel sharding: the capacity-scaling substrate on top of
+//! the paper's two-level hierarchy.
+//!
+//! Once the sparse gate picks an expert, the remaining work is a small
+//! dense matmul that can live on any shard — the same property sparse-
+//! MoE serving systems exploit for capacity scaling.  This module keeps
+//! that split explicit:
+//!
+//! * [`ShardPlan`] (`plan.rs`) — *where experts live*: a serializable
+//!   expert→shard partition with contiguous, size-balanced greedy, and
+//!   load-aware weighted strategies.
+//! * [`ShardedEngine`] (`engine.rs`) — *how queries execute*: a drop-in
+//!   [`SoftmaxEngine`](crate::model::SoftmaxEngine) that routes on a
+//!   replicated gate, scatters per-expert work to shard-local engines
+//!   (optionally on dedicated pools), and merges results bit-identically
+//!   to the unsharded [`DsSoftmax`](crate::model::dssoftmax::DsSoftmax).
+//!
+//! The serving coordinator is shard-aware through the engine trait's
+//! [`n_shards`](crate::model::SoftmaxEngine::n_shards) /
+//! [`shard_of`](crate::model::SoftmaxEngine::shard_of) hooks: its
+//! per-expert batches are shard-local by construction, and its metrics
+//! plane tracks per-shard load.
+
+pub mod engine;
+pub mod plan;
+
+pub use engine::ShardedEngine;
+pub use plan::{ShardPlan, ShardStrategy};

@@ -1,0 +1,361 @@
+//! Expert→shard partition planning.
+//!
+//! A [`ShardPlan`] decides which shard owns which sparse expert.  Plans
+//! are pure data and serialize through the in-house JSON substrate
+//! ([`crate::util::json`]), so a deployment can pin, version-control and
+//! reproduce its placement as an artifact next to the model export.
+//!
+//! Three strategies:
+//!
+//! * [`Contiguous`](ShardStrategy::Contiguous) — experts split into S
+//!   contiguous, near-equal-count ranges.  The trivial baseline; ignores
+//!   expert sizes entirely.
+//! * [`Greedy`](ShardStrategy::Greedy) — LPT bin-packing by
+//!   [`SparseExpert::size`](crate::sparse::SparseExpert::size): heaviest
+//!   expert first onto the least-loaded shard.  Balances *memory*
+//!   (Σ|v_k| per shard), which also balances worst-case work.
+//! * [`Weighted`](ShardStrategy::Weighted) — LPT by expected *work*
+//!   `|v_k| · (routed_k + 1)`, where `routed_k` are observed routing
+//!   counts (e.g. [`Metrics::routed_counts`]); per-query expert cost is
+//!   O(|v_k|·d), so count×size is the expected load (paper §2.3's u_k
+//!   made operational).  Re-planning from live counters adapts placement
+//!   to utilization skew.
+//!
+//! [`Metrics::routed_counts`]: crate::coordinator::Metrics::routed_counts
+
+use std::path::Path;
+
+use crate::sparse::ExpertSet;
+use crate::util::json::{Json, JsonError};
+
+/// How a [`ShardPlan`] was derived.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStrategy {
+    Contiguous,
+    Greedy,
+    Weighted,
+}
+
+impl ShardStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardStrategy::Contiguous => "contiguous",
+            ShardStrategy::Greedy => "greedy",
+            ShardStrategy::Weighted => "weighted",
+        }
+    }
+
+    /// Inverse of [`name`](ShardStrategy::name) (CLI / JSON parsing).
+    pub fn parse(s: &str) -> Option<ShardStrategy> {
+        match s {
+            "contiguous" => Some(ShardStrategy::Contiguous),
+            "greedy" => Some(ShardStrategy::Greedy),
+            "weighted" => Some(ShardStrategy::Weighted),
+            _ => None,
+        }
+    }
+}
+
+/// An expert→shard assignment: `assign[e]` is the shard that owns
+/// expert `e`.  Immutable once built; rebuild (e.g. [`weighted`] from
+/// fresh routing counts) to re-plan.
+///
+/// [`weighted`]: ShardPlan::weighted
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardPlan {
+    pub strategy: ShardStrategy,
+    pub shards: usize,
+    /// expert index → shard index (len = expert count, values < shards)
+    pub assign: Vec<u32>,
+}
+
+impl ShardPlan {
+    /// Near-equal contiguous ranges: expert `e` → shard `e·S/K`.
+    pub fn contiguous(k_experts: usize, shards: usize) -> Self {
+        assert!(shards >= 1, "shards must be >= 1");
+        let assign = (0..k_experts)
+            .map(|e| (e * shards / k_experts.max(1)) as u32)
+            .collect();
+        Self { strategy: ShardStrategy::Contiguous, shards, assign }
+    }
+
+    /// Size-balanced LPT bin-pack by `SparseExpert::size()`.
+    pub fn greedy(set: &ExpertSet, shards: usize) -> Self {
+        assert!(shards >= 1, "shards must be >= 1");
+        let weights: Vec<u64> = set.experts.iter().map(|e| e.size() as u64).collect();
+        Self {
+            strategy: ShardStrategy::Greedy,
+            shards,
+            assign: lpt(&weights, shards),
+        }
+    }
+
+    /// Load-aware LPT bin-pack by `|v_k| · (routed_k + 1)`.  `routed`
+    /// are per-expert routing counts (one entry per expert); the `+1`
+    /// smoothing keeps never-routed experts from stacking onto one
+    /// shard for free.
+    pub fn weighted(set: &ExpertSet, shards: usize, routed: &[u64]) -> Self {
+        assert!(shards >= 1, "shards must be >= 1");
+        assert_eq!(routed.len(), set.k(), "routing counts vs expert count");
+        let weights: Vec<u64> = set
+            .experts
+            .iter()
+            .zip(routed)
+            .map(|(e, &c)| e.size() as u64 * (c + 1))
+            .collect();
+        Self {
+            strategy: ShardStrategy::Weighted,
+            shards,
+            assign: lpt(&weights, shards),
+        }
+    }
+
+    /// Build by strategy; `routed` feeds [`weighted`](Self::weighted)
+    /// (uniform counts when absent, which degrades it to greedy-by-size).
+    pub fn build(
+        strategy: ShardStrategy,
+        set: &ExpertSet,
+        shards: usize,
+        routed: Option<&[u64]>,
+    ) -> Self {
+        match strategy {
+            ShardStrategy::Contiguous => Self::contiguous(set.k(), shards),
+            ShardStrategy::Greedy => Self::greedy(set, shards),
+            ShardStrategy::Weighted => {
+                let uniform = vec![1u64; set.k()];
+                Self::weighted(set, shards, routed.unwrap_or(&uniform))
+            }
+        }
+    }
+
+    pub fn k_experts(&self) -> usize {
+        self.assign.len()
+    }
+
+    #[inline]
+    pub fn shard_of(&self, expert: usize) -> usize {
+        self.assign[expert] as usize
+    }
+
+    /// Experts owned by `shard`, in global order.
+    pub fn experts_on(&self, shard: usize) -> Vec<usize> {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s as usize == shard)
+            .map(|(e, _)| e)
+            .collect()
+    }
+
+    /// Expert count per shard.
+    pub fn shard_expert_counts(&self) -> Vec<usize> {
+        let mut n = vec![0usize; self.shards];
+        for &s in &self.assign {
+            n[s as usize] += 1;
+        }
+        n
+    }
+
+    /// Memory load per shard: Σ `SparseExpert::size()` of its experts.
+    pub fn shard_loads(&self, set: &ExpertSet) -> Vec<u64> {
+        assert_eq!(set.k(), self.assign.len(), "plan vs expert count");
+        let mut load = vec![0u64; self.shards];
+        for (e, &s) in self.assign.iter().enumerate() {
+            load[s as usize] += set.experts[e].size() as u64;
+        }
+        load
+    }
+
+    /// Structural validity against an expert count.
+    pub fn validate(&self, k_experts: usize) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("plan has zero shards".into());
+        }
+        if self.assign.len() != k_experts {
+            return Err(format!(
+                "plan covers {} experts but the set has {k_experts}",
+                self.assign.len()
+            ));
+        }
+        if let Some((e, &s)) = self
+            .assign
+            .iter()
+            .enumerate()
+            .find(|&(_, &s)| s as usize >= self.shards)
+        {
+            return Err(format!(
+                "expert {e} assigned to shard {s} but plan has {} shards",
+                self.shards
+            ));
+        }
+        Ok(())
+    }
+
+    // ---- serialization (reproducible placement artifacts) -------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", self.strategy.name().into()),
+            ("shards", self.shards.into()),
+            (
+                "assign",
+                Json::arr_usize(
+                    &self.assign.iter().map(|&s| s as usize).collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, JsonError> {
+        let strategy = ShardStrategy::parse(j.get("strategy")?.as_str()?)
+            .ok_or(JsonError::Type("strategy in {contiguous,greedy,weighted}"))?;
+        let shards = j.get("shards")?.as_usize()?;
+        let assign: Vec<u32> = j
+            .get("assign")?
+            .usize_vec()?
+            .into_iter()
+            .map(|s| s as u32)
+            .collect();
+        let plan = Self { strategy, shards, assign };
+        if let Err(_e) = plan.validate(plan.assign.len()) {
+            return Err(JsonError::Type("assign indices within shard count"));
+        }
+        Ok(plan)
+    }
+
+    /// Write the plan as a JSON artifact.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path.as_ref(), format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+
+    /// Load a plan artifact written by [`save`](Self::save).
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Ok(Self::from_json(&Json::parse(text.trim())?)?)
+    }
+}
+
+/// Longest-processing-time bin-pack: heaviest item first onto the
+/// least-loaded shard.  Ties break to the lower expert index / lower
+/// shard index, so identical inputs always produce identical plans
+/// (plans are reproducible artifacts).
+fn lpt(weights: &[u64], shards: usize) -> Vec<u32> {
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&e| (std::cmp::Reverse(weights[e]), e));
+    let mut load = vec![0u64; shards];
+    let mut assign = vec![0u32; weights.len()];
+    for e in order {
+        let s = (0..shards).min_by_key(|&s| load[s]).unwrap();
+        assign[e] = s as u32;
+        load[s] += weights[e];
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn set() -> ExpertSet {
+        let mut rng = Rng::new(17);
+        ExpertSet::synthetic(512, 16, 8, 1.3, &mut rng)
+    }
+
+    #[test]
+    fn contiguous_covers_and_orders() {
+        let p = ShardPlan::contiguous(8, 3);
+        p.validate(8).unwrap();
+        // non-decreasing shard per expert, all shards used
+        assert!(p.assign.windows(2).all(|w| w[0] <= w[1]));
+        let counts = p.shard_expert_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 8);
+        assert!(counts.iter().all(|&c| c >= 2));
+    }
+
+    #[test]
+    fn more_shards_than_experts_is_legal() {
+        let s = set();
+        for plan in [
+            ShardPlan::contiguous(s.k(), 11),
+            ShardPlan::greedy(&s, 11),
+        ] {
+            plan.validate(s.k()).unwrap();
+            assert_eq!(plan.shard_expert_counts().iter().sum::<usize>(), s.k());
+        }
+    }
+
+    #[test]
+    fn greedy_balances_loads() {
+        let s = set();
+        let plan = ShardPlan::greedy(&s, 4);
+        plan.validate(s.k()).unwrap();
+        let loads = plan.shard_loads(&s);
+        let (min, max) = (
+            *loads.iter().min().unwrap(),
+            *loads.iter().max().unwrap(),
+        );
+        // LPT guarantee: max - min bounded by the largest single item
+        let biggest = s.experts.iter().map(|e| e.size() as u64).max().unwrap();
+        assert!(max - min <= biggest, "loads {loads:?}");
+    }
+
+    #[test]
+    fn weighted_isolates_hot_expert() {
+        let s = set();
+        // one expert carries almost all traffic: it must get a shard
+        // that is otherwise the lightest
+        let mut routed = vec![1u64; s.k()];
+        routed[3] = 1_000_000;
+        let plan = ShardPlan::weighted(&s, 4, &routed);
+        plan.validate(s.k()).unwrap();
+        let hot = plan.shard_of(3);
+        // the hot expert is placed first (heaviest), i.e. alone until
+        // the others backfill; its shard holds the fewest experts
+        let counts = plan.shard_expert_counts();
+        assert_eq!(counts[hot], *counts.iter().min().unwrap(), "{counts:?}");
+    }
+
+    #[test]
+    fn lpt_is_deterministic() {
+        let w = vec![5u64, 5, 5, 5, 3, 3];
+        assert_eq!(lpt(&w, 2), lpt(&w, 2));
+        // equal weights tie-break by index: expert 0 → shard 0
+        assert_eq!(lpt(&w, 2)[0], 0);
+    }
+
+    #[test]
+    fn json_roundtrip_and_file_artifact() {
+        let s = set();
+        let plan = ShardPlan::greedy(&s, 3);
+        let parsed = ShardPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(parsed, plan);
+
+        let path = std::env::temp_dir().join(format!(
+            "dss-shard-plan-{}.json",
+            std::process::id()
+        ));
+        plan.save(&path).unwrap();
+        let loaded = ShardPlan::load(&path).unwrap();
+        assert_eq!(loaded, plan);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_assign() {
+        let j = Json::parse(r#"{"strategy":"greedy","shards":2,"assign":[0,2]}"#).unwrap();
+        assert!(ShardPlan::from_json(&j).is_err());
+        let j = Json::parse(r#"{"strategy":"nope","shards":2,"assign":[0,1]}"#).unwrap();
+        assert!(ShardPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let s = set();
+        let plan = ShardPlan::greedy(&s, 2);
+        assert!(plan.validate(s.k() + 1).is_err());
+        let bad = ShardPlan { shards: 0, ..plan.clone() };
+        assert!(bad.validate(s.k()).is_err());
+    }
+}

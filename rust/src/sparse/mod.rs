@@ -17,20 +17,62 @@ pub struct SparseExpert {
     /// global class id per packed row; -1 past `valid`.
     pub class_ids: Vec<i32>,
     pub valid: usize,
+    /// Sorted copy of the valid class ids, built at construction:
+    /// O(log |v_k|) membership and linear-merge overlap instead of a
+    /// per-class linear scan.  Call [`rebuild_index`] after mutating
+    /// `class_ids`/`valid` directly.
+    ///
+    /// [`rebuild_index`]: SparseExpert::rebuild_index
+    sorted: Vec<i32>,
 }
 
 impl SparseExpert {
+    /// Build an expert and its sorted class index.
+    pub fn new(weights: Matrix, class_ids: Vec<i32>, valid: usize) -> Self {
+        let mut e = Self { weights, class_ids, valid, sorted: Vec::new() };
+        e.rebuild_index();
+        e
+    }
+
+    /// Re-derive the sorted membership index after a direct mutation of
+    /// `class_ids` or `valid`.
+    pub fn rebuild_index(&mut self) {
+        self.sorted.clear();
+        self.sorted.extend_from_slice(&self.class_ids[..self.valid]);
+        self.sorted.sort_unstable();
+    }
+
     pub fn size(&self) -> usize {
         self.valid
     }
 
-    /// The class ids actually present (no padding).
+    /// The class ids actually present (no padding), in packed order.
     pub fn classes(&self) -> &[i32] {
         &self.class_ids[..self.valid]
     }
 
+    /// Membership via binary search over the sorted index.
     pub fn contains(&self, class: u32) -> bool {
-        self.classes().contains(&(class as i32))
+        self.sorted.binary_search(&(class as i32)).is_ok()
+    }
+
+    /// Number of classes shared with `other` — a sorted-merge walk,
+    /// O(|v_a| + |v_b|); overlap accounting for planners and eval.
+    pub fn overlap(&self, other: &SparseExpert) -> usize {
+        let (a, b) = (&self.sorted, &other.sorted);
+        let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    n += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        n
     }
 }
 
@@ -207,7 +249,7 @@ impl ExpertSet {
                 }
                 let mut class_ids = ids;
                 class_ids.resize(p, -1);
-                SparseExpert { weights: w, class_ids, valid }
+                SparseExpert::new(w, class_ids, valid)
             })
             .collect();
         ExpertSet {
@@ -301,5 +343,48 @@ mod tests {
         let c = e.classes()[0] as u32;
         assert!(e.contains(c));
         assert_eq!(e.classes().len(), e.size());
+    }
+
+    #[test]
+    fn contains_matches_linear_scan_for_all_classes() {
+        let es = tiny_set();
+        for e in &es.experts {
+            for c in 0..es.n_classes as u32 {
+                assert_eq!(
+                    e.contains(c),
+                    e.classes().contains(&(c as i32)),
+                    "class {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_index_tracks_mutation() {
+        let mut es = tiny_set();
+        let e = &mut es.experts[0];
+        let c = e.classes()[0];
+        // drop the first class by swapping it out, then re-index
+        let last = e.valid - 1;
+        e.class_ids.swap(0, last);
+        e.class_ids[last] = -1;
+        e.valid -= 1;
+        e.rebuild_index();
+        assert!(!e.contains(c as u32));
+        assert_eq!(e.sorted.len(), e.valid);
+    }
+
+    #[test]
+    fn overlap_matches_brute_force() {
+        let es = tiny_set();
+        let (a, b) = (&es.experts[0], &es.experts[1]);
+        let brute = a
+            .classes()
+            .iter()
+            .filter(|c| b.classes().contains(c))
+            .count();
+        assert_eq!(a.overlap(b), brute);
+        assert_eq!(b.overlap(a), brute);
+        assert_eq!(a.overlap(a), a.size());
     }
 }

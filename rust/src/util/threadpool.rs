@@ -84,12 +84,25 @@ impl ThreadPool {
                 Arc<dyn Fn(usize) + Send + Sync + 'static>,
             >(Arc::new(f))
         };
+        // Completion is signalled by a drop guard so a panicking item
+        // cannot strand the waiter below (the worker survives via the
+        // catch_unwind in `worker_loop`, but this task's remaining
+        // items are abandoned — the panic is the caller's bug to fix).
+        struct Complete(Arc<(Mutex<usize>, Condvar)>);
+        impl Drop for Complete {
+            fn drop(&mut self) {
+                let (lock, cv) = &*self.0;
+                *lock.lock().unwrap() += 1;
+                cv.notify_all();
+            }
+        }
         let tasks = self.size().min(n);
         for _ in 0..tasks {
             let f = f.clone();
             let next = next.clone();
             let done = done.clone();
             self.execute(move || {
+                let _complete = Complete(done); // fires even on unwind
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
@@ -97,9 +110,6 @@ impl ThreadPool {
                     }
                     f(i);
                 }
-                let (lock, cv) = &*done;
-                *lock.lock().unwrap() += 1;
-                cv.notify_all();
             });
         }
         let (lock, cv) = &*done;
@@ -107,6 +117,102 @@ impl ThreadPool {
         while *finished < tasks {
             finished = cv.wait(finished).unwrap();
         }
+    }
+}
+
+/// Completion handle for [`ThreadPool::submit_scoped`].  Holds the
+/// job's borrows (`'a`) until waited: the job is guaranteed to have
+/// finished once `wait` returns, and `wait` also runs on drop, so the
+/// borrow-checker keeps the captured data untouched for the guard's
+/// whole life.
+pub struct ScopedJob<'a> {
+    done: Arc<(Mutex<bool>, Condvar)>,
+    waited: bool,
+    /// pins the borrows captured by the submitted closure
+    _borrows: std::marker::PhantomData<&'a mut ()>,
+}
+
+impl ScopedJob<'_> {
+    /// Block until the job has run.
+    pub fn wait(mut self) {
+        self.block();
+    }
+
+    fn block(&mut self) {
+        if self.waited {
+            return;
+        }
+        let (m, cv) = &*self.done;
+        let mut done = m.lock().unwrap();
+        while !*done {
+            done = cv.wait(done).unwrap();
+        }
+        self.waited = true;
+    }
+}
+
+impl Drop for ScopedJob<'_> {
+    fn drop(&mut self) {
+        self.block();
+    }
+}
+
+/// Flips the latch on drop, so the waiter is released even if the job
+/// unwinds.
+struct DoneLatch(Arc<(Mutex<bool>, Condvar)>);
+
+impl Drop for DoneLatch {
+    fn drop(&mut self) {
+        let (m, cv) = &*self.0;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+    }
+}
+
+impl ThreadPool {
+    /// Run a closure that may borrow the caller's stack on this pool,
+    /// returning a guard that blocks until completion — on `wait` and
+    /// on drop.  The guard carries the closure's lifetime, so the
+    /// borrow-checker prevents the caller from touching the borrowed
+    /// data while the job may still be running (the same
+    /// lifetime-extension discipline as `parallel_for`, but for a
+    /// single job whose guard the caller can hold while submitting
+    /// work to *other* pools).  Queued scoped jobs always run:
+    /// shutdown drains the queue before workers exit, and the latch is
+    /// released even if the job unwinds.
+    ///
+    /// # Safety
+    ///
+    /// The caller must let the returned guard run to completion —
+    /// either `wait` it or let it drop normally.  Leaking the guard
+    /// (`std::mem::forget`, `Box::leak`, a reference cycle) ends the
+    /// borrow region while the worker may still be using the captured
+    /// borrows, which is undefined behavior.  A closure-scope API
+    /// would close that hole; until callers need one, the contract is
+    /// documented here instead.
+    pub unsafe fn submit_scoped<'a, F>(&self, f: F) -> ScopedJob<'a>
+    where
+        F: FnOnce() + Send + 'a,
+    {
+        let done = Arc::new((Mutex::new(false), Condvar::new()));
+        let latch = DoneLatch(done.clone());
+        let job: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+            let _latch = latch; // released on drop, even on unwind
+            f();
+        });
+        // SAFETY: lifetime extension only.  The latch is set when the
+        // job box is dropped (run or not), and `ScopedJob` waits for it
+        // on `wait` and on drop, so — given the caller upholds the
+        // no-leak contract above — every borrow captured in `f`
+        // strictly outlives its last use on the worker.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(job)
+        };
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(job);
+        drop(q);
+        self.shared.cv.notify_one();
+        ScopedJob { done, waited: false, _borrows: std::marker::PhantomData }
     }
 }
 
@@ -124,7 +230,13 @@ fn worker_loop(sh: Arc<Shared>) {
                 q = sh.cv.wait(q).unwrap();
             }
         };
-        job();
+        // Contain panics so one bad job cannot kill the worker: a dead
+        // worker would strand every later job on this pool (deadlock
+        // for scoped submitters).  Completion signalling is the job's
+        // own responsibility (e.g. `DoneLatch` fires during unwind).
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+            eprintln!("dss worker: job panicked; worker kept alive");
+        }
     }
 }
 
@@ -286,6 +398,56 @@ mod tests {
     fn parallel_for_empty() {
         let pool = ThreadPool::new(2);
         pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn submit_scoped_borrows_stack() {
+        let pool = ThreadPool::new(2);
+        let mut values = vec![0u32; 8];
+        {
+            let mut jobs = Vec::new();
+            for (i, v) in values.iter_mut().enumerate() {
+                // SAFETY: every guard is waited below; none leaks
+                jobs.push(unsafe {
+                    pool.submit_scoped(move || {
+                        *v = i as u32 + 1;
+                    })
+                });
+            }
+            for j in jobs {
+                j.wait();
+            }
+        }
+        assert!(values.iter().enumerate().all(|(i, &v)| v == i as u32 + 1));
+    }
+
+    #[test]
+    fn scoped_job_waits_on_drop() {
+        let pool = ThreadPool::new(1);
+        let mut hit = false;
+        // SAFETY: the guard is dropped (and thus waited) immediately
+        let job = unsafe {
+            pool.submit_scoped(|| {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                hit = true;
+            })
+        };
+        drop(job);
+        assert!(hit);
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_worker() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("boom"));
+        // the single worker must survive to run this second job
+        let hit = Arc::new(AtomicU64::new(0));
+        let h = hit.clone();
+        pool.execute(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        drop(pool); // join
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -45,7 +45,7 @@ fn aligned_world(
                 wm.row_mut(r).copy_from_slice(w.row(e * per + r));
                 ids[r] = (e * per + r) as i32;
             }
-            ds_softmax::sparse::SparseExpert { weights: wm, class_ids: ids, valid: per }
+            ds_softmax::sparse::SparseExpert::new(wm, ids, per)
         })
         .collect();
     let set = ExpertSet { gate: dirs.clone(), experts, n_classes: n };

@@ -11,6 +11,7 @@ use ds_softmax::coordinator::NativeBatchEngine;
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, Route, TopKBuf};
+use ds_softmax::shard::{ShardPlan, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::util::rng::Rng;
 
@@ -98,8 +99,44 @@ fn warm_query_batch_does_not_allocate() {
     });
     assert_eq!(n, 0, "warm run_expert_batch allocated {n} times");
 
+    // the sharded engine's serial scatter/merge path is warm-clean too:
+    // routes, per-shard counting-sort workspace, per-expert row packs
+    // and both result arenas all come from pooled scratch
+    let sharded = ShardedEngine::new(ds.set.clone(), ShardPlan::greedy(&ds.set, 4))
+        .expect("sharded engine");
+    let mut sh_out = TopKBuf::new();
+    sharded.query_batch(view, 10, &mut sh_out); // warm scratch pool
+    sharded.query_batch(view, 10, &mut sh_out); // steady-state shapes
+    let n = count_allocs(|| {
+        sharded.query_batch(view, 10, &mut sh_out);
+        std::hint::black_box(&sh_out);
+    });
+    assert_eq!(n, 0, "warm sharded query_batch allocated {n} times");
+
+    // the coordinator's sharded flush path (expert → shard-local
+    // engine, inline) is warm-clean as well
+    sharded
+        .run_expert_batch(1, view, &gates, 10, &mut sh_out)
+        .expect("sharded expert batch");
+    let n = count_allocs(|| {
+        sharded
+            .run_expert_batch(1, view, &gates, 10, &mut sh_out)
+            .expect("sharded expert batch");
+        std::hint::black_box(&sh_out);
+    });
+    assert_eq!(n, 0, "warm sharded run_expert_batch allocated {n} times");
+
+    // sharded results remain identical to the unsharded engine after
+    // the counted runs
+    let mut ref_out = TopKBuf::new();
+    ds.query_batch(view, 10, &mut ref_out);
+    sharded.query_batch(view, 10, &mut sh_out);
+    for r in 0..bsz {
+        assert_eq!(sh_out.row_vec(r), ref_out.row_vec(r), "sharded row {r}");
+    }
+
     // results are still correct after the counted runs
     for r in 0..bsz {
-        assert_eq!(out.len(r), 10.min(out.k()));
+        assert_eq!(out.len(r), out.k().min(10));
     }
 }

@@ -1,0 +1,165 @@
+//! Shard-correctness properties: a `ShardedEngine` must be an exact
+//! drop-in for the unsharded `DsSoftmax` — same routes, same top-k
+//! results, bit for bit — for every shard count and planning strategy,
+//! including the edge batches (empty, single row) and k larger than the
+//! smallest expert.
+
+use std::sync::Arc;
+
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig};
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::prop_assert;
+use ds_softmax::query::{MatrixView, Route, TopKBuf};
+use ds_softmax::shard::{ShardPlan, ShardStrategy, ShardedEngine};
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::util::prop;
+use ds_softmax::util::rng::Rng;
+
+fn check_equivalent(
+    reference: &DsSoftmax,
+    sharded: &ShardedEngine,
+    hs: MatrixView<'_>,
+    k: usize,
+    ctx: &str,
+) -> Result<(), String> {
+    let mut want = TopKBuf::new();
+    let mut got = TopKBuf::new();
+    reference.query_batch(hs, k, &mut want);
+    sharded.query_batch(hs, k, &mut got);
+    prop_assert!(
+        got.rows() == want.rows(),
+        "{ctx}: rows {} vs {}",
+        got.rows(),
+        want.rows()
+    );
+    for r in 0..want.rows() {
+        prop_assert!(
+            got.row_vec(r) == want.row_vec(r),
+            "{ctx}: row {r} diverged: {:?} vs {:?}",
+            got.row_vec(r),
+            want.row_vec(r)
+        );
+    }
+    let mut want_routes = vec![Route::empty(); hs.rows];
+    let mut got_routes = vec![Route::empty(); hs.rows];
+    reference.route_batch(hs, &mut want_routes);
+    sharded.route_batch(hs, &mut got_routes);
+    prop_assert!(want_routes == got_routes, "{ctx}: routes diverged");
+    Ok(())
+}
+
+/// The acceptance property: S ∈ {1, 2, 7}, all three strategies, batch
+/// sizes {0, 1, random}, k both below and above the smallest expert.
+#[test]
+fn sharded_equals_unsharded_for_s_1_2_7() {
+    prop::check(71, 6, 20, |g| {
+        let d = 8 + g.rng.below(17);
+        let kx = 4 + g.rng.below(9);
+        let n = 96 + g.rng.below(160);
+        let set = ExpertSet::synthetic(n, d, kx, 1.2, &mut g.rng);
+        let reference = DsSoftmax::new(set.clone());
+        let smallest = set.expert_sizes().into_iter().min().unwrap_or(1).max(1);
+        for s in [1usize, 2, 7] {
+            let plans = [
+                ShardPlan::contiguous(set.k(), s),
+                ShardPlan::greedy(&set, s),
+                ShardPlan::weighted(&set, s, &vec![3u64; set.k()]),
+            ];
+            for plan in plans {
+                let strategy = plan.strategy;
+                let sharded =
+                    ShardedEngine::new(set.clone(), plan).map_err(|e| e.to_string())?;
+                for b in [0usize, 1, 1 + g.rng.below(20)] {
+                    let packed: Vec<f32> =
+                        (0..b * d).map(|_| g.rng.normal_f32(0.0, 1.0)).collect();
+                    let hs = MatrixView::new(&packed, b, d);
+                    let ctx = format!("S={s} {} b={b}", strategy.name());
+                    check_equivalent(&reference, &sharded, hs, smallest.min(3), &ctx)?;
+                    // k larger than the smallest expert: rows routed
+                    // there return fewer than k entries — identically so
+                    check_equivalent(&reference, &sharded, hs, smallest + 4, &ctx)?;
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Pooled (dedicated per-shard threadpool) dispatch returns the same
+/// results as serial dispatch and the unsharded engine.
+#[test]
+fn pooled_dispatch_matches_unsharded() {
+    let mut rng = Rng::new(9);
+    let set = ExpertSet::synthetic(512, 24, 8, 1.25, &mut rng);
+    let reference = DsSoftmax::new(set.clone());
+    let plan = ShardPlan::greedy(&set, 4);
+    let pooled = ShardedEngine::with_pools(set, plan, 2).unwrap();
+    assert!(pooled.is_pooled());
+    let mut want = TopKBuf::new();
+    let mut got = TopKBuf::new();
+    for b in [1usize, 5, 33] {
+        let packed: Vec<f32> = (0..b * 24).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let hs = MatrixView::new(&packed, b, 24);
+        reference.query_batch(hs, 6, &mut want);
+        pooled.query_batch(hs, 6, &mut got);
+        for r in 0..b {
+            assert_eq!(got.row_vec(r), want.row_vec(r), "b={b} row {r}");
+        }
+    }
+}
+
+/// The coordinator flush path: `run_expert_batch` on the sharded engine
+/// is exactly the unsharded per-expert execution, and the expert→shard
+/// map agrees with the plan.
+#[test]
+fn run_expert_batch_is_shard_local_and_exact() {
+    let mut rng = Rng::new(13);
+    let set = ExpertSet::synthetic(256, 16, 6, 1.3, &mut rng);
+    let reference = DsSoftmax::new(set.clone());
+    let plan = ShardPlan::weighted(&set, 3, &[9, 1, 1, 50, 2, 7]);
+    let sharded = ShardedEngine::new(set.clone(), plan.clone()).unwrap();
+    let b = 7usize;
+    let packed: Vec<f32> = (0..b * 16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let hs = MatrixView::new(&packed, b, 16);
+    let gates = vec![0.6f32; b];
+    let mut want = TopKBuf::new();
+    let mut got = TopKBuf::new();
+    for e in 0..set.k() {
+        assert_eq!(sharded.shard_of(e), plan.shard_of(e));
+        reference.run_expert_batch(e, hs, &gates, 5, &mut want).unwrap();
+        sharded.run_expert_batch(e, hs, &gates, 5, &mut got).unwrap();
+        for r in 0..b {
+            assert_eq!(got.row_vec(r), want.row_vec(r), "expert {e} row {r}");
+        }
+    }
+    // out-of-range expert is an error, not a panic
+    assert!(sharded
+        .run_expert_batch(set.k(), hs, &gates, 5, &mut got)
+        .is_err());
+}
+
+/// End-to-end: a pooled sharded engine behind the coordinator serves the
+/// exact unsharded answers; reuses the same TopKBuf discipline.
+#[test]
+fn coordinator_end_to_end_with_pooled_shards() {
+    let mut rng = Rng::new(31);
+    let set = ExpertSet::synthetic(384, 16, 8, 1.2, &mut rng);
+    let reference = DsSoftmax::new(set.clone());
+    let plan = ShardPlan::greedy(&set, 4);
+    let engine = Arc::new(ShardedEngine::with_pools(set, plan, 1).unwrap());
+    let cfg = CoordinatorConfig { shards: 4, ..Default::default() };
+    let c = Coordinator::start(engine, cfg);
+    let queries: Vec<Vec<f32>> = (0..150).map(|_| rng.normal_vec(16, 1.0)).collect();
+    let pend: Vec<_> = queries
+        .iter()
+        .map(|h| c.submit(h.clone(), 6).unwrap())
+        .collect();
+    for (h, p) in queries.iter().zip(pend) {
+        assert_eq!(p.wait().unwrap(), reference.query(h, 6));
+    }
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.per_shard.len(), 4);
+    assert_eq!(snap.per_shard.iter().sum::<u64>(), 150);
+}
