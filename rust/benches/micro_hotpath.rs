@@ -3,19 +3,24 @@
 //! regressions are attributable:
 //!
 //!   dot/matvec        the tensor substrate (memory-bandwidth bound)
+//!   matmul kernel     tiled A·Bᵀ vs the per-row dot loop it replaced
 //!   gate              O(K·d) routing
 //!   expert softmax    O(|v|·d) packed matvec + scaled softmax
-//!   top-k             bounded-heap selection
+//!   top-k             bounded-heap selection (short-circuited bulk
+//!                     push vs per-element push)
+//!   fused select      select-then-normalize vs exp-all-then-heap
 //!   full query        gate + expert + topk
 //!   query_batch       the zero-allocation batched path (TopKBuf arena)
 //!   sharded S=4       expert-parallel scatter/merge (serial + pooled)
 //!   coordinator       submit→complete round-trip (batching overhead)
 //!
+//! Also writes the machine-readable BENCH_micro_hotpath.json trail.
+//!
 //!     cargo bench --bench micro_hotpath
 
 use std::sync::Arc;
 
-use ds_softmax::benchlib::{bench, bench_batched, fmt_qps, Table};
+use ds_softmax::benchlib::{bench, bench_batched, fmt_qps, BenchReport, Table};
 use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
 use ds_softmax::model::dssoftmax::{DsScratch, DsSoftmax};
 use ds_softmax::model::full::FullSoftmax;
@@ -23,13 +28,14 @@ use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, Route, TopKBuf};
 use ds_softmax::shard::{ShardPlan, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
-use ds_softmax::tensor::{dot, softmax_inplace, Matrix};
+use ds_softmax::tensor::{dot, kernel, scaled_softmax_inplace, softmax_inplace, Matrix};
 use ds_softmax::util::rng::Rng;
 use ds_softmax::util::topk::TopK;
 
 fn main() {
     let mut rng = Rng::new(0);
     let mut table = Table::new("micro hot path", &["op", "shape", "median", "per-elem ns"]);
+    let mut report = BenchReport::new("micro_hotpath");
 
     // dot product
     for d in [64usize, 200, 512] {
@@ -63,6 +69,56 @@ fn main() {
         ]);
     }
 
+    // tiled kernel vs the per-row dot loop it replaced: the batched
+    // logits shape (B context rows × one expert's packed rows)
+    {
+        let (bsz, nv, d) = (32usize, 640usize, 200usize);
+        let a = Matrix::random(bsz, d, &mut rng, 1.0);
+        let b = Matrix::random(nv, d, &mut rng, 0.05);
+        let mut outbuf = vec![0.0f32; bsz * nv];
+        let m_loop = bench("matmul rowloop", 3, 60, || {
+            for i in 0..bsz {
+                let arow = a.row(i);
+                for j in 0..nv {
+                    outbuf[i * nv + j] = dot(arow, b.row(j));
+                }
+            }
+            std::hint::black_box(&outbuf);
+        });
+        table.row(vec![
+            "matmul rowloop".into(),
+            format!("{bsz}x{d} · {nv}x{d}ᵀ"),
+            format!("{:.1}µs", m_loop.median_ns / 1e3),
+            format!("{:.3}", m_loop.median_ns / (bsz * nv * d) as f64),
+        ]);
+        let m_kern = bench("matmul kernel", 3, 60, || {
+            kernel::matmul_nt_into(MatrixView::from(&a), &b, &mut outbuf);
+            std::hint::black_box(&outbuf);
+        });
+        table.row(vec![
+            "matmul kernel".into(),
+            format!("{bsz}x{d} · {nv}x{d}ᵀ"),
+            format!("{:.1}µs", m_kern.median_ns / 1e3),
+            format!("(rowloop/kernel {:.2}x)", m_loop.median_ns / m_kern.median_ns),
+        ]);
+        // per context row, so the trail's convention holds everywhere:
+        // batch > 1 rows always carry per-logical-query medians
+        report.push(
+            "matmul-rowloop",
+            "32x200·640x200T",
+            bsz,
+            1,
+            m_loop.median_ns / bsz as f64,
+        );
+        report.push(
+            "matmul-kernel",
+            "32x200·640x200T",
+            bsz,
+            1,
+            m_kern.median_ns / bsz as f64,
+        );
+    }
+
     // softmax
     for n in [640usize, 10_048] {
         let mut xs = rng.normal_vec(n, 1.0);
@@ -77,20 +133,72 @@ fn main() {
         ]);
     }
 
-    // top-k
+    // top-k: short-circuited bulk push vs per-element push — the bulk
+    // path caches the threshold in a register once the heap is full
     for (n, k) in [(640usize, 10usize), (10_048, 10)] {
         let xs = rng.normal_vec(n, 1.0);
         let mut heap = TopK::new(k);
-        let m = bench("topk", 10, 500, || {
+        let m_push = bench("topk push loop", 10, 500, || {
+            heap.clear();
+            for (i, &s) in std::hint::black_box(&xs).iter().enumerate() {
+                heap.push(s, i as u32);
+            }
+        });
+        table.row(vec![
+            "topk push loop".into(),
+            format!("n={n} k={k}"),
+            format!("{:.1}µs", m_push.median_ns / 1e3),
+            format!("{:.3}", m_push.median_ns / n as f64),
+        ]);
+        let m = bench("topk push_slice", 10, 500, || {
             heap.clear();
             heap.push_slice(std::hint::black_box(&xs));
         });
         table.row(vec![
-            "topk".into(),
+            "topk push_slice".into(),
             format!("n={n} k={k}"),
             format!("{:.1}µs", m.median_ns / 1e3),
-            format!("{:.3}", m.median_ns / n as f64),
+            format!("(push/slice {:.2}x)", m_push.median_ns / m.median_ns),
         ]);
+        report.push("topk-push-loop", &format!("n={n} k={k}"), 1, 1, m_push.median_ns);
+        report.push("topk-push-slice", &format!("n={n} k={k}"), 1, 1, m.median_ns);
+    }
+
+    // fused select-then-normalize vs the two-pass exp-all-then-heap
+    // tail it replaced (two-pass includes the prob store + normalize
+    // passes the fused path eliminates; both end sorted)
+    for n in [640usize, 10_048] {
+        let logits = rng.normal_vec(n, 1.0);
+        let mut buf = vec![0.0f32; n];
+        let mut heap = TopK::new(10);
+        let m_two = bench("twopass softmax+topk", 10, 500, || {
+            buf.copy_from_slice(std::hint::black_box(&logits));
+            scaled_softmax_inplace(&mut buf, 0.7);
+            heap.clear();
+            heap.push_slice(&buf);
+            std::hint::black_box(heap.sorted_in_place());
+        });
+        table.row(vec![
+            "twopass exp+heap".into(),
+            format!("n={n} k=10"),
+            format!("{:.1}µs", m_two.median_ns / 1e3),
+            format!("{:.3}", m_two.median_ns / n as f64),
+        ]);
+        let m_fused = bench("fused select+norm", 10, 500, || {
+            let (mx, inv) =
+                kernel::select_scaled_topk(std::hint::black_box(&logits), 0.7, &mut heap);
+            let mut acc = 0.0f32;
+            kernel::emit_normalized(&mut heap, mx, inv, |_, p| acc += p);
+            std::hint::black_box(acc);
+        });
+        table.row(vec![
+            "fused select+norm".into(),
+            format!("n={n} k=10"),
+            format!("{:.1}µs", m_fused.median_ns / 1e3),
+            format!("(twopass/fused {:.2}x)", m_two.median_ns / m_fused.median_ns),
+        ]);
+        report.push("tail-twopass", &format!("n={n} k=10"), 1, 1, m_two.median_ns);
+        report.push("tail-fused", &format!("n={n} k=10"), 1, 1, m_fused.median_ns);
     }
 
     // gate + expert + end-to-end query at PTB DS-64 scale
@@ -173,6 +281,7 @@ fn main() {
         std::hint::black_box(&out);
     });
     let ds_batched = m.median_ns;
+    report.push("ds", "N=10048 K=64", bsz, 1, ds_batched);
     table.row(vec![
         "ds query_batch".into(),
         format!("B={bsz} N=10048 K=64"),
@@ -196,6 +305,7 @@ fn main() {
         sharded.query_batch(view, 10, &mut sh_out);
         std::hint::black_box(&sh_out);
     });
+    report.push("sharded-serial", "N=10048 K=64", bsz, 4, m.median_ns);
     table.row(vec![
         "sharded S=4 serial".into(),
         format!("B={bsz} N=10048 K=64"),
@@ -213,6 +323,7 @@ fn main() {
         pooled.query_batch(view, 10, &mut sh_out);
         std::hint::black_box(&sh_out);
     });
+    report.push("sharded-pooled", "N=10048 K=64", bsz, 4, m.median_ns);
     table.row(vec![
         "sharded S=4 pooled".into(),
         format!("B={bsz} N=10048 K=64"),
@@ -254,4 +365,8 @@ fn main() {
     // counters + quantiles exported the same way `dss serve` does on
     // shutdown — keeps the bench's JSON trail machine-readable
     println!("\ncoordinator metrics snapshot: {}", c.metrics.snapshot().render());
+    match report.save_trail() {
+        Ok(path) => println!("bench json written to {path}"),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
 }

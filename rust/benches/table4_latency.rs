@@ -12,7 +12,7 @@
 //!
 //!     cargo bench --bench table4_latency
 
-use ds_softmax::benchlib::{bench, bench_batched, fmt_speedup, Table};
+use ds_softmax::benchlib::{bench, bench_batched, fmt_speedup, BenchReport, Table};
 use ds_softmax::data::ClusteredWorld;
 use ds_softmax::flops;
 use ds_softmax::model::dsoftmax::DSoftmax;
@@ -69,7 +69,7 @@ fn svd_engine(w: &Matrix, window: usize, refine: f64) -> SvdSoftmax {
             b.row_mut(i)[j] = acc;
         }
     }
-    SvdSoftmax { b, v, window, refine_frac: refine, singular_values: s }
+    SvdSoftmax::from_parts(b, v, window, refine, s)
 }
 
 fn main() {
@@ -89,6 +89,9 @@ fn main() {
         TaskSpec { name: "En-Ve", n: 7_744, d: 512, zipf: 1.05, paper_row: 2 },
         TaskSpec { name: "CASIA", n: 3_776, d: 256, zipf: 1e-9, paper_row: 3 },
     ];
+
+    // machine-readable trail of every measured latency (benchlib)
+    let mut report = BenchReport::new("table4_latency");
 
     for t in &tasks {
         let mut rng = Rng::new(3);
@@ -156,12 +159,29 @@ fn main() {
         );
         let p = PAPER[t.paper_row];
         let full_flops = flops::full_softmax(t.n, t.d) as f64;
+        // measure once, render twice: the human table and the
+        // BENCH_table4_latency.json trail share the same medians
+        let (full_1, full_b) = (lat(&full), lat_batch(&full));
+        let (ds_1, ds_b) = (lat(&ds), lat_batch(&ds));
+        let shard_b = lat_batch(&ds_shard4);
+        let (svd5_1, svd5_b) = (lat(&svd5), lat_batch(&svd5));
+        let (svd10_1, svd10_b) = (lat(&svd10), lat_batch(&svd10));
+        for (label, single_ms, batch_ms) in [
+            ("full", full_1, full_b),
+            ("ds64", ds_1, ds_b),
+            ("svd5", svd5_1, svd5_b),
+            ("svd10", svd10_1, svd10_b),
+        ] {
+            report.push(label, t.name, 1, 1, single_ms * 1e6);
+            report.push(label, t.name, bsz, 1, batch_ms * 1e6);
+        }
+        report.push("ds64", t.name, bsz, 4, shard_b * 1e6);
         table.row(vec![
             "Full".into(),
             "1.000".into(),
             "-".into(),
-            format!("{:.3}", lat(&full)),
-            format!("{:.3}", lat_batch(&full)),
+            format!("{full_1:.3}"),
+            format!("{full_b:.3}"),
             "-".into(),
             p.1.into(),
         ]);
@@ -169,17 +189,17 @@ fn main() {
             "DS-64".into(),
             format!("{:.3}", agree(&ds)),
             fmt_speedup(full_flops / ds.flops_per_query() as f64),
-            format!("{:.3}", lat(&ds)),
-            format!("{:.3}", lat_batch(&ds)),
-            format!("{:.3}", lat_batch(&ds_shard4)),
+            format!("{ds_1:.3}"),
+            format!("{ds_b:.3}"),
+            format!("{shard_b:.3}"),
             p.2.into(),
         ]);
         table.row(vec![
             "SVD-5".into(),
             format!("{:.3}", agree(&svd5)),
             fmt_speedup(full_flops / svd5.flops_per_query() as f64),
-            format!("{:.3}", lat(&svd5)),
-            format!("{:.3}", lat_batch(&svd5)),
+            format!("{svd5_1:.3}"),
+            format!("{svd5_b:.3}"),
             "-".into(),
             p.3.into(),
         ]);
@@ -187,21 +207,26 @@ fn main() {
             "SVD-10".into(),
             format!("{:.3}", agree(&svd10)),
             fmt_speedup(full_flops / svd10.flops_per_query() as f64),
-            format!("{:.3}", lat(&svd10)),
-            format!("{:.3}", lat_batch(&svd10)),
+            format!("{svd10_1:.3}"),
+            format!("{svd10_b:.3}"),
             "-".into(),
             p.4.into(),
         ]);
         match &dsm {
-            Some(dsm) => table.row(vec![
-                "D-softmax".into(),
-                format!("{:.3}", agree(dsm)),
-                fmt_speedup(full_flops / dsm.flops_per_query() as f64),
-                format!("{:.3}", lat(dsm)),
-                format!("{:.3}", lat_batch(dsm)),
-                "-".into(),
-                p.5.into(),
-            ]),
+            Some(dsm) => {
+                let (dsm_1, dsm_b) = (lat(dsm), lat_batch(dsm));
+                report.push("dsoftmax", t.name, 1, 1, dsm_1 * 1e6);
+                report.push("dsoftmax", t.name, bsz, 1, dsm_b * 1e6);
+                table.row(vec![
+                    "D-softmax".into(),
+                    format!("{:.3}", agree(dsm)),
+                    fmt_speedup(full_flops / dsm.flops_per_query() as f64),
+                    format!("{dsm_1:.3}"),
+                    format!("{dsm_b:.3}"),
+                    "-".into(),
+                    p.5.into(),
+                ]);
+            }
             None => table.row(vec![
                 "D-softmax".into(),
                 "-".into(),
@@ -213,5 +238,10 @@ fn main() {
             ]),
         }
         table.print();
+    }
+
+    match report.save_trail() {
+        Ok(path) => println!("\nbench json written to {path}"),
+        Err(e) => eprintln!("\nbench json write failed: {e}"),
     }
 }

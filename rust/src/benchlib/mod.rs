@@ -1,8 +1,12 @@
 //! Benchmark harness substrate (no `criterion` offline): warmup, timed
-//! iterations with outlier trimming, ns-resolution reporting, and the
-//! table formatter the per-paper-table benches share.
+//! iterations with outlier trimming, ns-resolution reporting, the
+//! table formatter the per-paper-table benches share, and the
+//! machine-readable `BENCH_*.json` trail ([`BenchReport`]) that gives
+//! the repo a perf trajectory (EXPERIMENTS.md §Perf).
 
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// One measured series.
 #[derive(Clone, Debug)]
@@ -124,6 +128,90 @@ impl Table {
     }
 }
 
+/// One machine-readable bench row: which engine, what shape, how fast.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub engine: String,
+    pub shape: String,
+    /// logical queries per timed call (1 = single-query path)
+    pub batch: usize,
+    /// expert-parallel shards behind the engine (1 = unsharded)
+    pub shards: usize,
+    pub median_ns: f64,
+}
+
+/// A named collection of [`BenchRow`]s serialized to `BENCH_<name>.json`
+/// so successive runs form a diffable perf trajectory.  Written by
+/// `dss bench --json`, `micro_hotpath`, and `table4_latency`.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub name: String,
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, engine: &str, shape: &str, batch: usize, shards: usize, median_ns: f64) {
+        self.rows.push(BenchRow {
+            engine: engine.to_string(),
+            shape: shape.to_string(),
+            batch,
+            shards,
+            median_ns,
+        });
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::from(self.name.as_str())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("engine", Json::from(r.engine.as_str())),
+                                ("shape", Json::from(r.shape.as_str())),
+                                ("batch", Json::from(r.batch)),
+                                ("shards", Json::from(r.shards)),
+                                ("median_ns", Json::from(r.median_ns)),
+                                ("qps", Json::from(qps(r.median_ns))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json`-style output to `path`.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path.as_ref(), format!("{}\n", self.to_json()))
+    }
+
+    /// Conventional file name for this report's trail.
+    pub fn default_path(&self) -> String {
+        format!("BENCH_{}.json", self.name)
+    }
+
+    /// Write the trail to its conventional location: `$DSS_BENCH_DIR/
+    /// BENCH_<name>.json` when the env var is set (the uniform redirect
+    /// every bench honors), the working directory otherwise.  Returns
+    /// the path written.
+    pub fn save_trail(&self) -> std::io::Result<String> {
+        let path = match std::env::var("DSS_BENCH_DIR") {
+            Ok(dir) => format!("{}/{}", dir.trim_end_matches('/'), self.default_path()),
+            Err(_) => self.default_path(),
+        };
+        self.save(&path)?;
+        Ok(path)
+    }
+}
+
 /// Helper: format a speedup like the paper ("15.99x").
 pub fn fmt_speedup(x: f64) -> String {
     format!("{x:.2}x")
@@ -194,6 +282,22 @@ mod tests {
     #[test]
     fn fmt_speedup_format() {
         assert_eq!(fmt_speedup(15.988), "15.99x");
+    }
+
+    #[test]
+    fn bench_report_round_trips() {
+        let mut r = BenchReport::new("unit");
+        r.push("ds", "N=10048 K=64", 32, 4, 1500.0);
+        assert_eq!(r.default_path(), "BENCH_unit.json");
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("engine").unwrap().as_str().unwrap(), "ds");
+        assert_eq!(rows[0].get("batch").unwrap().as_usize().unwrap(), 32);
+        assert_eq!(rows[0].get("shards").unwrap().as_usize().unwrap(), 4);
+        let q = rows[0].get("qps").unwrap().as_f64().unwrap();
+        assert!((q - qps(1500.0)).abs() < 1e-6);
     }
 
     #[test]

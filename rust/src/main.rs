@@ -37,6 +37,7 @@ USAGE: dss <serve|query|inspect|gen|bench> [options]
   inspect  --artifact <name>
   gen      --n N --d D --experts K --redundancy M
   bench    --n N --d D --experts K [--iters I] [--batch B] [--shards S]
+           [--json <path>]   (machine-readable BENCH_*.json trail)
 
 Common: --artifacts-dir <path> (default ./artifacts or $DSS_ARTIFACTS)
 ";
@@ -320,12 +321,16 @@ fn bench(args: &Args) -> anyhow::Result<()> {
     let ds = DsSoftmax::new(set);
     let full = FullSoftmax::new(ds_softmax::tensor::Matrix::random(n, d, &mut rng, 0.05));
     let h = rng.normal_vec(d, 1.0);
+    let shape = format!("N={n} d={d} K={k}");
+    let mut report = benchlib::BenchReport::new("dss_bench");
     let mf = benchlib::bench("full", 10, iters, || {
         std::hint::black_box(full.query(&h, 10));
     });
     let md = benchlib::bench("ds", 10, iters, || {
         std::hint::black_box(ds.query(&h, 10));
     });
+    report.push("full", &shape, 1, 1, mf.median_ns);
+    report.push("ds", &shape, 1, 1, md.median_ns);
     // batched zero-allocation path: pack a batch once, reuse the arena
     let bsz = args.usize_or("batch", 64);
     let packed: Vec<f32> = (0..bsz).flat_map(|_| rng.normal_vec(d, 1.0)).collect();
@@ -336,6 +341,7 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         ds.query_batch(view, 10, &mut out);
         std::hint::black_box(&out);
     });
+    report.push("ds", &shape, bsz, 1, mb.median_ns);
     println!(
         "full: {:.1}µs   ds-{k}: {:.1}µs   latency speedup {:.2}x   flops speedup {:.2}x",
         mf.per_iter_us(),
@@ -369,6 +375,8 @@ fn bench(args: &Args) -> anyhow::Result<()> {
             pooled.query_batch(view, 10, &mut sh_out);
             std::hint::black_box(&sh_out);
         });
+        report.push("sharded-serial", &shape, bsz, shards, ms.median_ns);
+        report.push("sharded-pooled", &shape, bsz, shards, mp.median_ns);
         println!(
             "ds-{k} sharded S={shards} (B={bsz}): serial {:.1}µs/query ({:.2}x of batched), pooled {:.1}µs/query ({:.2}x of batched)",
             ms.per_iter_us(),
@@ -376,6 +384,16 @@ fn bench(args: &Args) -> anyhow::Result<()> {
             mp.per_iter_us(),
             mp.median_ns / mb.median_ns,
         );
+    }
+    // machine-readable trail: --json <path> names the file explicitly;
+    // --json alone uses the conventional location ($DSS_BENCH_DIR or
+    // the working directory, like the bench binaries)
+    if let Some(path) = args.get("json") {
+        report.save(path)?;
+        println!("bench json written to {path}");
+    } else if args.flag("json") {
+        let path = report.save_trail()?;
+        println!("bench json written to {path}");
     }
     Ok(())
 }

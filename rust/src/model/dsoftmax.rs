@@ -13,7 +13,8 @@
 
 use crate::model::SoftmaxEngine;
 use crate::query::{with_scratch, MatrixView, TopKBuf};
-use crate::tensor::{dot, softmax_inplace, Matrix};
+use crate::tensor::kernel;
+use crate::tensor::Matrix;
 
 pub struct DSoftmaxBucket {
     /// rows for this bucket's classes, width = dim.
@@ -59,25 +60,37 @@ impl DSoftmax {
 }
 
 impl SoftmaxEngine for DSoftmax {
+    /// Batched path: per row tile, every bucket runs through the tiled
+    /// kernel with its truncated width (`d ≤ a_stride`: the kernel
+    /// reduces over a context-row prefix), writing its logit span at
+    /// the full-N stride; then the fused select-then-normalize tail
+    /// finishes each row.
     fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
         assert_eq!(hs.cols, self.d_full, "row width vs model dim");
         out.reset(hs.rows, k);
         with_scratch(|s| {
-            let crate::query::QueryScratch { logits, heap, .. } = s;
-            logits.resize(self.n, 0.0);
+            let crate::query::QueryScratch { heap, tile, .. } = s;
             heap.set_k(k);
-            for row in 0..hs.rows {
-                let h = hs.row(row);
+            tile.resize(kernel::TILE_ROWS * self.n, 0.0);
+            for t0 in (0..hs.rows).step_by(kernel::TILE_ROWS) {
+                let th = kernel::TILE_ROWS.min(hs.rows - t0);
                 for b in &self.buckets {
-                    for r in 0..b.weights.rows {
-                        logits[b.start + r] = dot(b.weights.row(r), &h[..b.dim]);
-                    }
+                    kernel::matmul_nt_strided_into(
+                        &hs.data()[t0 * self.d_full..],
+                        self.d_full,
+                        &b.weights.data,
+                        b.dim,
+                        th,
+                        b.weights.rows,
+                        b.dim,
+                        &mut tile[b.start..],
+                        self.n,
+                    );
                 }
-                softmax_inplace(logits);
-                heap.clear();
-                heap.push_slice(logits);
-                for &(p, i) in heap.sorted_in_place() {
-                    out.push(row, i, p);
+                for i in 0..th {
+                    let row_logits = &tile[i * self.n..(i + 1) * self.n];
+                    let (m, inv) = kernel::select_scaled_topk(row_logits, 1.0, heap);
+                    kernel::emit_normalized(heap, m, inv, |id, p| out.push(t0 + i, id, p));
                 }
             }
         });

@@ -15,7 +15,8 @@
 use crate::model::SoftmaxEngine;
 use crate::query::{with_scratch, MatrixView, Route, TopKBuf, MAX_ROUTE_WIDTH};
 use crate::sparse::ExpertSet;
-use crate::tensor::{argmax, dot, scaled_softmax_inplace, softmax_inplace};
+use crate::tensor::kernel;
+use crate::tensor::{argmax, dot, softmax_inplace};
 use crate::util::topk::TopK;
 
 pub struct DsSoftmax {
@@ -133,9 +134,13 @@ impl DsSoftmax {
         });
     }
 
-    /// Stage 2 with explicit scratch: packed expert softmax + top-k
-    /// (Eq. 2) for one row already routed to `expert` with gate value
-    /// `gate` (allocates only the returned Vec).
+    /// Stage 2 with explicit scratch: packed expert matvec + fused
+    /// select-then-normalize top-k (Eq. 2) for one row already routed
+    /// to `expert` with gate value `gate` (allocates only the returned
+    /// Vec).  Selection runs on the gate-scaled logits directly —
+    /// softmax is monotone — and only the k winners are normalized on
+    /// emit (the exp-sum pass still visits each logit once; the saving
+    /// is the removed store/normalize/reload traffic).
     pub fn expert_topk(
         &self,
         h: &[f32],
@@ -149,15 +154,12 @@ impl DsSoftmax {
         for (r, out) in logits.iter_mut().enumerate() {
             *out = dot(e.weights.row(r), h);
         }
-        scaled_softmax_inplace(logits, gate);
-        scratch.heap.clear();
-        scratch.heap.push_slice(logits);
-        scratch
-            .heap
-            .sorted_in_place()
-            .iter()
-            .map(|&(p, i)| (e.class_ids[i as usize] as u32, p))
-            .collect()
+        let (m, inv) = kernel::select_scaled_topk(logits, gate, &mut scratch.heap);
+        let mut top = Vec::with_capacity(scratch.heap.k().min(e.valid));
+        kernel::emit_normalized(&mut scratch.heap, m, inv, |i, p| {
+            top.push((e.class_ids[i as usize] as u32, p));
+        });
+        top
     }
 
     /// Full single-row hot path with caller-owned scratch (no
@@ -166,49 +168,82 @@ impl DsSoftmax {
         let route = self.gate(h, &mut scratch.gate_logits);
         self.expert_topk(h, route.expert(), route.gate_value(), scratch)
     }
-
-    /// Stage 2 core: packed expert matvec + scaled softmax + top-k,
-    /// leaving the row's results sorted in `heap` (descending).  Shared
-    /// by `query_batch` and `run_expert_batch`; callers map the heap's
-    /// packed indices to class ids.  `logits` must hold at least `p`
-    /// slots and `heap` be targeted at the row's k.
-    #[inline]
-    fn expert_scores(
-        &self,
-        h: &[f32],
-        expert: usize,
-        gate: f32,
-        logits: &mut [f32],
-        heap: &mut TopK,
-    ) {
-        let e = &self.set.experts[expert];
-        let logits = &mut logits[..e.valid];
-        for (r, l) in logits.iter_mut().enumerate() {
-            *l = dot(e.weights.row(r), h);
-        }
-        scaled_softmax_inplace(logits, gate);
-        heap.clear();
-        heap.push_slice(logits);
-    }
 }
 
 impl SoftmaxEngine for DsSoftmax {
+    /// The batched hot path: route every row, counting-sort the rows by
+    /// routed expert so each expert's packed weights are streamed once
+    /// per batch (not once per row), run the tiled A·Bᵀ kernel over
+    /// each group, and finish each row with the fused
+    /// select-then-normalize top-k.  All workspaces live in per-thread
+    /// scratch — zero heap allocations once warm.
     fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
         assert_eq!(hs.cols, self.set.dim(), "row width vs model dim");
         out.reset(hs.rows, k);
+        if hs.rows == 0 {
+            return;
+        }
         with_scratch(|s| {
-            let crate::query::QueryScratch { gate, logits, heap } = s;
-            gate.resize(self.set.k(), 0.0);
-            logits.resize(self.set.p(), 0.0);
+            let crate::query::QueryScratch {
+                gate, heap, tile, routes, counts, starts, order, pack, ..
+            } = s;
+            let ke = self.set.k();
+            gate.resize(ke, 0.0);
             heap.set_k(k);
-            for r in 0..hs.rows {
-                let h = hs.row(r);
-                let route = self.gate_topm(h, 1, gate);
-                self.expert_scores(h, route.expert(), route.gate_value(), logits, heap);
-                let ids = &self.set.experts[route.expert()].class_ids;
-                for &(p, i) in heap.sorted_in_place() {
-                    out.push(r, ids[i as usize] as u32, p);
+            // 1. route every row — the same m = 1 gate math as
+            //    `route_batch` (inlined: scratch is not re-entrant)
+            routes.clear();
+            routes.resize(hs.rows, Route::empty());
+            for (r, route) in routes.iter_mut().enumerate() {
+                *route = route_m1(&self.set.gate, hs.row(r), gate);
+            }
+            // 2. counting-sort rows by routed expert (the shared
+            //    grouping path — see `query::group_rows`)
+            crate::query::group_rows(
+                hs.rows,
+                ke,
+                |r| Some(routes[r].expert()),
+                counts,
+                starts,
+                order,
+            );
+            // 3. per expert group: gather the group's rows contiguously,
+            //    tile them through the kernel, fused top-k per row
+            for e in 0..ke {
+                let (lo, hi) = (starts[e] as usize, starts[e + 1] as usize);
+                if lo == hi {
+                    continue;
                 }
+                let ex = &self.set.experts[e];
+                let group = hi - lo;
+                // singleton groups (the common case at small batch
+                // sizes) skip the gather copy: the row is already
+                // contiguous in the caller's batch
+                let rows_data: &[f32] = if group == 1 {
+                    hs.row(order[lo] as usize)
+                } else {
+                    pack.reset(hs.cols);
+                    for &r in &order[lo..hi] {
+                        pack.push_row(hs.row(r as usize));
+                    }
+                    pack.view().data()
+                };
+                kernel::tiled_fused_topk(
+                    rows_data,
+                    hs.cols,
+                    group,
+                    &ex.weights.data,
+                    ex.weights.cols,
+                    ex.valid,
+                    hs.cols,
+                    tile,
+                    heap,
+                    |i| routes[order[lo + i] as usize].gate_value(),
+                    |i, j, p| {
+                        let r = order[lo + i] as usize;
+                        out.push(r, ex.class_ids[j as usize] as u32, p);
+                    },
+                );
             }
         });
     }
@@ -240,16 +275,24 @@ impl SoftmaxEngine for DsSoftmax {
         );
         out.reset(hs.rows, k);
         with_scratch(|s| {
-            let crate::query::QueryScratch { logits, heap, .. } = s;
-            logits.resize(self.set.p(), 0.0);
+            let crate::query::QueryScratch { heap, tile, .. } = s;
             heap.set_k(k);
-            let ids = &self.set.experts[expert].class_ids;
-            for r in 0..hs.rows {
-                self.expert_scores(hs.row(r), expert, gates[r], logits, heap);
-                for &(p, i) in heap.sorted_in_place() {
-                    out.push(r, ids[i as usize] as u32, p);
-                }
-            }
+            let ex = &self.set.experts[expert];
+            // all rows share one expert: stream its packed weights in
+            // row tiles, fused top-k per row
+            kernel::tiled_fused_topk(
+                hs.data(),
+                hs.cols,
+                hs.rows,
+                &ex.weights.data,
+                ex.weights.cols,
+                ex.valid,
+                hs.cols,
+                tile,
+                heap,
+                |i| gates[i],
+                |i, j, p| out.push(i, ex.class_ids[j as usize] as u32, p),
+            );
         });
         Ok(())
     }

@@ -3,6 +3,7 @@
 
 use crate::model::SoftmaxEngine;
 use crate::query::{with_scratch, MatrixView, TopKBuf};
+use crate::tensor::kernel;
 use crate::tensor::{softmax_inplace, Matrix};
 use crate::util::topk::TopK;
 
@@ -22,7 +23,10 @@ impl FullSoftmax {
         logits
     }
 
-    /// Explicit-scratch hot path: caller provides logits scratch.
+    /// Explicit-scratch single-row path: caller provides logits
+    /// scratch.  Deliberately kept as the two-pass
+    /// exp-all-then-heap-on-probs form — it is the reference the fused
+    /// batched path is property-tested against (`kernel_props.rs`).
     pub fn query_into(&self, h: &[f32], heap: &mut TopK, logits: &mut [f32]) {
         self.w.matvec_into(h, logits);
         softmax_inplace(logits);
@@ -32,22 +36,28 @@ impl FullSoftmax {
 }
 
 impl SoftmaxEngine for FullSoftmax {
+    /// Batched exact softmax: row tiles through the A·Wᵀ kernel (W
+    /// streamed once per `TILE_ROWS` rows instead of once per row),
+    /// fused select-then-normalize tail per row.
     fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
         assert_eq!(hs.cols, self.w.cols, "row width vs model dim");
         out.reset(hs.rows, k);
         with_scratch(|s| {
-            let crate::query::QueryScratch { logits, heap, .. } = s;
-            logits.resize(self.w.rows, 0.0);
+            let crate::query::QueryScratch { heap, tile, .. } = s;
             heap.set_k(k);
-            for r in 0..hs.rows {
-                self.w.matvec_into(hs.row(r), logits);
-                softmax_inplace(logits);
-                heap.clear();
-                heap.push_slice(logits);
-                for &(p, i) in heap.sorted_in_place() {
-                    out.push(r, i, p);
-                }
-            }
+            kernel::tiled_fused_topk(
+                hs.data(),
+                hs.cols,
+                hs.rows,
+                &self.w.data,
+                self.w.cols,
+                self.w.rows,
+                hs.cols,
+                tile,
+                heap,
+                |_| 1.0,
+                |i, id, p| out.push(i, id, p),
+            );
         });
     }
 

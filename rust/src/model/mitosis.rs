@@ -10,7 +10,10 @@
 //! `MitosisEngine` instantiates the sparsity statistics of one phase
 //! (K experts at that phase's end-of-phase occupancy) as a servable
 //! DS-Softmax, so mid-training checkpoints answer queries through the
-//! same batched `SoftmaxEngine` API as every other engine.
+//! same batched `SoftmaxEngine` API as every other engine — including
+//! the inner engine's expert-grouped tiled-kernel batch path and fused
+//! select-then-normalize top-k (`tensor::kernel`), which the
+//! delegating `query_batch`/`run_expert_batch` below inherit verbatim.
 
 use crate::model::dssoftmax::DsSoftmax;
 use crate::model::SoftmaxEngine;

@@ -13,9 +13,9 @@
 //! refinement of the top 5% / 10% classes (§3.5).
 
 use crate::model::SoftmaxEngine;
-use crate::query::{MatrixView, TopKBuf};
-use crate::tensor::{dot, softmax_inplace, Matrix};
-use crate::util::topk::{topk, TopK};
+use crate::query::{with_scratch, MatrixView, TopKBuf};
+use crate::tensor::kernel;
+use crate::tensor::{dot, Matrix};
 
 pub struct SvdSoftmax {
     /// B = U·Σ, N×d, columns sorted by descending singular value.
@@ -31,70 +31,114 @@ impl SvdSoftmax {
     /// Factor `w` (N×d) and build the engine.
     pub fn new(w: &Matrix, window: usize, refine_frac: f64) -> Self {
         let (b, v, s) = jacobi_svd(w, 30, 1e-9);
-        Self {
-            b,
-            v,
-            window: window.min(w.cols),
-            refine_frac,
-            singular_values: s,
-        }
+        Self::from_parts(b, v, window, refine_frac, s)
+    }
+
+    /// Assemble from an existing factorization W = B·Vᵀ (e.g. the
+    /// subsampled SVD the latency bench uses at Wiki-2 scale).
+    pub fn from_parts(
+        b: Matrix,
+        v: Matrix,
+        window: usize,
+        refine_frac: f64,
+        singular_values: Vec<f32>,
+    ) -> Self {
+        let window = window.min(b.cols);
+        Self { b, v, window, refine_frac, singular_values }
     }
 
     fn n_refine(&self) -> usize {
         ((self.b.rows as f64) * self.refine_frac).ceil() as usize
     }
 
-    /// h̃ = Vᵀ h.
-    fn rotate(&self, h: &[f32]) -> Vec<f32> {
+    /// h̃ = Vᵀ h into caller scratch.  Deliberately the seed's scalar
+    /// accumulation (not the 8-lane `dot`): the rotation's summation
+    /// order is part of the engine's bit-exactness contract across
+    /// this kernel rewrite — the preview/refine stages downstream are
+    /// `dot`-based and run through the kernel unchanged.
+    fn rotate_into(&self, h: &[f32], out: &mut [f32]) {
         let d = self.v.rows;
-        let mut out = vec![0.0; d];
-        for (j, o) in out.iter_mut().enumerate() {
+        for (j, o) in out[..d].iter_mut().enumerate() {
             let mut s = 0.0;
             for i in 0..d {
                 s += self.v.row(i)[j] * h[i];
             }
             *o = s;
         }
-        out
-    }
-
-    /// One row's preview → refine → top-k pipeline (the engine's unit
-    /// of work; `query_batch` maps it over the batch).
-    fn query_row(&self, h: &[f32], k: usize) -> Vec<(u32, f32)> {
-        let ht = self.rotate(h);
-        let n = self.b.rows;
-        let w = self.window;
-        // preview pass
-        let mut logits = vec![0.0f32; n];
-        for (r, l) in logits.iter_mut().enumerate() {
-            *l = dot(&self.b.row(r)[..w], &ht[..w]);
-        }
-        // refine top candidates at full width
-        let nr = self.n_refine().max(k).min(n);
-        let candidates = topk(&logits, nr);
-        for &(_, r) in &candidates {
-            logits[r as usize] = dot(self.b.row(r as usize), &ht);
-        }
-        softmax_inplace(&mut logits);
-        let mut heap = TopK::new(k);
-        // only refined candidates are eligible for the final top-k (the
-        // preview-only logits are approximations)
-        for &(_, r) in &candidates {
-            heap.push(logits[r as usize], r);
-        }
-        heap.into_sorted().into_iter().map(|(p, i)| (i, p)).collect()
     }
 }
 
 impl SoftmaxEngine for SvdSoftmax {
+    /// Batched preview → refine → top-k: the window-`w` preview runs
+    /// through the tiled kernel (B's preview columns streamed once per
+    /// row tile), refinement patches the top candidates at full width,
+    /// and the tail is fused — the exp-sum is taken over the whole
+    /// preview+refined row while selection and normalization touch
+    /// only the refined candidates.  The rotation stays the seed's
+    /// scalar loop for bit-exactness (see `rotate_into`).
     fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
         assert_eq!(hs.cols, self.b.cols, "row width vs model dim");
         out.reset(hs.rows, k);
-        for r in 0..hs.rows {
-            for (id, p) in self.query_row(hs.row(r), k) {
-                out.push(r, id, p);
-            }
+        if hs.rows == 0 {
+            return;
         }
+        let n = self.b.rows;
+        let d = self.b.cols;
+        let w = self.window;
+        let nr = self.n_refine().max(k).min(n);
+        with_scratch(|s| {
+            let crate::query::QueryScratch { heap, heap2, tile, rot, cand, .. } = s;
+            heap.set_k(k);
+            heap2.set_k(nr);
+            tile.resize(kernel::TILE_ROWS * n, 0.0);
+            // per-tile rotation keeps scratch model-bounded (O(tile·d),
+            // not O(batch·d)) like every other engine
+            rot.resize(kernel::TILE_ROWS * d, 0.0);
+            for t0 in (0..hs.rows).step_by(kernel::TILE_ROWS) {
+                let th = kernel::TILE_ROWS.min(hs.rows - t0);
+                // stage 1: h̃ = Vᵀ·h per row (bit-exact scalar rotation,
+                // see `rotate_into`)
+                for i in 0..th {
+                    self.rotate_into(hs.row(t0 + i), &mut rot[i * d..(i + 1) * d]);
+                }
+                // stage 2: preview logits over the top-w singular
+                // directions (reduce over the h̃ prefix: d = w < stride)
+                kernel::matmul_nt_strided_into(
+                    rot,
+                    d,
+                    &self.b.data,
+                    self.b.cols,
+                    th,
+                    n,
+                    w,
+                    tile,
+                    n,
+                );
+                for i in 0..th {
+                    let ht = &rot[i * d..(i + 1) * d];
+                    let row = &mut tile[i * n..(i + 1) * n];
+                    // candidates: top-nr preview logits, descending
+                    heap2.clear();
+                    heap2.push_slice(row);
+                    cand.clear();
+                    cand.extend(heap2.sorted_in_place().iter().map(|&(_, c)| c));
+                    // stage 3: refine candidates at full width
+                    for &c in cand.iter() {
+                        row[c as usize] = dot(self.b.row(c as usize), ht);
+                    }
+                    // stage 4: fused tail — normalize against the whole
+                    // row, select only among refined candidates (the
+                    // preview-only logits are approximations)
+                    let (m, sum) = kernel::max_and_expsum(row);
+                    let inv = 1.0 / sum;
+                    heap.clear();
+                    for &c in cand.iter() {
+                        heap.push(row[c as usize], c);
+                    }
+                    kernel::emit_normalized(heap, m, inv, |id, p| out.push(t0 + i, id, p));
+                }
+            }
+        });
     }
 
     fn flops_per_query(&self) -> u64 {

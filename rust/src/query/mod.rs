@@ -17,8 +17,9 @@
 //!
 //! [`RowPack`] gathers non-contiguous rows (e.g. the batcher's queued
 //! queries) into a reusable contiguous buffer, and [`with_scratch`]
-//! hands engines a per-thread scratch (gate logits, expert logits,
-//! top-k heap) so the hot loop allocates nothing once warm.
+//! hands engines a per-thread scratch (gate logits, kernel tile
+//! buffers, top-k heaps, batch-grouping workspaces) so the hot loop
+//! allocates nothing once warm.
 
 use std::cell::RefCell;
 
@@ -273,20 +274,48 @@ impl RowPack {
     }
 }
 
-/// Per-thread scratch shared by the native engines: gate logits, dense
-/// logits, and a bounded top-k heap.  Buffers only grow (resize is a
-/// no-op once warm), so the steady-state hot path never allocates.
+/// Per-thread scratch shared by the native engines: gate logits, a
+/// bounded top-k heap, and the tiled-kernel workspaces
+/// (`tensor::kernel` tile buffers, batch routes, counting-sort state,
+/// row gather).  Buffers only grow (resize is a no-op once warm), so
+/// the steady-state hot path never allocates.
 pub struct QueryScratch {
     pub gate: Vec<f32>,
-    pub logits: Vec<f32>,
     pub heap: TopK,
+    /// kernel tile output: `TILE_ROWS` rows of logits at the engine's
+    /// class-row stride
+    pub tile: Vec<f32>,
+    /// rotated batch for the SVD two-stage projection (rows × d)
+    pub rot: Vec<f32>,
+    /// secondary selection heap (SVD candidate refinement)
+    pub heap2: TopK,
+    /// refinement candidate ids, descending preview score
+    pub cand: Vec<u32>,
+    /// per-row routes for expert grouping inside `query_batch`
+    pub routes: Vec<Route>,
+    /// counting-sort workspace: per-expert counts, then cursors
+    pub counts: Vec<u32>,
+    /// per-expert segment starts (len = experts + 1)
+    pub starts: Vec<u32>,
+    /// row indices grouped by routed expert
+    pub order: Vec<u32>,
+    /// gathered rows of the active expert group
+    pub pack: RowPack,
 }
 
 thread_local! {
     static SCRATCH: RefCell<QueryScratch> = RefCell::new(QueryScratch {
         gate: Vec::new(),
-        logits: Vec::new(),
         heap: TopK::new(1),
+        tile: Vec::new(),
+        rot: Vec::new(),
+        heap2: TopK::new(1),
+        cand: Vec::new(),
+        routes: Vec::new(),
+        counts: Vec::new(),
+        starts: Vec::new(),
+        order: Vec::new(),
+        pack: RowPack::new(),
     });
 }
 
@@ -295,6 +324,55 @@ thread_local! {
 /// `f` (none does — batch loops are flat).
 pub fn with_scratch<R>(f: impl FnOnce(&mut QueryScratch) -> R) -> R {
     SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+/// Counting-sort `rows` row indices into `groups` buckets using
+/// caller scratch — the one expert-grouping implementation shared by
+/// `DsSoftmax::query_batch` and the sharded engine's per-shard scatter
+/// (their bit-identity contract rests on this being a single code
+/// path).  `key(r)` names row `r`'s group, or `None` to skip the row
+/// (the sharded caller skips rows routed to other shards).  On return
+/// `starts[g]..starts[g + 1]` indexes `order`, which lists each
+/// group's rows in ascending row order; `counts` is consumed as the
+/// cursor workspace.  Buffers only grow — zero allocations once warm.
+/// Returns the number of rows kept.
+pub fn group_rows(
+    rows: usize,
+    groups: usize,
+    key: impl Fn(usize) -> Option<usize>,
+    counts: &mut Vec<u32>,
+    starts: &mut Vec<u32>,
+    order: &mut Vec<u32>,
+) -> usize {
+    counts.clear();
+    counts.resize(groups, 0);
+    let mut total = 0u32;
+    for r in 0..rows {
+        if let Some(g) = key(r) {
+            counts[g] += 1;
+            total += 1;
+        }
+    }
+    starts.clear();
+    starts.resize(groups + 1, 0);
+    let mut acc = 0u32;
+    for (g, start) in starts.iter_mut().enumerate().take(groups) {
+        *start = acc;
+        acc += counts[g];
+    }
+    starts[groups] = acc;
+    order.clear();
+    order.resize(total as usize, 0);
+    // second pass: place rows; counts become per-group cursors
+    counts.copy_from_slice(&starts[..groups]);
+    for r in 0..rows {
+        if let Some(g) = key(r) {
+            let cur = &mut counts[g];
+            order[*cur as usize] = r as u32;
+            *cur += 1;
+        }
+    }
+    total as usize
 }
 
 /// Generic batched query for engines whose batch execution is
@@ -416,6 +494,35 @@ mod tests {
         let mut b = TopKBuf::with_shape(1, 1);
         b.push(0, 0, 1.0);
         b.push(0, 1, 0.5);
+    }
+
+    #[test]
+    fn group_rows_counting_sort() {
+        let mut counts = Vec::new();
+        let mut starts = Vec::new();
+        let mut order = Vec::new();
+        let keys = [2usize, 0, 2, 1, 0, 2];
+        let total = group_rows(6, 3, |r| Some(keys[r]), &mut counts, &mut starts, &mut order);
+        assert_eq!(total, 6);
+        assert_eq!(starts, vec![0, 2, 3, 6]);
+        // groups list their rows in ascending row order
+        assert_eq!(order, vec![1, 4, 3, 0, 2, 5]);
+        // filtered form (the sharded caller): other groups' rows skipped
+        let total = group_rows(
+            6,
+            3,
+            |r| (keys[r] == 2).then_some(2),
+            &mut counts,
+            &mut starts,
+            &mut order,
+        );
+        assert_eq!(total, 3);
+        assert_eq!(&order[starts[2] as usize..starts[3] as usize], &[0, 2, 5]);
+        // empty input
+        let total = group_rows(0, 3, |_| Some(0), &mut counts, &mut starts, &mut order);
+        assert_eq!(total, 0);
+        assert_eq!(starts, vec![0, 0, 0, 0]);
+        assert!(order.is_empty());
     }
 
     #[test]

@@ -17,8 +17,11 @@
 //! ```
 //!
 //! Results are **bit-identical** to the unsharded [`DsSoftmax`]: routing
-//! uses the same gate math, and every expert batch performs the same
-//! packed matvec/softmax/top-k on the same rows in the same order.
+//! uses the same gate math, and every per-expert segment flushes through
+//! the shard-local engine's `run_expert_batch` — the same tiled A·Bᵀ
+//! kernel (each expert's packed weights streamed once per row tile, see
+//! `tensor::kernel`) and fused select-then-normalize top-k that the
+//! unsharded batched path runs, on the same rows in the same order.
 //!
 //! Allocation discipline: all scatter/merge state (routes, counting-sort
 //! workspace, row packs, result arenas) lives in pooled
@@ -186,37 +189,22 @@ impl ShardedEngine {
     ) -> anyhow::Result<()> {
         let engine = &self.shards[shard].engine;
         let n_local = engine.set.k();
-        ss.counts.clear();
-        ss.counts.resize(n_local, 0);
-        let mut total = 0u32;
-        for route in routes {
-            let (sh, le) = self.local[route.expert()];
-            if sh as usize == shard {
-                ss.counts[le as usize] += 1;
-                total += 1;
-            }
-        }
-        ss.starts.clear();
-        ss.starts.resize(n_local + 1, 0);
-        let mut acc = 0u32;
-        for le in 0..n_local {
-            ss.starts[le] = acc;
-            acc += ss.counts[le];
-        }
-        ss.starts[n_local] = acc;
-        ss.order.clear();
-        ss.order.resize(total as usize, 0);
-        // second pass: place rows; counts become per-expert cursors
-        ss.counts.copy_from_slice(&ss.starts[..n_local]);
-        for (r, route) in routes.iter().enumerate() {
-            let (sh, le) = self.local[route.expert()];
-            if sh as usize == shard {
-                let cur = &mut ss.counts[le as usize];
-                ss.order[*cur as usize] = r as u32;
-                *cur += 1;
-            }
-        }
-        ss.acc.reset(total as usize, k);
+        // counting-sort this shard's rows by local expert — the same
+        // shared grouping path the unsharded engine's query_batch runs
+        // (`query::group_rows`), so scatter order is identical by
+        // construction
+        let total = crate::query::group_rows(
+            routes.len(),
+            n_local,
+            |r| {
+                let (sh, le) = self.local[routes[r].expert()];
+                (sh as usize == shard).then_some(le as usize)
+            },
+            &mut ss.counts,
+            &mut ss.starts,
+            &mut ss.order,
+        );
+        ss.acc.reset(total, k);
         for le in 0..n_local {
             let (lo, hi) = (ss.starts[le] as usize, ss.starts[le + 1] as usize);
             if lo == hi {

@@ -1,0 +1,283 @@
+//! Register-blocked, cache-tiled batch kernels — the batched hot path
+//! of every inference engine (EXPERIMENTS.md §Perf).
+//!
+//! Two ideas, both exact:
+//!
+//! * **Tiled A·Bᵀ** ([`matmul_nt_strided_into`]): the batched-logits
+//!   shape is (contexts × d)·(class-embeddings × d)ᵀ.  A naive per-row
+//!   loop re-streams the full class matrix once per context row, so a
+//!   batch of B rows pays B× the memory traffic of one row.  The kernel
+//!   walks the output in `TILE_ROWS × TILE_COLS` tiles with the tile's
+//!   accumulators held in registers; within a tile the `TILE_COLS`
+//!   class rows stay hot in L1/L2 while all `TILE_ROWS` context rows
+//!   are reduced against them, cutting class-matrix traffic by
+//!   `TILE_ROWS`×.  Each (row, class) cell is still reduced by the
+//!   8-lane [`dot`], so every output element is **bit-identical** to
+//!   the row-loop it replaces — tiling changes the walk order, never
+//!   the arithmetic.
+//! * **Fused select-then-normalize** ([`select_scaled_topk`]): softmax
+//!   is monotone, so top-k selection can run on the raw scaled logits —
+//!   no need to exponentiate-and-normalize all p packed logits before
+//!   the heap sees them.  One sweep selects and tracks the max, a
+//!   second accumulates the exp-sum in the original element order
+//!   (bit-identical to the stable-softmax sum), and only the k winners
+//!   are re-exponentiated and normalized on emit ([`emit_normalized`]).
+//!   The exp-sum still visits every element once — the win is the
+//!   removed store/normalize/reload traffic over all p logits, not the
+//!   exp count (EXPERIMENTS.md §Perf).
+//!
+//! Exactness caveat (documented, property-tested in
+//! `rust/tests/kernel_props.rs`): selection on logits and selection on
+//! probabilities order elements identically except when `exp` rounding
+//! collapses two *distinct* logits onto the same f32 probability — a
+//! ≤1-ulp boundary event that additionally has to straddle the top-k
+//! threshold to be observable.  The fused path then keeps the
+//! strictly-larger logit, i.e. the mathematically correct winner.
+
+use crate::query::MatrixView;
+use crate::tensor::{dot, Matrix};
+use crate::util::topk::TopK;
+
+/// Context rows per output tile.  4×8 accumulators = 32 f32 — small
+/// enough to live in registers on every target we build for; see the
+/// tile sweep in EXPERIMENTS.md §Perf.
+pub const TILE_ROWS: usize = 4;
+/// Class rows per output tile.
+pub const TILE_COLS: usize = 8;
+
+/// C = A·Bᵀ into caller scratch, tiled.  `a` holds `m` rows of `d`
+/// values each, laid out `a_stride` apart (rows may be wider than the
+/// reduced width `d`: the D-softmax buckets and the SVD preview reduce
+/// over a row prefix).  `b` holds `n` rows at `b_stride`; `out` is
+/// written row-major at `out_stride` (`out[i*out_stride + j] =
+/// dot(a_row_i[..d], b_row_j[..d])`).  Every element is bit-identical
+/// to the naive row loop over [`dot`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_strided_into(
+    a: &[f32],
+    a_stride: usize,
+    b: &[f32],
+    b_stride: usize,
+    m: usize,
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!((m - 1) * a_stride + d <= a.len(), "A shape");
+    assert!((n - 1) * b_stride + d <= b.len(), "B shape");
+    assert!((m - 1) * out_stride + n <= out.len(), "out shape");
+    for i0 in (0..m).step_by(TILE_ROWS) {
+        let th = TILE_ROWS.min(m - i0);
+        for j0 in (0..n).step_by(TILE_COLS) {
+            let tw = TILE_COLS.min(n - j0);
+            // the tile's accumulators: TILE_ROWS × TILE_COLS cells in
+            // registers, each reduced by the 8-lane dot
+            let mut acc = [[0.0f32; TILE_COLS]; TILE_ROWS];
+            for (i, acc_row) in acc.iter_mut().enumerate().take(th) {
+                let at = (i0 + i) * a_stride;
+                let ar = &a[at..at + d];
+                for (j, cell) in acc_row.iter_mut().enumerate().take(tw) {
+                    let bt = (j0 + j) * b_stride;
+                    *cell = dot(ar, &b[bt..bt + d]);
+                }
+            }
+            for (i, acc_row) in acc.iter().enumerate().take(th) {
+                let ot = (i0 + i) * out_stride + j0;
+                out[ot..ot + tw].copy_from_slice(&acc_row[..tw]);
+            }
+        }
+    }
+}
+
+/// C = A·Bᵀ for a packed batch view against a class matrix: `out` must
+/// hold `a.rows × b.rows` values (row-major, stride `b.rows`).
+pub fn matmul_nt_into(a: MatrixView<'_>, b: &Matrix, out: &mut [f32]) {
+    assert_eq!(a.cols, b.cols, "matmul_nt_into width mismatch");
+    matmul_nt_strided_into(a.data(), a.cols, &b.data, b.cols, a.rows, b.rows, a.cols, out, b.rows);
+}
+
+/// Fused select-then-normalize, stage 1+2: select the top-k **scaled
+/// logits** into `heap` while tracking the running max, then accumulate
+/// the exp-sum in the original element order (the exact f32 add
+/// sequence of the two-pass stable softmax).  Returns `(max,
+/// inv_sum)`; feed them to [`emit_normalized`] to produce the winners'
+/// probabilities.  The heap is cleared on entry; its retained scores
+/// are scaled logits, not probabilities, until emit.
+pub fn select_scaled_topk(logits: &[f32], scale: f32, heap: &mut TopK) -> (f32, f32) {
+    heap.clear();
+    let k = heap.k();
+    let mut m = f32::NEG_INFINITY;
+    let mut it = logits.iter().enumerate();
+    // fill phase: the first k elements always enter the heap
+    for (i, &x) in it.by_ref() {
+        let s = x * scale;
+        m = m.max(s);
+        heap.push(s, i as u32);
+        if i + 1 == k {
+            break;
+        }
+    }
+    // steady phase: threshold cached in a register (same short-circuit
+    // as `TopK::push_slice`) — below-threshold elements cost one
+    // compare, and the heap is only touched on entry
+    let mut min = heap.threshold();
+    for (i, &x) in it {
+        let s = x * scale;
+        m = m.max(s);
+        if s > min {
+            heap.push(s, i as u32);
+            min = heap.threshold();
+        }
+    }
+    let mut sum = 0.0f32;
+    for &x in logits {
+        sum += (x * scale - m).exp();
+    }
+    (m, 1.0 / sum)
+}
+
+/// Fused select-then-normalize, stage 3: sort the selected scaled
+/// logits descending and emit each winner as `(id, exp(s − max) ·
+/// inv_sum)` — the only exponentiations paid per row beyond the sum
+/// pass, and bit-identical to the two-pass probabilities.
+pub fn emit_normalized(heap: &mut TopK, max: f32, inv_sum: f32, mut emit: impl FnMut(u32, f32)) {
+    for &(s, i) in heap.sorted_in_place() {
+        emit(i, (s - max).exp() * inv_sum);
+    }
+}
+
+/// Tiled batch → fused top-k driver: walk `rows` packed context rows
+/// (`a`, laid out `a_stride` apart, reduced over width `d`) in
+/// `TILE_ROWS` tiles against one class matrix (`b`, `n` rows at
+/// `b_stride`), then run the fused select-then-normalize tail on each
+/// row.  This is the single implementation of the tile/tail contract
+/// shared by the DS expert paths (grouped `query_batch`,
+/// `run_expert_batch`) and the full softmax; the D-softmax multi-bucket
+/// and SVD preview/refine shapes drive [`matmul_nt_strided_into`]
+/// directly.  `tile` is caller scratch (resized here, grow-only);
+/// `scale_of(i)` is row i's inverse temperature; `emit(i, id, p)`
+/// receives row i's winners in descending probability order, `id`
+/// being the class-matrix row.
+#[allow(clippy::too_many_arguments)]
+pub fn tiled_fused_topk(
+    a: &[f32],
+    a_stride: usize,
+    rows: usize,
+    b: &[f32],
+    b_stride: usize,
+    n: usize,
+    d: usize,
+    tile: &mut Vec<f32>,
+    heap: &mut TopK,
+    mut scale_of: impl FnMut(usize) -> f32,
+    mut emit: impl FnMut(usize, u32, f32),
+) {
+    tile.resize(TILE_ROWS * n, 0.0);
+    for t0 in (0..rows).step_by(TILE_ROWS) {
+        let th = TILE_ROWS.min(rows - t0);
+        matmul_nt_strided_into(&a[t0 * a_stride..], a_stride, b, b_stride, th, n, d, tile, n);
+        for i in 0..th {
+            let row_logits = &tile[i * n..(i + 1) * n];
+            let (m, inv) = select_scaled_topk(row_logits, scale_of(t0 + i), heap);
+            emit_normalized(heap, m, inv, |id, p| emit(t0 + i, id, p));
+        }
+    }
+}
+
+/// Max and exp-sum of a slice in one helper (the SVD engine normalizes
+/// over the whole preview+refined row while selecting only among the
+/// refined candidates, so it needs the pieces separately).  The sum is
+/// accumulated in element order — identical bits to `softmax_inplace`'s
+/// denominator.
+pub fn max_and_expsum(xs: &[f32]) -> (f32, f32) {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for &x in xs {
+        sum += (x - m).exp();
+    }
+    (m, sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::scaled_softmax_inplace;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiled_matches_row_loop_exactly() {
+        let mut rng = Rng::new(1);
+        for &(m, n, d) in &[(1usize, 1usize, 1usize), (3, 5, 7), (9, 17, 200), (4, 8, 64)] {
+            let a = Matrix::random(m, d, &mut rng, 1.0);
+            let b = Matrix::random(n, d, &mut rng, 1.0);
+            let mut got = vec![f32::NAN; m * n];
+            matmul_nt_into(MatrixView::from(&a), &b, &mut got);
+            for i in 0..m {
+                for j in 0..n {
+                    let want = dot(a.row(i), b.row(j));
+                    assert_eq!(got[i * n + j].to_bits(), want.to_bits(), "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_no_ops() {
+        let a = Matrix::zeros(0, 4);
+        let b = Matrix::zeros(3, 4);
+        let mut out: Vec<f32> = Vec::new();
+        matmul_nt_into(MatrixView::from(&a), &b, &mut out);
+        matmul_nt_strided_into(&[], 4, &b.data, 4, 0, 3, 4, &mut out, 3);
+        matmul_nt_strided_into(&b.data, 4, &[], 4, 3, 0, 4, &mut [0.0; 3], 0);
+    }
+
+    #[test]
+    fn fused_matches_two_pass_on_small_case() {
+        let mut rng = Rng::new(2);
+        let logits = rng.normal_vec(37, 1.0);
+        let scale = 0.7f32;
+        let mut two = logits.clone();
+        scaled_softmax_inplace(&mut two, scale);
+        let mut h1 = TopK::new(5);
+        h1.push_slice(&two);
+        let want = h1.sorted_in_place().to_vec();
+        let mut h2 = TopK::new(5);
+        let (m, inv) = select_scaled_topk(&logits, scale, &mut h2);
+        let mut got = Vec::new();
+        emit_normalized(&mut h2, m, inv, |id, p| got.push((p, id)));
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.1, w.1);
+            assert_eq!(g.0.to_bits(), w.0.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_handles_empty_and_short_slices() {
+        let mut heap = TopK::new(3);
+        let (m, inv) = select_scaled_topk(&[], 1.0, &mut heap);
+        assert_eq!(m, f32::NEG_INFINITY);
+        assert!(inv.is_infinite());
+        let mut count = 0;
+        emit_normalized(&mut heap, m, inv, |_, _| count += 1);
+        assert_eq!(count, 0);
+        // fewer elements than k: all normalize to a proper softmax
+        let (m, inv) = select_scaled_topk(&[1.0, 2.0], 1.0, &mut heap);
+        let mut sum = 0.0;
+        emit_normalized(&mut heap, m, inv, |_, p| sum += p);
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_and_expsum_matches_softmax_denominator() {
+        let xs = [1000.0f32, 1001.0, 999.0];
+        let (m, sum) = max_and_expsum(&xs);
+        assert_eq!(m, 1001.0);
+        assert!(sum.is_finite() && sum > 1.0);
+        assert_eq!(max_and_expsum(&[]).0, f32::NEG_INFINITY);
+    }
+}

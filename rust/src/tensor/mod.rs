@@ -6,7 +6,11 @@
 //! The engines deliberately use matvec-per-query and matmul-per-batch
 //! rather than a general einsum: the shapes here are tall-skinny
 //! (N×d · d) which a tuned dot-product loop handles at memory-bandwidth
-//! roofline on CPU.
+//! roofline on CPU.  Batched paths go through [`kernel`] — the
+//! register-blocked, cache-tiled A·Bᵀ micro-kernel and the fused
+//! select-then-normalize top-k.
+
+pub mod kernel;
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,17 +61,23 @@ impl Matrix {
     }
 
     /// C = A · Bᵀ where both are row-major: (m×d)·(n×d)ᵀ = m×n.
-    /// This is the batched-logits shape (contexts × class-embeddings).
+    /// This is the batched-logits shape (contexts × class-embeddings);
+    /// executed by the tiled [`kernel::matmul_nt_strided_into`], which
+    /// is bit-identical to the per-row dot loop.
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols);
         let mut out = Matrix::zeros(self.rows, other.rows);
-        for i in 0..self.rows {
-            let a = self.row(i);
-            let orow = out.row_mut(i);
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o = dot(a, other.row(j));
-            }
-        }
+        kernel::matmul_nt_strided_into(
+            &self.data,
+            self.cols,
+            &other.data,
+            other.cols,
+            self.rows,
+            other.rows,
+            self.cols,
+            &mut out.data,
+            other.rows,
+        );
         out
     }
 
