@@ -13,6 +13,8 @@
 //!   query_batch       the zero-allocation batched path (TopKBuf arena)
 //!   sharded S=4       expert-parallel scatter/merge (serial + pooled)
 //!   coordinator       submit→complete round-trip (batching overhead)
+//!   reload            EngineHandle::load pin/unpin vs raw Arc clone,
+//!                     and EngineCell::swap latency under reader load
 //!
 //! Also writes the machine-readable BENCH_micro_hotpath.json trail.
 //!
@@ -26,6 +28,7 @@ use ds_softmax::model::dssoftmax::{DsScratch, DsSoftmax};
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, Route, TopKBuf};
+use ds_softmax::runtime::reload::EngineCell;
 use ds_softmax::shard::{ShardPlan, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::tensor::{dot, kernel, scaled_softmax_inplace, softmax_inplace, Matrix};
@@ -360,6 +363,67 @@ fn main() {
         format!("{:.1}µs", m.median_ns / 1e3),
         "per query".into(),
     ]);
+
+    // live-reload plane: the per-flush engine access is an
+    // EngineHandle::load (pin + Arc clone + unpin) where it used to be
+    // a raw Arc clone — measure the overhead, then the cost of
+    // EngineCell::swap while a reader thread keeps pinning (the swap
+    // median includes publishing the epoch and draining the outgoing
+    // generation)
+    let base: Arc<dyn SoftmaxEngine> =
+        Arc::new(NativeBatchEngine::new(DsSoftmax::new(ds.set.clone())));
+    let m_arc = bench("arc clone", 200, 5000, || {
+        std::hint::black_box(base.clone());
+    });
+    table.row(vec![
+        "arc clone".into(),
+        "baseline".into(),
+        format!("{:.0}ns", m_arc.median_ns),
+        "-".into(),
+    ]);
+    let cell = EngineCell::new(base.clone());
+    let handle = cell.handle();
+    let m_load = bench("handle load", 200, 5000, || {
+        let g = handle.load();
+        std::hint::black_box(g.epoch());
+    });
+    table.row(vec![
+        "handle load".into(),
+        "pin+clone+unpin".into(),
+        format!("{:.0}ns", m_load.median_ns),
+        format!("(arc-clone {:.2}x)", m_load.median_ns / m_arc.median_ns.max(1.0)),
+    ]);
+    report.push("reload-arc-clone", "baseline", 1, 1, m_arc.median_ns);
+    report.push("reload-handle-load", "pin+clone+unpin", 1, 1, m_load.median_ns);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let reader = {
+        let handle = handle.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let g = handle.load();
+                std::hint::black_box(g.epoch());
+            }
+        })
+    };
+    let alts: [Arc<dyn SoftmaxEngine>; 2] = [
+        Arc::new(NativeBatchEngine::new(DsSoftmax::new(ds.set.clone()))),
+        Arc::new(NativeBatchEngine::new(DsSoftmax::new(ds.set.clone()))),
+    ];
+    let mut gen = 0usize;
+    let m_swap = bench("swap under load", 10, 500, || {
+        gen += 1;
+        std::hint::black_box(cell.swap(alts[gen % 2].clone()));
+    });
+    stop.store(true, std::sync::atomic::Ordering::Release);
+    let _ = reader.join();
+    table.row(vec![
+        "swap under load".into(),
+        "publish+drain".into(),
+        format!("{:.2}µs", m_swap.median_ns / 1e3),
+        "-".into(),
+    ]);
+    report.push("reload-swap-under-load", "publish+drain", 1, 1, m_swap.median_ns);
 
     table.print();
     // counters + quantiles exported the same way `dss serve` does on

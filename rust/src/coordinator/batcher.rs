@@ -7,6 +7,12 @@
 //! flushed batch shares one expert, and the engine's `ShardPlan` maps
 //! each expert to exactly one shard, so every flush is shard-local
 //! without a second routing layer.
+//!
+//! The queues are keyed by *expert*, not by shard, which is what lets
+//! them survive a live engine swap untouched: `Coordinator::swap_engine`
+//! pins the expert count across generations, so a re-plan that moves
+//! experts between shards only changes where a flush executes, never
+//! which queue it waits in.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

@@ -8,6 +8,11 @@
 //! path over a [`DsSoftmax`]) and `PjrtBatchEngine` (AOT HLO through
 //! the PJRT runtime; `pjrt` feature).  Tests use [`MockEngine`] for
 //! failure injection.
+//!
+//! Engines are **immutable once built** — live reconfiguration swaps
+//! whole engine instances through the coordinator's epoch-versioned
+//! `runtime::reload::EngineCell`, so nothing here needs interior
+//! mutability to participate in a hot swap.
 
 use crate::model::dssoftmax::DsSoftmax;
 use crate::model::SoftmaxEngine;

@@ -7,12 +7,31 @@
 //! export path — a plain-struct copy (plus histogram quantiles) that
 //! renders as JSON through [`crate::util::json`], printed by `dss serve`
 //! and the bench harness on shutdown.
+//!
+//! **Generations.**  Since the live-reload plane
+//! (`runtime::reload::EngineCell`) the engine behind the coordinator
+//! can be swapped while serving.  The metrics plane tracks that:
+//! [`Metrics::on_swap`] bumps the swap counter, publishes the
+//! current-epoch gauge, snapshots the per-expert routing counts as the
+//! new generation's baseline (so
+//! [`Metrics::routed_counts_generation`] — the re-plan input — never
+//! mixes generations), and re-binds the per-shard counters when the
+//! swap changed the shard topology.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::util::json::Json;
 use crate::util::stats::LatencyHisto;
+
+/// Per-shard load counters, always resized together.
+#[derive(Default)]
+struct ShardCounters {
+    /// queries flushed per shard
+    queries: Vec<u64>,
+    /// batches flushed per shard
+    batches: Vec<u64>,
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -27,12 +46,22 @@ pub struct Metrics {
     /// deepest single per-expert queue (`Batcher::max_depth`) — a
     /// hot-expert skew signal that motivates a weighted re-plan
     pub hot_queue_depth: AtomicU64,
-    /// routing counts per expert (fixed at construction)
+    /// routing counts per expert (fixed at construction; cumulative
+    /// across engine generations — see `gen_base` for the split)
     pub per_expert: Vec<AtomicU64>,
-    /// queries flushed per shard (len = shard count; 1 when unsharded)
-    pub per_shard: Vec<AtomicU64>,
-    /// batches flushed per shard
-    pub per_shard_batches: Vec<AtomicU64>,
+    /// engine swaps installed through [`Metrics::on_swap`]
+    pub swaps: AtomicU64,
+    /// current engine generation (`runtime::reload::Epoch` gauge)
+    pub engine_epoch: AtomicU64,
+    /// per-expert routing counts at the last swap — the baseline that
+    /// makes [`Metrics::routed_counts_generation`] generation-local
+    gen_base: Mutex<Vec<u64>>,
+    /// per-shard query/batch counters (len = shard count; 1 when
+    /// unsharded; re-bound by [`Metrics::on_swap`] when the topology
+    /// changes).  One mutex over both vectors: a record's bounds check
+    /// and both increments happen under the same acquisition, so a
+    /// concurrent re-bind can never shrink the vectors between them.
+    shard_counters: Mutex<ShardCounters>,
     pub queue_latency: Mutex<LatencyHisto>,
     pub execute_latency: Mutex<LatencyHisto>,
     pub total_latency: Mutex<LatencyHisto>,
@@ -48,8 +77,11 @@ impl Metrics {
         let shards = shards.max(1);
         Self {
             per_expert: (0..k).map(|_| AtomicU64::new(0)).collect(),
-            per_shard: (0..shards).map(|_| AtomicU64::new(0)).collect(),
-            per_shard_batches: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            gen_base: Mutex::new(vec![0; k]),
+            shard_counters: Mutex::new(ShardCounters {
+                queries: vec![0; shards],
+                batches: vec![0; shards],
+            }),
             ..Default::default()
         }
     }
@@ -64,9 +96,43 @@ impl Metrics {
     }
 
     /// One flushed batch of `size` queries on `shard`.
+    ///
+    /// Swap interaction: a worker records while still holding its
+    /// generation pin, and `EngineCell::swap` drains all pins of the
+    /// outgoing generation *before* `Coordinator::swap_engine` calls
+    /// [`on_swap`](Self::on_swap) — so an old-generation flush can
+    /// never be misattributed into a re-bound topology; its record
+    /// always lands first.  The only race left is a *new*-generation
+    /// flush recording in the instant between the cell swap and the
+    /// re-bind: on a topology-size change its record is dropped by the
+    /// bounds check below or wiped by the reset — a transient
+    /// undercount, never a misattribution.
     pub fn record_shard_batch(&self, shard: usize, size: usize) {
-        self.per_shard[shard].fetch_add(size as u64, Ordering::Relaxed);
-        self.per_shard_batches[shard].fetch_add(1, Ordering::Relaxed);
+        let mut sc = self.shard_counters.lock().unwrap();
+        if shard >= sc.queries.len() {
+            return;
+        }
+        sc.queries[shard] += size as u64;
+        sc.batches[shard] += 1;
+    }
+
+    /// Record an installed engine swap: bump the swap counter, publish
+    /// the epoch gauge, rebase the per-generation routing counts, and
+    /// re-bind the per-shard counters when the topology changed (counts
+    /// carry over only when the shard count is unchanged — a different
+    /// topology makes the old rows meaningless).
+    pub fn on_swap(&self, epoch: u64, n_shards: usize) {
+        let n_shards = n_shards.max(1);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        self.engine_epoch.store(epoch, Ordering::Relaxed);
+        *self.gen_base.lock().unwrap() = self.routed_counts();
+        let mut sc = self.shard_counters.lock().unwrap();
+        if sc.queries.len() != n_shards {
+            sc.queries.clear();
+            sc.queries.resize(n_shards, 0);
+            sc.batches.clear();
+            sc.batches.resize(n_shards, 0);
+        }
     }
 
     pub fn set_queue_depth(&self, depth: usize) {
@@ -86,12 +152,24 @@ impl Metrics {
         }
     }
 
-    /// Raw per-expert routing counts — the input to load-aware
-    /// re-planning (`shard::ShardPlan::weighted`).
+    /// Raw per-expert routing counts, cumulative across generations.
     pub fn routed_counts(&self) -> Vec<u64> {
         self.per_expert
             .iter()
             .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Per-expert routing counts observed *this engine generation*
+    /// (since the last [`on_swap`](Self::on_swap)) — the input to
+    /// load-aware re-planning (`shard::ShardPlan::weighted`): a swap
+    /// decision based on these never mixes pre- and post-swap traffic.
+    pub fn routed_counts_generation(&self) -> Vec<u64> {
+        let base = self.gen_base.lock().unwrap();
+        self.per_expert
+            .iter()
+            .zip(base.iter())
+            .map(|(c, &b)| c.load(Ordering::Relaxed).saturating_sub(b))
             .collect()
     }
 
@@ -107,6 +185,12 @@ impl Metrics {
 
     /// Plain-struct copy of every counter plus histogram quantiles.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        // one acquisition for both shard vectors (the mutex is not
+        // re-entrant — two temporaries in one expression would deadlock)
+        let (per_shard, per_shard_batches) = {
+            let sc = self.shard_counters.lock().unwrap();
+            (sc.queries.clone(), sc.batches.clone())
+        };
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -116,17 +200,12 @@ impl Metrics {
             mean_batch: self.mean_batch_size(),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             hot_queue_depth: self.hot_queue_depth.load(Ordering::Relaxed),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            engine_epoch: self.engine_epoch.load(Ordering::Relaxed),
             per_expert: self.routed_counts(),
-            per_shard: self
-                .per_shard
-                .iter()
-                .map(|c| c.load(Ordering::Relaxed))
-                .collect(),
-            per_shard_batches: self
-                .per_shard_batches
-                .iter()
-                .map(|c| c.load(Ordering::Relaxed))
-                .collect(),
+            per_expert_generation: self.routed_counts_generation(),
+            per_shard,
+            per_shard_batches,
             queue: HistoSnapshot::of(&self.queue_latency.lock().unwrap()),
             execute: HistoSnapshot::of(&self.execute_latency.lock().unwrap()),
             total: HistoSnapshot::of(&self.total_latency.lock().unwrap()),
@@ -134,22 +213,22 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        let (shard_queries, shard_batches) = {
+            let sc = self.shard_counters.lock().unwrap();
+            (sc.queries.clone(), sc.batches.clone())
+        };
         format!(
-            "submitted={} completed={} rejected={} batches={} mean_batch={:.2} queue_depth={}\n  shards: {:?} queries / {:?} batches\n  queue: {}\n  exec:  {}\n  total: {}",
+            "submitted={} completed={} rejected={} batches={} mean_batch={:.2} queue_depth={} epoch={} swaps={}\n  shards: {:?} queries / {:?} batches\n  queue: {}\n  exec:  {}\n  total: {}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.queue_depth.load(Ordering::Relaxed),
-            self.per_shard
-                .iter()
-                .map(|c| c.load(Ordering::Relaxed))
-                .collect::<Vec<_>>(),
-            self.per_shard_batches
-                .iter()
-                .map(|c| c.load(Ordering::Relaxed))
-                .collect::<Vec<_>>(),
+            self.engine_epoch.load(Ordering::Relaxed),
+            self.swaps.load(Ordering::Relaxed),
+            shard_queries,
+            shard_batches,
             self.queue_latency.lock().unwrap().summary(),
             self.execute_latency.lock().unwrap().summary(),
             self.total_latency.lock().unwrap().summary(),
@@ -203,7 +282,13 @@ pub struct MetricsSnapshot {
     pub mean_batch: f64,
     pub queue_depth: u64,
     pub hot_queue_depth: u64,
+    /// engine swaps installed over this coordinator's lifetime
+    pub swaps: u64,
+    /// current engine generation (epoch gauge)
+    pub engine_epoch: u64,
     pub per_expert: Vec<u64>,
+    /// routing counts since the last swap (the re-plan input)
+    pub per_expert_generation: Vec<u64>,
     pub per_shard: Vec<u64>,
     pub per_shard_batches: Vec<u64>,
     pub queue: HistoSnapshot,
@@ -226,7 +311,10 @@ impl MetricsSnapshot {
             ("mean_batch", Json::Num(self.mean_batch)),
             ("queue_depth", Json::Num(self.queue_depth as f64)),
             ("hot_queue_depth", Json::Num(self.hot_queue_depth as f64)),
+            ("swaps", Json::Num(self.swaps as f64)),
+            ("engine_epoch", Json::Num(self.engine_epoch as f64)),
             ("per_expert", arr_u64(&self.per_expert)),
+            ("per_expert_generation", arr_u64(&self.per_expert_generation)),
             ("per_shard", arr_u64(&self.per_shard)),
             ("per_shard_batches", arr_u64(&self.per_shard_batches)),
             ("queue_latency", self.queue.to_json()),
@@ -278,7 +366,7 @@ mod tests {
     #[test]
     fn shard_counters_and_gauge() {
         let m = Metrics::with_shards(8, 3);
-        assert_eq!(m.per_shard.len(), 3);
+        assert_eq!(m.snapshot().per_shard.len(), 3);
         m.record_shard_batch(1, 5);
         m.record_shard_batch(1, 2);
         m.record_shard_batch(2, 1);
@@ -317,8 +405,49 @@ mod tests {
     #[test]
     fn unsharded_metrics_have_one_shard_row() {
         let m = Metrics::new(4);
-        assert_eq!(m.per_shard.len(), 1);
+        assert_eq!(m.snapshot().per_shard.len(), 1);
         m.record_shard_batch(0, 2);
         assert_eq!(m.snapshot().per_shard, vec![2]);
+    }
+
+    #[test]
+    fn swap_rebases_generation_counts_and_rebinds_shards() {
+        let m = Metrics::with_shards(3, 2);
+        m.record_route(0);
+        m.record_route(0);
+        m.record_route(2);
+        assert_eq!(m.routed_counts_generation(), vec![2, 0, 1]);
+        m.on_swap(1, 2);
+        // cumulative counts survive; the generation view rebases
+        assert_eq!(m.routed_counts(), vec![2, 0, 1]);
+        assert_eq!(m.routed_counts_generation(), vec![0, 0, 0]);
+        m.record_route(1);
+        assert_eq!(m.routed_counts_generation(), vec![0, 1, 0]);
+        let s = m.snapshot();
+        assert_eq!(s.swaps, 1);
+        assert_eq!(s.engine_epoch, 1);
+        assert_eq!(s.per_expert, vec![2, 1, 1]);
+        assert_eq!(s.per_expert_generation, vec![0, 1, 0]);
+        // same shard count: per-shard counters carry over
+        m.record_shard_batch(1, 4);
+        m.on_swap(2, 2);
+        assert_eq!(m.snapshot().per_shard, vec![0, 4]);
+        // topology change: counters re-bind to the new width
+        m.on_swap(3, 4);
+        let s = m.snapshot();
+        assert_eq!(s.per_shard, vec![0, 0, 0, 0]);
+        assert_eq!(s.per_shard_batches, vec![0, 0, 0, 0]);
+        // a stale record from a pre-swap generation is dropped, not
+        // misattributed
+        m.on_swap(4, 2);
+        m.record_shard_batch(3, 9);
+        assert_eq!(m.snapshot().per_shard, vec![0, 0]);
+        let j = Json::parse(&m.snapshot().render()).unwrap();
+        assert_eq!(j.get("swaps").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("engine_epoch").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(
+            j.get("per_expert_generation").unwrap().usize_vec().unwrap(),
+            vec![0, 0, 0]
+        );
     }
 }

@@ -16,7 +16,17 @@
 //!                  ▼       (sharded engine: shard-local expert engine)
 //!          per-request response channels + metrics
 //!                            (per-expert + per-shard counts,
-//!                             queue-depth gauge, latency histograms)
+//!                             queue-depth gauge, latency histograms,
+//!                             epoch gauge + per-generation counts)
+//!
+//!   reload plane (runtime::reload) — orthogonal to the query path:
+//!
+//!          EngineCell (epoch-versioned double buffer)
+//!            ▲ swap(new engine)              │ EngineHandle::load
+//!            │                               ▼ (pin one generation
+//!          Replanner ◀── Metrics::            per flush, drop after)
+//!          skew? rebuild   routed_counts_generation
+//!          ShardPlan::weighted → ShardedEngine (off-thread) → swap
 //! ```
 //!
 //! The gate runs *before* batching so requests are grouped by expert —
@@ -38,6 +48,14 @@
 //! same [`SoftmaxEngine`] the model layer defines, so native, PJRT, and
 //! mock backends (and any plain engine, e.g. the full-softmax baseline)
 //! are interchangeable behind `Arc<dyn SoftmaxEngine>`.
+//!
+//! **Reload.**  That `Arc` lives inside an epoch-versioned
+//! [`crate::runtime::reload::EngineCell`]: every reader pins one engine
+//! generation per unit of work (an ingress route, a per-expert flush)
+//! and [`Coordinator::swap_engine`] — driven manually or by the
+//! drift-triggered [`crate::runtime::reload::Replanner`] — installs a
+//! replacement without pausing serving.  Engines themselves stay
+//! immutable; the *handle* is what changed.
 
 pub mod batcher;
 pub mod engine;

@@ -8,6 +8,20 @@
 //! [`RowPack`] (contiguous `MatrixView`) and results land in a pooled
 //! [`TopKBuf`] arena — no `Vec<Vec<…>>` round-trip; the only per-query
 //! allocation left is the owned response sent back to the caller.
+//!
+//! **Live reload.**  The coordinator does not hold a raw
+//! `Arc<dyn SoftmaxEngine>`: it owns an epoch-versioned
+//! [`EngineCell`] and every reader — ingress routing, each worker's
+//! per-expert flush — pins one generation through an
+//! [`EngineHandle::load`] guard for exactly the duration of that unit
+//! of work.  A flush therefore runs bit-identically on one engine
+//! generation (routing may have happened a generation earlier — swaps
+//! are validated to preserve `dim`/`n_classes`/`k_experts`, so routes
+//! stay valid across generations).  [`Coordinator::swap_engine`]
+//! installs a replacement live: it re-validates the engine's shape and
+//! shard topology, swaps the cell (which drains the outgoing
+//! generation's pinned readers before retiring it), and re-binds the
+//! metrics plane's shard counters + generation baselines.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -18,6 +32,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{RoutedQuery, Router};
 use crate::model::SoftmaxEngine;
 use crate::query::{RowPack, TopKBuf};
+use crate::runtime::reload::{EngineCell, EngineHandle, Epoch};
 use crate::util::threadpool::{BoundedQueue, ThreadPool};
 
 /// Completed query result (or error string).
@@ -78,10 +93,20 @@ impl Pending {
 pub struct Coordinator {
     ingress: Arc<BoundedQueue<RoutedQuery>>,
     pub metrics: Arc<Metrics>,
-    engine: Arc<dyn SoftmaxEngine>,
+    /// publish side of the live-reload pair (swap target)
+    cell: EngineCell,
+    /// reader side: every engine access pins a generation through this
+    handle: EngineHandle,
+    /// the startup `CoordinatorConfig::shards` pin, re-checked at swap
+    cfg_shards: usize,
+    /// serializes `swap_engine` end-to-end: the cell swap and the
+    /// metrics re-bind must apply in the same epoch order, or a racing
+    /// pair of swaps could leave the epoch gauge and the generation
+    /// baseline describing the wrong generation
+    swap_lock: Mutex<()>,
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Coordinator {
@@ -96,16 +121,19 @@ impl Coordinator {
         let ingress = Arc::new(BoundedQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::with_shards(engine.k_experts(), n_shards));
         let stop = Arc::new(AtomicBool::new(false));
+        let cfg_shards = cfg.shards;
+        let cell = EngineCell::new(engine);
+        let handle = cell.handle();
 
         let dispatcher = {
             let ingress = ingress.clone();
             let metrics = metrics.clone();
-            let engine = engine.clone();
+            let handle = handle.clone();
             let stop = stop.clone();
             std::thread::Builder::new()
                 .name("dss-dispatcher".into())
                 .spawn(move || {
-                    dispatch_loop(ingress, engine, metrics, stop, cfg)
+                    dispatch_loop(ingress, handle, metrics, stop, cfg)
                 })
                 .expect("spawn dispatcher")
         };
@@ -113,21 +141,91 @@ impl Coordinator {
         Self {
             ingress,
             metrics,
-            engine,
+            cell,
+            handle,
+            cfg_shards,
+            swap_lock: Mutex::new(()),
             next_id: AtomicU64::new(0),
             stop,
-            dispatcher: Some(dispatcher),
+            dispatcher: Mutex::new(Some(dispatcher)),
         }
     }
 
+    /// A reader handle onto the serving engine (pins per load).
+    pub fn engine_handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    /// Current engine generation.
+    pub fn engine_epoch(&self) -> Epoch {
+        self.handle.epoch()
+    }
+
+    /// Install `new` as the serving engine, live.  Validates that the
+    /// replacement preserves the model shape — `dim` and `n_classes`
+    /// (routes already admitted must stay valid) and `k_experts` (the
+    /// per-expert flush queues are keyed by expert and survive the
+    /// swap untouched) — and that its shard topology satisfies the
+    /// startup `CoordinatorConfig::shards` pin.  On success the cell
+    /// swap drains the outgoing generation's pinned readers, the
+    /// metrics plane re-binds its per-shard counters to the new
+    /// topology and rebases the per-generation routing counts, and the
+    /// new epoch is returned.  Queries in flight are never paused or
+    /// dropped: each flush runs on whichever single generation it
+    /// pinned.
+    pub fn swap_engine(&self, new: Arc<dyn SoftmaxEngine>) -> anyhow::Result<Epoch> {
+        {
+            let cur = self.handle.load();
+            anyhow::ensure!(
+                new.dim() == cur.dim(),
+                "swap changes dim: {} -> {}",
+                cur.dim(),
+                new.dim()
+            );
+            anyhow::ensure!(
+                new.n_classes() == cur.n_classes(),
+                "swap changes n_classes: {} -> {}",
+                cur.n_classes(),
+                new.n_classes()
+            );
+            anyhow::ensure!(
+                new.k_experts() == cur.k_experts(),
+                "swap changes expert count: {} -> {} (flush queues are keyed by expert)",
+                cur.k_experts(),
+                new.k_experts()
+            );
+            // guard dropped here: holding a pin across the swap below
+            // would deadlock its retire drain
+        }
+        let n_shards = new.n_shards().max(1);
+        anyhow::ensure!(
+            self.cfg_shards == 0 || self.cfg_shards == n_shards,
+            "config pins {} shards but replacement engine '{}' reports {n_shards}",
+            self.cfg_shards,
+            new.name()
+        );
+        // cell swap + metrics re-bind as one unit: concurrent swaps
+        // must apply their `on_swap` in epoch order
+        let _swap = self.swap_lock.lock().unwrap();
+        let epoch = self.cell.swap(new);
+        self.metrics.on_swap(epoch, n_shards);
+        Ok(epoch)
+    }
+
     /// Submit a query; fails fast with backpressure if the ingress queue
-    /// is full (the caller can retry / shed load).
+    /// is full (the caller can retry / shed load) and with
+    /// [`QueryError::Shutdown`] once the coordinator is stopping.
     pub fn submit(&self, h: Vec<f32>, k: usize) -> Result<Pending, QueryError> {
+        if self.stop.load(Ordering::Acquire) {
+            return Err(QueryError::Shutdown);
+        }
         if k == 0 {
             return Err(QueryError::Rejected("k must be >= 1".into()));
         }
-        // route up-front: empty/dimension/NaN validation + expert assignment
-        let router = Router::new(self.engine.as_ref());
+        // route up-front: empty/dimension/NaN validation + expert
+        // assignment, against a generation pinned for this call
+        let engine = self.handle.load();
+        let router = Router::new(&*engine);
         let route = router.route(&h).map_err(QueryError::Rejected)?;
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.metrics.record_route(route.expert());
@@ -141,6 +239,9 @@ impl Coordinator {
             responder: tx,
         };
         self.ingress.try_push(q).map_err(|_| {
+            if self.stop.load(Ordering::Acquire) {
+                return QueryError::Shutdown;
+            }
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             QueryError::Rejected("ingress queue full".into())
         })?;
@@ -152,10 +253,16 @@ impl Coordinator {
         self.submit(h, k)?.wait()
     }
 
-    pub fn shutdown(&mut self) {
+    /// Stop accepting queries, drain everything in flight, and join
+    /// the dispatcher.  Every query admitted before the stop resolves
+    /// (drained batches execute normally); any `Pending` whose result
+    /// can no longer be produced resolves with
+    /// [`QueryError::Shutdown`] instead of hanging — its responder is
+    /// dropped with the pipeline, which `Pending::wait` observes.
+    pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Release);
         self.ingress.close();
-        if let Some(h) = self.dispatcher.take() {
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
             let _ = h.join();
         }
     }
@@ -180,20 +287,27 @@ struct BatchScratch {
 
 fn dispatch_loop(
     ingress: Arc<BoundedQueue<RoutedQuery>>,
-    engine: Arc<dyn SoftmaxEngine>,
+    handle: EngineHandle,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     cfg: CoordinatorConfig,
 ) {
     let pool = ThreadPool::new(cfg.workers);
-    let mut batcher = Batcher::new(engine.k_experts(), cfg.policy);
+    // expert count is invariant across engine generations (enforced by
+    // `swap_engine`), so the per-expert queues bind once
+    let mut batcher = Batcher::new(handle.load().k_experts(), cfg.policy);
     let scratches: Arc<Mutex<Vec<BatchScratch>>> = Arc::new(Mutex::new(Vec::new()));
 
     let run_batch = |expert: usize, batch: Vec<RoutedQuery>| {
-        let engine = engine.clone();
+        let handle = handle.clone();
         let metrics = metrics.clone();
         let scratches = scratches.clone();
         pool.execute(move || {
+            // pin ONE engine generation for this whole flush: the
+            // shard lookup and the batch execution below must agree,
+            // and the batch must be bit-identical to a
+            // single-generation run
+            let engine = handle.load();
             let t0 = Instant::now();
             let mut s = scratches.lock().unwrap().pop().unwrap_or_default();
             s.pack.reset(engine.dim());
@@ -376,7 +490,7 @@ mod tests {
 
     #[test]
     fn shutdown_flushes_pending() {
-        let (mut c, _) = native_coord();
+        let (c, _) = native_coord();
         let mut rng = Rng::new(8);
         let pendings: Vec<_> = (0..50)
             .map(|_| c.submit(rng.normal_vec(16, 1.0), 2).unwrap())
@@ -433,7 +547,7 @@ mod tests {
         let plan = ShardPlan::greedy(&set, 3);
         let engine = Arc::new(ShardedEngine::new(set, plan).unwrap());
         let cfg = CoordinatorConfig { shards: 3, ..Default::default() };
-        let mut c = Coordinator::start(engine, cfg);
+        let c = Coordinator::start(engine, cfg);
         let queries: Vec<Vec<f32>> = (0..120).map(|_| rng.normal_vec(16, 1.0)).collect();
         let pend: Vec<_> = queries
             .iter()
@@ -460,6 +574,47 @@ mod tests {
         let engine = Arc::new(MockEngine { k: 2, d: 4, fail_expert: None });
         let cfg = CoordinatorConfig { shards: 5, ..Default::default() };
         let _ = Coordinator::start(engine, cfg);
+    }
+
+    /// `swap_engine` re-validates the replacement: the model shape must
+    /// be preserved (routes and flush queues outlive the swap), and a
+    /// conforming replacement bumps the epoch + metrics plane.
+    #[test]
+    fn swap_engine_validates_shape_and_bumps_epoch() {
+        let engine = Arc::new(MockEngine { k: 4, d: 8, fail_expert: None });
+        let c = Coordinator::start(engine, CoordinatorConfig::default());
+        assert_eq!(c.engine_epoch(), 0);
+        // wrong dim
+        let bad = Arc::new(MockEngine { k: 4, d: 6, fail_expert: None });
+        assert!(c.swap_engine(bad).is_err());
+        // wrong expert count (n_classes tracks k for MockEngine, so
+        // this exercises both shape checks)
+        let bad = Arc::new(MockEngine { k: 3, d: 8, fail_expert: None });
+        assert!(c.swap_engine(bad).is_err());
+        assert_eq!(c.engine_epoch(), 0);
+        // conforming replacement installs live
+        let next = Arc::new(MockEngine { k: 4, d: 8, fail_expert: None });
+        let epoch = c.swap_engine(next).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(c.engine_epoch(), 1);
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.swaps, 1);
+        assert_eq!(snap.engine_epoch, 1);
+        // and the coordinator keeps serving
+        assert!(c.query(vec![0.0; 8], 2).is_ok());
+    }
+
+    /// Submitting after shutdown resolves with `Shutdown`, not a
+    /// misleading backpressure rejection.
+    #[test]
+    fn submit_after_shutdown_returns_shutdown() {
+        let (c, _) = native_coord();
+        assert!(c.query(vec![0.0; 16], 1).is_ok());
+        c.shutdown();
+        match c.submit(vec![0.0; 16], 1) {
+            Err(QueryError::Shutdown) => {}
+            other => panic!("want Shutdown, got {:?}", other.map(|_| ())),
+        }
     }
 
     /// The unified trait means *any* engine — including the full-softmax

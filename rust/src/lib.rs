@@ -13,10 +13,15 @@
 //!   expert dynamic batcher → engines), the expert-parallel sharding
 //!   layer ([`shard`]: a serializable [`shard::ShardPlan`] partitions
 //!   the experts across shard-local engines behind a replicated gate),
-//!   the PJRT runtime that executes the AOT artifacts (`pjrt` feature),
-//!   native fallback engines, all paper baselines (full softmax,
-//!   SVD-softmax, D-softmax), FLOPs accounting, and the benchmark
-//!   harness that regenerates every table and figure.
+//!   the live-reload plane ([`runtime::reload`]: an epoch-versioned
+//!   [`runtime::reload::EngineCell`] hot-swaps the serving engine
+//!   without pausing, and a drift-triggered
+//!   [`runtime::reload::Replanner`] re-balances the shard plan from
+//!   observed routing counts), the PJRT runtime that executes the AOT
+//!   artifacts (`pjrt` feature), native fallback engines, all paper
+//!   baselines (full softmax, SVD-softmax, D-softmax), FLOPs
+//!   accounting, and the benchmark harness that regenerates every
+//!   table and figure.
 //!
 //! Python never runs at serving time: after `make artifacts`, the `dss`
 //! binary and the examples are self-contained.
@@ -61,6 +66,12 @@
 //! expert set in a [`shard::ShardedEngine`] — same trait, same results,
 //! experts partitioned across shards by a [`shard::ShardPlan`] — and the
 //! coordinator's dispatch and metrics become shard-aware automatically.
+//! The coordinator owns its engine through an epoch-versioned
+//! [`runtime::reload::EngineCell`]: workers pin one generation per
+//! flush (never mid-batch), so `Coordinator::swap_engine` — or the
+//! drift-triggered [`runtime::reload::Replanner`] — can install a
+//! re-balanced engine live, without pausing serving or mixing
+//! generations inside a batch.
 
 pub mod artifacts;
 pub mod benchlib;
@@ -70,7 +81,6 @@ pub mod eval;
 pub mod flops;
 pub mod model;
 pub mod query;
-#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod shard;
 pub mod sparse;

@@ -18,6 +18,7 @@ use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, TopKBuf};
+use ds_softmax::runtime::reload::{ReplanPolicy, Replanner};
 use ds_softmax::shard::{ShardPlan, ShardStrategy, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::util::cli::Args;
@@ -31,6 +32,12 @@ USAGE: dss <serve|query|inspect|gen|bench> [options]
   serve    --artifact <name> --queries N --k K --pjrt
            --shards S --shard-plan <contiguous|greedy|weighted|file.json>
            --shard-plan-out <file.json>
+           --replan-skew R --replan-interval N [--replan-min-ms MS]
+           (live re-planning: when per-shard load skew max/mean >= R
+            after N routed queries this generation, rebuild the
+            weighted plan from observed counts and hot-swap the
+            engine; each installed plan is written generation-stamped
+            to --shard-plan-out)
            (without an artifact set, serves a synthetic index:
             --n N --d D --experts K --redundancy M)
   query    --artifact <name> --k K [--seed S]
@@ -150,6 +157,18 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         );
     }
 
+    // live re-planning needs a sharded engine (the re-plan rebuilds the
+    // expert→shard placement) — reject orphan flags instead of ignoring
+    let replan_requested = args.get("replan-skew").is_some()
+        || args.get("replan-interval").is_some()
+        || args.get("replan-min-ms").is_some();
+    if replan_requested {
+        anyhow::ensure!(
+            shards > 1,
+            "--replan-* needs sharding enabled (--shards S or a plan file)"
+        );
+    }
+
     // artifact set when available; otherwise a synthetic index so the
     // serving path (including --shards) runs without the Python export
     let (set, util, label) = match manifest_from(args) {
@@ -166,7 +185,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             );
             if args.flag("pjrt") {
                 let engine = pjrt_engine(&m)?;
-                return drive(args, engine, set.dim(), n_queries, k, shards);
+                return drive(args, engine, set.dim(), n_queries, k, shards, None);
             }
             (set, m.utilization.clone(), m.name.clone())
         }
@@ -187,7 +206,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     };
 
     let d = set.dim();
-    let engine: Arc<dyn SoftmaxEngine> = if shards > 1 {
+    let (engine, replan): (Arc<dyn SoftmaxEngine>, Option<ReplanSetup>) = if shards > 1 {
         let plan = shard_plan_from(args, &set, shards, &util, plan_file)?;
         println!(
             "shard plan [{}] for '{label}': {} experts over {shards} shards, expert counts {:?}, loads {:?}",
@@ -200,21 +219,42 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             plan.save(path)?;
             println!("shard plan written to {path}");
         }
+        let replan = replan_requested.then(|| ReplanSetup {
+            set: set.clone(),
+            plan: plan.clone(),
+            policy: ReplanPolicy {
+                skew: args.f64_or("replan-skew", 1.25),
+                min_queries: args.u64_or("replan-interval", 1000),
+                min_interval: std::time::Duration::from_millis(args.u64_or("replan-min-ms", 500)),
+                poll: std::time::Duration::from_millis(10),
+            },
+            out: args.get("shard-plan-out").map(std::path::PathBuf::from),
+        });
         // serial dispatch: the coordinator's worker pool is the
         // parallelism at this layer (its per-expert flushes call
         // `run_expert_batch`, which is inline and shard-local); per-
         // shard pools only serve the direct `query_batch` path
-        Arc::new(ShardedEngine::new(set, plan)?)
+        (Arc::new(ShardedEngine::new(set, plan)?), replan)
     } else {
-        Arc::new(NativeBatchEngine::new(DsSoftmax::with_utilization(
-            set, util,
-        )))
+        (
+            Arc::new(NativeBatchEngine::new(DsSoftmax::with_utilization(set, util))),
+            None,
+        )
     };
-    drive(args, engine, d, n_queries, k, shards)
+    drive(args, engine, d, n_queries, k, shards, replan)
 }
 
-/// Shared serve driver: start the coordinator, push the workload, wait,
-/// report, and print the metrics snapshot (JSON) after shutdown.
+/// Live re-planning configuration carried from `serve` into the driver.
+struct ReplanSetup {
+    set: ExpertSet,
+    plan: ShardPlan,
+    policy: ReplanPolicy,
+    out: Option<std::path::PathBuf>,
+}
+
+/// Shared serve driver: start the coordinator (plus the drift
+/// re-planner when configured), push the workload, wait, report, and
+/// print the metrics snapshot (JSON) after shutdown.
 fn drive(
     args: &Args,
     engine: Arc<dyn SoftmaxEngine>,
@@ -222,9 +262,17 @@ fn drive(
     n_queries: usize,
     k: usize,
     shards: usize,
+    replan: Option<ReplanSetup>,
 ) -> anyhow::Result<()> {
     let cfg = CoordinatorConfig { shards, ..Default::default() };
-    let mut c = Coordinator::start(engine, cfg);
+    let c = Arc::new(Coordinator::start(engine, cfg));
+    let replanner = replan.map(|r| {
+        println!(
+            "replanner armed: skew >= {:.2}, every {} queries, hysteresis {:?}",
+            r.policy.skew, r.policy.min_queries, r.policy.min_interval
+        );
+        Replanner::spawn(c.clone(), r.set, r.plan, r.policy, r.out)
+    });
     let mut rng = Rng::new(args.u64_or("seed", 0));
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n_queries);
@@ -246,6 +294,12 @@ fn drive(
         dt,
         ok as f64 / dt.as_secs_f64()
     );
+    if let Some(rp) = replanner {
+        // final policy evaluation runs inside stop(), so short
+        // workloads still get their re-plan before the report
+        let swaps = rp.stop();
+        println!("replans completed: {swaps} (engine epoch {})", c.engine_epoch());
+    }
     println!("{}", c.metrics.report());
     c.shutdown();
     println!("metrics snapshot: {}", c.metrics.snapshot().render());

@@ -39,6 +39,43 @@ pub(crate) fn route_m1(gate: &crate::tensor::Matrix, h: &[f32], logits: &mut [f3
     Route::single(e, logits[e])
 }
 
+/// Batched m = 1 routing: the whole batch's gate logits (B×K) run
+/// through the tiled A·Bᵀ kernel in row tiles instead of one K×d
+/// matvec per row, then each row finishes with the same
+/// softmax+argmax as [`route_m1`].  Bit-identical to the per-row loop
+/// — every kernel cell is the same 8-lane [`crate::tensor::dot`] the
+/// matvec reduces through (equivalence-tested in
+/// `route_batch_matches_row_loop`).  `logits` is caller scratch,
+/// resized to `hs.rows · K` (grow-only once warm).  Shared by
+/// `DsSoftmax` and the sharded engine's replicated gate.
+pub(crate) fn route_batch_m1(
+    gate: &crate::tensor::Matrix,
+    hs: MatrixView<'_>,
+    logits: &mut Vec<f32>,
+    out: &mut [Route],
+) {
+    debug_assert_eq!(hs.rows, out.len());
+    let ke = gate.rows;
+    logits.resize(hs.rows * ke, 0.0);
+    kernel::matmul_nt_strided_into(
+        hs.data(),
+        hs.cols,
+        &gate.data,
+        gate.cols,
+        hs.rows,
+        ke,
+        hs.cols,
+        logits,
+        ke,
+    );
+    for (r, route) in out.iter_mut().enumerate() {
+        let row = &mut logits[r * ke..(r + 1) * ke];
+        softmax_inplace(row);
+        let e = argmax(row);
+        *route = Route::single(e, row[e]);
+    }
+}
+
 /// Reusable caller-owned buffers for the explicit-scratch hot path.
 pub struct DsScratch {
     pub gate_logits: Vec<f32>,
@@ -122,11 +159,18 @@ impl DsSoftmax {
     }
 
     /// Batched top-m routing (the `route_batch` trait method is the
-    /// m = 1 case).  Uses per-thread scratch — no allocation once warm.
+    /// m = 1 case).  Uses per-thread scratch — no allocation once
+    /// warm.  The m = 1 path batches the gate matvec through the tiled
+    /// kernel (B×K logits in row tiles, see [`route_batch_m1`]); the
+    /// rare m > 1 path stays per-row.
     pub fn route_batch_topm(&self, hs: MatrixView<'_>, m: usize, out: &mut [Route]) {
         assert_eq!(hs.rows, out.len(), "route_batch shape mismatch");
         assert_eq!(hs.cols, self.set.dim(), "row width vs model dim");
         with_scratch(|s| {
+            if m == 1 {
+                route_batch_m1(&self.set.gate, hs, &mut s.gate, out);
+                return;
+            }
             s.gate.resize(self.set.k(), 0.0);
             for (r, route) in out.iter_mut().enumerate() {
                 *route = self.gate_topm(hs.row(r), m, &mut s.gate);
@@ -188,15 +232,13 @@ impl SoftmaxEngine for DsSoftmax {
                 gate, heap, tile, routes, counts, starts, order, pack, ..
             } = s;
             let ke = self.set.k();
-            gate.resize(ke, 0.0);
             heap.set_k(k);
-            // 1. route every row — the same m = 1 gate math as
-            //    `route_batch` (inlined: scratch is not re-entrant)
+            // 1. route every row — the same batched m = 1 gate math as
+            //    `route_batch` (inlined: scratch is not re-entrant);
+            //    the gate matvecs run tiled through the kernel
             routes.clear();
             routes.resize(hs.rows, Route::empty());
-            for (r, route) in routes.iter_mut().enumerate() {
-                *route = route_m1(&self.set.gate, hs.row(r), gate);
-            }
+            route_batch_m1(&self.set.gate, hs, gate, routes);
             // 2. counting-sort rows by routed expert (the shared
             //    grouping path — see `query::group_rows`)
             crate::query::group_rows(
@@ -439,6 +481,26 @@ mod tests {
         let mut rng = Rng::new(14);
         let h = rng.normal_vec(16, 1.0);
         assert_eq!(e.query(&h, 8), e.query(&h, 8));
+    }
+
+    /// The batched gate path (B×K logits through the tiled kernel)
+    /// must be bit-identical to the per-row matvec loop it replaced —
+    /// every route, every gate value, across odd batch shapes.
+    #[test]
+    fn route_batch_matches_row_loop() {
+        let e = engine(9);
+        let mut rng = Rng::new(33);
+        let mut buf = vec![0.0f32; e.set.k()];
+        for bsz in [0usize, 1, 5, 33] {
+            let packed: Vec<f32> = (0..bsz).flat_map(|_| rng.normal_vec(16, 1.0)).collect();
+            let view = MatrixView::new(&packed, bsz, 16);
+            let mut routes = vec![Route::empty(); bsz];
+            e.route_batch(view, &mut routes);
+            for (r, got) in routes.iter().enumerate() {
+                let want = route_m1(&e.set.gate, view.row(r), &mut buf);
+                assert_eq!(*got, want, "row {r} of batch {bsz}");
+            }
+        }
     }
 
     #[test]

@@ -1,336 +1,19 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
-//! the CPU PJRT client via the `xla` crate.
+//! Serving-runtime substrate — the pieces that sit *around* the
+//! engines rather than inside them:
 //!
-//! Executables are shape-specialized, so the coordinator keys them by
-//! (artifact logical name) which already encodes the batch bucket (e.g.
-//! `gate_b8`).  Weights can be uploaded once as device buffers and
-//! reused across queries (`execute_b`), keeping the request hot path
-//! free of host→device weight copies.
+//! * [`reload`] — live reconfiguration: the epoch-versioned
+//!   [`reload::EngineCell`] / [`reload::EngineHandle`] pair that lets
+//!   the coordinator hot-swap its engine without pausing serving, plus
+//!   the drift-triggered [`reload::Replanner`] that rebuilds the shard
+//!   plan from observed routing counts and installs it through a swap.
+//! * PJRT execution (`pjrt` feature) — loads the AOT HLO-text
+//!   artifacts and executes them on the CPU PJRT client via the `xla`
+//!   crate; re-exported at this level so `runtime::Runtime` /
+//!   `runtime::PjrtDsEngine` keep their historical paths.
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+pub mod reload;
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::artifacts::Manifest;
-use crate::tensor::Matrix;
-
-/// Wrapper over the PJRT CPU client + an executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
-        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO text file (cached by logical name).
-    pub fn load(
-        &self,
-        manifest: &Manifest,
-        logical: &str,
-    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(logical) {
-            return Ok(e.clone());
-        }
-        let path = manifest.hlo_path(logical)?;
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {logical}: {e:?}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(logical.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Execute with host literals; returns the decomposed output tuple.
-    pub fn run(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let out = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
-    }
-
-    /// Upload a literal once as a device buffer (for weights).
-    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_literal(None, lit)
-            .map_err(|e| anyhow!("to_device: {e:?}"))
-    }
-
-    /// Execute with pre-uploaded device buffers.
-    pub fn run_b(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<xla::Literal>> {
-        let refs: Vec<&xla::PjRtBuffer> = inputs.to_vec();
-        let out = exe
-            .execute_b::<&xla::PjRtBuffer>(&refs)
-            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
-    }
-}
-
-/// Literal construction helpers.
-pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
-    xla::Literal::vec1(data)
-        .reshape(dims)
-        .map_err(|e| anyhow!("reshape: {e:?}"))
-}
-
-pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
-    xla::Literal::vec1(data)
-        .reshape(dims)
-        .map_err(|e| anyhow!("reshape: {e:?}"))
-}
-
-pub fn lit_scalar_i32(x: i32) -> xla::Literal {
-    xla::Literal::scalar(x)
-}
-
-pub fn lit_matrix(m: &Matrix) -> Result<xla::Literal> {
-    lit_f32(&m.data, &[m.rows as i64, m.cols as i64])
-}
-
-/// Extract an f32 vector from an output literal.
-pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
-}
-
-pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
-    lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
-}
-
-/// LSTM weights resident as literals, fed to `lstm_step_b{B}`.
-pub struct LstmWeights {
-    pub hidden: usize,
-    pub vocab: usize,
-    pub embed: xla::Literal,
-    pub wx0: xla::Literal,
-    pub wh0: xla::Literal,
-    pub b0: xla::Literal,
-    pub wx1: xla::Literal,
-    pub wh1: xla::Literal,
-    pub b1: xla::Literal,
-}
-
-/// High-level engine over the AOT artifacts: gating + expert softmax +
-/// full softmax executed through PJRT at the manifest's batch buckets.
-pub struct PjrtDsEngine {
-    pub runtime: Runtime,
-    pub manifest: Manifest,
-    /// expert weights resident on device: (packed rows literal per expert)
-    expert_weights: Vec<xla::Literal>,
-    gate_weights: xla::Literal,
-    full_weights: xla::Literal,
-    valid: Vec<i32>,
-    class_ids: Vec<Vec<i32>>,
-}
-
-impl PjrtDsEngine {
-    pub fn new(runtime: Runtime, manifest: Manifest) -> Result<Self> {
-        let set = manifest.expert_set()?;
-        let gate_weights = lit_matrix(&set.gate)?;
-        let expert_weights = set
-            .experts
-            .iter()
-            .map(|e| lit_matrix(&e.weights))
-            .collect::<Result<Vec<_>>>()?;
-        let full = manifest.full_weights()?;
-        let full_weights = lit_matrix(&full)?;
-        Ok(Self {
-            valid: set.experts.iter().map(|e| e.valid as i32).collect(),
-            class_ids: set.experts.iter().map(|e| e.class_ids.clone()).collect(),
-            runtime,
-            manifest,
-            expert_weights,
-            gate_weights,
-            full_weights,
-        })
-    }
-
-    /// Smallest exported bucket >= n (callers pad to this).
-    pub fn bucket_for(&self, n: usize) -> Result<usize> {
-        self.manifest
-            .buckets
-            .iter()
-            .copied()
-            .filter(|&b| b >= n)
-            .min()
-            .or_else(|| self.manifest.buckets.iter().copied().max())
-            .context("no buckets in manifest")
-    }
-
-    /// Gate a batch: returns (probs row-major B×K, top1 per row).
-    /// `h` must have exactly `bucket` rows (pad with zeros beforehand).
-    pub fn gate(&self, h: &Matrix, bucket: usize) -> Result<(Vec<f32>, Vec<i32>)> {
-        anyhow::ensure!(h.rows == bucket, "h rows {} != bucket {bucket}", h.rows);
-        let exe = self.runtime.load(&self.manifest, &format!("gate_b{bucket}"))?;
-        let hl = lit_matrix(h)?;
-        let out = self.runtime.run(&exe, &[hl, self.gate_weights.clone()])?;
-        anyhow::ensure!(out.len() == 2, "gate returned {} outputs", out.len());
-        Ok((to_f32(&out[0])?, to_i32(&out[1])?))
-    }
-
-    /// Packed-expert softmax for a batch routed to `expert`.
-    /// Returns row-major B×P probabilities.
-    pub fn expert_probs(
-        &self,
-        expert: usize,
-        h: &Matrix,
-        gate_values: &[f32],
-        bucket: usize,
-    ) -> Result<Vec<f32>> {
-        anyhow::ensure!(h.rows == bucket && gate_values.len() == bucket);
-        let exe = self
-            .runtime
-            .load(&self.manifest, &format!("expert_b{bucket}"))?;
-        let out = self.runtime.run(
-            &exe,
-            &[
-                lit_matrix(h)?,
-                self.expert_weights[expert].clone(),
-                lit_f32(gate_values, &[bucket as i64])?,
-                lit_scalar_i32(self.valid[expert]),
-            ],
-        )?;
-        to_f32(&out[0])
-    }
-
-    /// Full-softmax baseline through PJRT.
-    pub fn full_probs(&self, h: &Matrix, bucket: usize) -> Result<Vec<f32>> {
-        anyhow::ensure!(h.rows == bucket);
-        let exe = self.runtime.load(&self.manifest, &format!("full_b{bucket}"))?;
-        let out = self
-            .runtime
-            .run(&exe, &[lit_matrix(h)?, self.full_weights.clone()])?;
-        to_f32(&out[0])
-    }
-
-    /// One LSTM decode step through the AOT `lstm_step_b{B}` graph.
-    ///
-    /// `tokens` length must equal `bucket`; `state` is the flattened
-    /// (layers, 2, bucket, hidden) carry (zeros at sequence start).
-    /// Returns (contexts row-major bucket×hidden, new state).
-    pub fn lstm_step(
-        &self,
-        lstm: &LstmWeights,
-        tokens: &[i32],
-        state: &[f32],
-        bucket: usize,
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
-        anyhow::ensure!(tokens.len() == bucket);
-        let hidden = lstm.hidden;
-        anyhow::ensure!(state.len() == 2 * 2 * bucket * hidden);
-        let exe = self
-            .runtime
-            .load(&self.manifest, &format!("lstm_step_b{bucket}"))?;
-        let out = self.runtime.run(
-            &exe,
-            &[
-                lstm.embed.clone(),
-                lstm.wx0.clone(),
-                lstm.wh0.clone(),
-                lstm.b0.clone(),
-                lstm.wx1.clone(),
-                lstm.wh1.clone(),
-                lstm.b1.clone(),
-                lit_i32(tokens, &[bucket as i64])?,
-                lit_f32(state, &[2, 2, bucket as i64, hidden as i64])?,
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 2, "lstm_step returned {} outputs", out.len());
-        Ok((to_f32(&out[0])?, to_f32(&out[1])?))
-    }
-
-    /// Load the LSTM weights as literals (once, at startup).
-    pub fn lstm_weights(&self) -> Result<LstmWeights> {
-        let info = self
-            .manifest
-            .lstm
-            .as_ref()
-            .context("artifact has no lstm section")?;
-        let lm = |name: &str| -> Result<xla::Literal> {
-            let w = self.manifest.load_f32(name)?;
-            let shape = &self.manifest.weights[name].shape;
-            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
-            lit_f32(&w, &dims)
-        };
-        Ok(LstmWeights {
-            hidden: info.hidden,
-            vocab: info.vocab,
-            embed: lm("lstm_embed")?,
-            wx0: lm("wx0")?,
-            wh0: lm("wh0")?,
-            b0: lm("b0")?,
-            wx1: lm("wx1")?,
-            wh1: lm("wh1")?,
-            b1: lm("b1")?,
-        })
-    }
-
-    /// Whole inference for a batch (gate → group → expert → top-k),
-    /// returning per-row top-k (class, prob).
-    pub fn query_batch(&self, h: &Matrix, k: usize) -> Result<Vec<Vec<(u32, f32)>>> {
-        let n = h.rows;
-        let bucket = self.bucket_for(n)?;
-        let mut hp = Matrix::zeros(bucket, h.cols);
-        hp.data[..n * h.cols].copy_from_slice(&h.data);
-        let (probs, top1) = self.gate(&hp, bucket)?;
-        let kk = self.manifest.k;
-        // group rows by expert
-        let mut groups: HashMap<usize, Vec<usize>> = HashMap::new();
-        for (row, &e) in top1.iter().take(n).enumerate() {
-            groups.entry(e as usize).or_default().push(row);
-        }
-        let p = self.manifest.p;
-        let mut results: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
-        for (expert, rows) in groups {
-            let gb = self.bucket_for(rows.len())?;
-            let mut hh = Matrix::zeros(gb, h.cols);
-            let mut gv = vec![0.0f32; gb];
-            for (i, &r) in rows.iter().enumerate() {
-                hh.row_mut(i).copy_from_slice(h.row(r));
-                gv[i] = probs[r * kk + expert];
-            }
-            let pp = self.expert_probs(expert, &hh, &gv, gb)?;
-            for (i, &r) in rows.iter().enumerate() {
-                let row_probs = &pp[i * p..(i + 1) * p];
-                let top = crate::util::topk::topk(row_probs, k);
-                results[r] = top
-                    .into_iter()
-                    .map(|(prob, idx)| (self.class_ids[expert][idx as usize] as u32, prob))
-                    .collect();
-            }
-        }
-        Ok(results)
-    }
-}
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::*;

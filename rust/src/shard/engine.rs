@@ -309,14 +309,11 @@ impl SoftmaxEngine for ShardedEngine {
     fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
         assert_eq!(hs.rows, out.len(), "route_batch shape mismatch");
         assert_eq!(hs.cols, self.dim, "row width vs model dim");
-        // the shared m = 1 gate routing on the replicated gate — the
-        // exact code path the unsharded engine runs, so routes are
-        // identical by construction
+        // the shared batched m = 1 gate routing (tiled B×K kernel) on
+        // the replicated gate — the exact code path the unsharded
+        // engine runs, so routes are identical by construction
         with_scratch(|s| {
-            s.gate.resize(self.gate.rows, 0.0);
-            for (r, route) in out.iter_mut().enumerate() {
-                *route = crate::model::dssoftmax::route_m1(&self.gate, hs.row(r), &mut s.gate);
-            }
+            crate::model::dssoftmax::route_batch_m1(&self.gate, hs, &mut s.gate, out);
         });
     }
 

@@ -67,6 +67,11 @@ pub struct ShardPlan {
     pub shards: usize,
     /// expert index → shard index (len = expert count, values < shards)
     pub assign: Vec<u32>,
+    /// Engine generation (`runtime::reload::Epoch`) this plan was
+    /// installed at — stamped into the JSON artifact by the live
+    /// re-planner so successive artifacts form an auditable trail.
+    /// `0` for plans built outside the reload path.
+    pub generation: u64,
 }
 
 impl ShardPlan {
@@ -76,7 +81,7 @@ impl ShardPlan {
         let assign = (0..k_experts)
             .map(|e| (e * shards / k_experts.max(1)) as u32)
             .collect();
-        Self { strategy: ShardStrategy::Contiguous, shards, assign }
+        Self { strategy: ShardStrategy::Contiguous, shards, assign, generation: 0 }
     }
 
     /// Size-balanced LPT bin-pack by `SparseExpert::size()`.
@@ -87,6 +92,7 @@ impl ShardPlan {
             strategy: ShardStrategy::Greedy,
             shards,
             assign: lpt(&weights, shards),
+            generation: 0,
         }
     }
 
@@ -94,9 +100,22 @@ impl ShardPlan {
     /// are per-expert routing counts (one entry per expert); the `+1`
     /// smoothing keeps never-routed experts from stacking onto one
     /// shard for free.
+    ///
+    /// An all-zero `routed` slice carries no load information at all —
+    /// rather than silently degenerating (size × 1 is exactly the
+    /// greedy weight), the fallback is made explicit: the returned
+    /// plan is [`greedy`](Self::greedy) and says so in its `strategy`
+    /// field, and the degradation is logged.
     pub fn weighted(set: &ExpertSet, shards: usize, routed: &[u64]) -> Self {
         assert!(shards >= 1, "shards must be >= 1");
         assert_eq!(routed.len(), set.k(), "routing counts vs expert count");
+        if routed.iter().all(|&c| c == 0) {
+            eprintln!(
+                "shard plan: weighted requested with all-zero routing counts; \
+                 falling back to size-only greedy"
+            );
+            return Self::greedy(set, shards);
+        }
         let weights: Vec<u64> = set
             .experts
             .iter()
@@ -107,7 +126,14 @@ impl ShardPlan {
             strategy: ShardStrategy::Weighted,
             shards,
             assign: lpt(&weights, shards),
+            generation: 0,
         }
+    }
+
+    /// Stamp the engine generation this plan was installed at.
+    pub fn with_generation(mut self, generation: u64) -> Self {
+        self.generation = generation;
+        self
     }
 
     /// Build by strategy; `routed` feeds [`weighted`](Self::weighted)
@@ -197,6 +223,7 @@ impl ShardPlan {
         Json::obj(vec![
             ("strategy", self.strategy.name().into()),
             ("shards", self.shards.into()),
+            ("generation", Json::Num(self.generation as f64)),
             (
                 "assign",
                 Json::arr_usize(
@@ -210,13 +237,19 @@ impl ShardPlan {
         let strategy = ShardStrategy::parse(j.get("strategy")?.as_str()?)
             .ok_or(JsonError::Type("strategy in {contiguous,greedy,weighted}"))?;
         let shards = j.get("shards")?.as_usize()?;
+        // pre-reload artifacts have no generation stamp: default 0
+        let generation = j
+            .get("generation")
+            .ok()
+            .and_then(|g| g.as_usize().ok())
+            .unwrap_or(0) as u64;
         let assign: Vec<u32> = j
             .get("assign")?
             .usize_vec()?
             .into_iter()
             .map(|s| s as u32)
             .collect();
-        let plan = Self { strategy, shards, assign };
+        let plan = Self { strategy, shards, assign, generation };
         if let Err(_e) = plan.validate(plan.assign.len()) {
             return Err(JsonError::Type("assign indices within shard count"));
         }
@@ -315,6 +348,36 @@ mod tests {
         // the others backfill; its shard holds the fewest experts
         let counts = plan.shard_expert_counts();
         assert_eq!(counts[hot], *counts.iter().min().unwrap(), "{counts:?}");
+    }
+
+    /// All-zero routing counts carry no load signal: the weighted
+    /// builder must fall back to greedy *explicitly* (strategy field
+    /// says what was actually built) instead of silently producing a
+    /// size-only plan labeled "weighted".
+    #[test]
+    fn weighted_zero_counts_falls_back_to_greedy() {
+        let s = set();
+        let zeros = vec![0u64; s.k()];
+        let plan = ShardPlan::weighted(&s, 3, &zeros);
+        assert_eq!(plan.strategy, ShardStrategy::Greedy);
+        assert_eq!(plan, ShardPlan::greedy(&s, 3));
+        // any nonzero count keeps the weighted label
+        let mut one = zeros;
+        one[0] = 1;
+        assert_eq!(ShardPlan::weighted(&s, 3, &one).strategy, ShardStrategy::Weighted);
+    }
+
+    #[test]
+    fn generation_stamp_roundtrips_and_defaults() {
+        let s = set();
+        let plan = ShardPlan::greedy(&s, 2).with_generation(7);
+        assert_eq!(plan.generation, 7);
+        let parsed = ShardPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(parsed.generation, 7);
+        assert_eq!(parsed, plan);
+        // artifacts written before the reload plane have no stamp
+        let j = Json::parse(r#"{"strategy":"greedy","shards":2,"assign":[0,1]}"#).unwrap();
+        assert_eq!(ShardPlan::from_json(&j).unwrap().generation, 0);
     }
 
     #[test]

@@ -146,6 +146,106 @@ fn prop_speedup_monotone_in_expert_size() {
     .unwrap();
 }
 
+/// Shutdown never strands a `Pending`: every query admitted before the
+/// stop resolves (the dispatcher drains its per-expert queues and the
+/// worker pool joins before shutdown returns), an impatient caller
+/// whose `wait_timeout` expired can still collect the result
+/// afterwards — no in-flight slot lives forever — and submissions
+/// after the stop fail fast with `Shutdown` instead of hanging or
+/// masquerading as backpressure.
+#[test]
+fn shutdown_drains_inflight_pendings() {
+    use ds_softmax::coordinator::batcher::BatchPolicy;
+    use ds_softmax::coordinator::QueryError;
+    use ds_softmax::query::{MatrixView, Route, TopKBuf};
+    use std::time::Duration;
+
+    /// Slow single-expert engine: each flush stalls long enough that a
+    /// burst of queries is still in flight when shutdown begins.
+    struct SlowEngine;
+    impl SoftmaxEngine for SlowEngine {
+        fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+            out.reset(hs.rows, k);
+            for r in 0..hs.rows {
+                out.push(r, 0, 1.0);
+            }
+        }
+        fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
+            assert_eq!(hs.rows, out.len());
+            for r in out.iter_mut() {
+                *r = Route::single(0, 1.0);
+            }
+        }
+        fn run_expert_batch(
+            &self,
+            _expert: usize,
+            hs: MatrixView<'_>,
+            gates: &[f32],
+            k: usize,
+            out: &mut TopKBuf,
+        ) -> anyhow::Result<()> {
+            anyhow::ensure!(hs.rows == gates.len());
+            std::thread::sleep(Duration::from_millis(3));
+            self.query_batch(hs, k, out);
+            Ok(())
+        }
+        fn flops_per_query(&self) -> u64 {
+            0
+        }
+        fn n_classes(&self) -> usize {
+            1
+        }
+        fn dim(&self) -> usize {
+            4
+        }
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+    }
+
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(50) },
+        ..Default::default()
+    };
+    let c = Coordinator::start(Arc::new(SlowEngine), cfg);
+    let pend: Vec<_> = (0..40)
+        .map(|_| c.submit(vec![0.5; 4], 1).expect("submit"))
+        .collect();
+    // impatient callers: their timeout expires while flushes are still
+    // grinding through the single slow worker — the slot must survive
+    let mut timed_out = 0;
+    for p in pend.iter().take(10) {
+        if p.wait_timeout(Duration::from_micros(200)).is_none() {
+            timed_out += 1;
+        }
+    }
+    c.shutdown();
+    // after shutdown every pending resolves — admitted queries drain
+    // with real results; nothing hangs, nothing resolves twice
+    let mut ok = 0;
+    for p in pend {
+        match p.wait() {
+            Ok(rows) => {
+                assert_eq!(rows, vec![(0, 1.0)]);
+                ok += 1;
+            }
+            Err(e) => panic!("admitted query lost at shutdown: {e}"),
+        }
+    }
+    assert_eq!(ok, 40);
+    assert!(timed_out > 0, "timeouts never exercised (machine too fast?)");
+    assert_eq!(
+        c.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+        40
+    );
+    // post-shutdown submissions shed with Shutdown, not backpressure
+    match c.submit(vec![0.5; 4], 1) {
+        Err(QueryError::Shutdown) => {}
+        other => panic!("want Shutdown, got {:?}", other.map(|_| ())),
+    }
+}
+
 /// Utilization measured by the metrics plane matches the empirical
 /// routing distribution exactly.
 #[test]

@@ -7,10 +7,13 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
+use std::sync::Arc;
+
 use ds_softmax::coordinator::NativeBatchEngine;
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, Route, TopKBuf};
+use ds_softmax::runtime::reload::EngineCell;
 use ds_softmax::shard::{ShardPlan, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::util::rng::Rng;
@@ -134,6 +137,34 @@ fn warm_query_batch_does_not_allocate() {
     for r in 0..bsz {
         assert_eq!(sh_out.row_vec(r), ref_out.row_vec(r), "sharded row {r}");
     }
+
+    // the live-reload read path is warm-clean too: pinning a
+    // generation (`EngineHandle::load`) is pure refcount traffic, so a
+    // warm query through the handle allocates nothing...
+    let cell = EngineCell::new(Arc::new(DsSoftmax::new(ds.set.clone())));
+    let handle = cell.handle();
+    {
+        let g = handle.load();
+        g.query_batch(view, 10, &mut out); // settle this engine's shapes
+    }
+    let n = count_allocs(|| {
+        let g = handle.load();
+        g.query_batch(view, 10, &mut out);
+        std::hint::black_box(&out);
+    });
+    assert_eq!(n, 0, "warm handle-load query_batch allocated {n} times");
+
+    // ...and stays clean across a swap: the replacement engine reuses
+    // the same per-thread scratch (same shapes), so post-swap warm
+    // queries are still zero-allocation
+    let next: Arc<dyn SoftmaxEngine> = Arc::new(DsSoftmax::new(ds.set.clone()));
+    cell.swap(next); // swap itself is off the hot path — may allocate
+    let n = count_allocs(|| {
+        let g = handle.load();
+        g.query_batch(view, 10, &mut out);
+        std::hint::black_box(&out);
+    });
+    assert_eq!(n, 0, "post-swap warm query_batch allocated {n} times");
 
     // results are still correct after the counted runs
     for r in 0..bsz {
