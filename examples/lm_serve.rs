@@ -12,6 +12,11 @@
 //! agreement, latency percentiles and throughput.  Results are recorded
 //! in EXPERIMENTS.md.
 //!
+//! Serving runs over the fabric wire: the coordinator sits behind a
+//! `FabricFront` on loopback and this example is a thin pipelining
+//! `FabricClient` of `fabric::proto` — the same frames `dss client`
+//! speaks to a remote `dss serve --listen` front.
+//!
 //!     make artifacts && cargo run --release --example lm_serve
 
 use std::sync::Arc;
@@ -20,6 +25,7 @@ use ds_softmax::artifacts::{artifacts_root, Manifest};
 use ds_softmax::coordinator::engine::PjrtBatchEngine;
 use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
 use ds_softmax::eval::AgreementCounter;
+use ds_softmax::fabric::{FabricClient, FabricFront};
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
@@ -83,24 +89,44 @@ fn main() -> anyhow::Result<()> {
             m.utilization.clone(),
         )))
     };
-    let c = Coordinator::start(engine, CoordinatorConfig::default());
+    let c = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
 
+    // serve over the wire: front on loopback, this process the client
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let mut front = FabricFront::spawn(listener, c.clone(), None)?;
+    println!("fabric front on {}", front.local_addr());
+    let mut cl = FabricClient::connect(&front.local_addr().to_string())?;
+
+    let window = args.usize_or("window", 256).max(1);
+    let n_q = contexts.len();
     let t0 = std::time::Instant::now();
-    let pend: Vec<_> = contexts
-        .iter()
-        .map(|h| c.submit(h.clone(), 10).unwrap())
-        .collect();
+    let mut answers: Vec<Option<Vec<(u32, f32)>>> = Vec::new();
+    answers.resize_with(n_q, || None);
+    let mut id_to_idx = std::collections::HashMap::new();
+    let (mut submitted, mut received) = (0usize, 0usize);
+    while received < n_q {
+        while submitted < n_q && submitted - received < window {
+            let id = cl.submit(&contexts[submitted], 10)?;
+            id_to_idx.insert(id, submitted);
+            submitted += 1;
+        }
+        let (id, res) = cl.recv()?;
+        let idx = id_to_idx[&id];
+        answers[idx] = Some(res.map_err(anyhow::Error::new)?);
+        received += 1;
+    }
+    let dt = t0.elapsed();
+
     let mut ds_acc = AgreementCounter::new(&[1, 5, 10]);
     let mut full_acc = AgreementCounter::new(&[1, 5, 10]);
     let mut top1_agree = 0u64;
-    for ((h, &y), p) in contexts.iter().zip(&targets).zip(pend) {
-        let top = p.wait().map_err(|e| anyhow::anyhow!("{e}"))?;
-        ds_acc.observe(&top, y);
+    for ((h, &y), top) in contexts.iter().zip(&targets).zip(&answers) {
+        let top = top.as_ref().expect("every pipelined query answered");
+        ds_acc.observe(top, y);
         let exact = reference_full.query(h, 10);
         full_acc.observe(&exact, y);
         top1_agree += (top[0].0 == exact[0].0) as u64;
     }
-    let dt = t0.elapsed();
 
     // --- report ---------------------------------------------------------
     let n_q = contexts.len();
@@ -131,5 +157,6 @@ fn main() -> anyhow::Result<()> {
         fmt_ns(p95),
         fmt_ns(p99),
     );
+    front.stop();
     Ok(())
 }

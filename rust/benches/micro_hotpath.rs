@@ -12,6 +12,8 @@
 //!   full query        gate + expert + topk
 //!   query_batch       the zero-allocation batched path (TopKBuf arena)
 //!   sharded S=4       expert-parallel scatter/merge (serial + pooled)
+//!   fabric loopback   the same scatter over TCP loopback (wire cost of
+//!                     frame encode/decode + syscalls per round-trip)
 //!   coordinator       submit→complete round-trip (batching overhead)
 //!   reload            EngineHandle::load pin/unpin vs raw Arc clone,
 //!                     and EngineCell::swap latency under reader load
@@ -24,12 +26,13 @@ use std::sync::Arc;
 
 use ds_softmax::benchlib::{bench, bench_batched, fmt_qps, BenchReport, Table};
 use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
+use ds_softmax::fabric::{FabricOpts, RemoteShardEngine, ShardWorker};
 use ds_softmax::model::dssoftmax::{DsScratch, DsSoftmax};
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, Route, TopKBuf};
 use ds_softmax::runtime::reload::EngineCell;
-use ds_softmax::shard::{ShardPlan, ShardedEngine};
+use ds_softmax::shard::{ReplicaPlan, ShardPlan, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::tensor::{dot, kernel, scaled_softmax_inplace, softmax_inplace, Matrix};
 use ds_softmax::util::rng::Rng;
@@ -337,6 +340,37 @@ fn main() {
             m.median_ns / ds_batched
         ),
     ]);
+
+    // fabric loopback: the same batched path with the expert plane
+    // behind one shard-worker over TCP loopback — isolates the wire
+    // cost (frame encode/decode + syscalls) of a scatter/merge hop
+    {
+        let plan = ShardPlan::greedy(&ds.set, 1);
+        let rplan = ReplicaPlan::uniform(plan.clone(), 1);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("loopback listener");
+        let mut worker =
+            ShardWorker::spawn_for(ds.set.clone(), &plan, 0, listener).expect("shard worker");
+        let addrs = vec![worker.local_addr().to_string()];
+        let remote = RemoteShardEngine::connect(&ds.set, rplan, &addrs, FabricOpts::default())
+            .expect("remote engine");
+        remote.query_batch(view, 10, &mut sh_out); // warm connection + scratch
+        let m = bench_batched("fabric loopback", 5, 50, bsz, || {
+            remote.query_batch(view, 10, &mut sh_out);
+            std::hint::black_box(&sh_out);
+        });
+        report.push("fabric-loopback", "N=10048 K=64", bsz, 1, m.median_ns);
+        table.row(vec![
+            "fabric loopback S=1".into(),
+            format!("B={bsz} N=10048 K=64"),
+            format!("{:.1}µs/q", m.median_ns / 1e3),
+            format!(
+                "{} (wire cost {:.2}x of query_batch)",
+                fmt_qps(m.median_ns),
+                m.median_ns / ds_batched
+            ),
+        ]);
+        worker.stop();
+    }
 
     // coordinator round-trip: batching + channel + threadpool overhead
     let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(ds.set.clone())));

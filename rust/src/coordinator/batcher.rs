@@ -126,6 +126,7 @@ mod tests {
             k: 1,
             route: Route::single(expert, 0.5),
             submitted,
+            deadline: None,
             responder: tx,
         }
     }

@@ -19,7 +19,8 @@
 //! swap changed the shard topology.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::util::json::Json;
 use crate::util::stats::LatencyHisto;
@@ -38,6 +39,8 @@ pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// queries shed at flush time because their deadline had passed
+    pub timeouts: AtomicU64,
     pub batches: AtomicU64,
     pub batched_queries: AtomicU64,
     /// backlog gauge: queries admitted but not yet flushed (ingress +
@@ -62,6 +65,9 @@ pub struct Metrics {
     /// and both increments happen under the same acquisition, so a
     /// concurrent re-bind can never shrink the vectors between them.
     shard_counters: Mutex<ShardCounters>,
+    /// transport-plane counters, attached when the serving engine is a
+    /// `fabric::RemoteShardEngine` (`None` for in-process engines)
+    fabric: Mutex<Option<Arc<FabricMetrics>>>,
     pub queue_latency: Mutex<LatencyHisto>,
     pub execute_latency: Mutex<LatencyHisto>,
     pub total_latency: Mutex<LatencyHisto>,
@@ -135,6 +141,15 @@ impl Metrics {
         }
     }
 
+    /// Bind the fabric transport plane's counters into this metrics
+    /// plane, so [`snapshot`](Self::snapshot) exports per-replica
+    /// traffic and the transport RTT histogram alongside the
+    /// coordinator's own stages.  Call after constructing a
+    /// `RemoteShardEngine` with its `metrics()` handle.
+    pub fn attach_fabric(&self, fabric: Arc<FabricMetrics>) {
+        *self.fabric.lock().unwrap() = Some(fabric);
+    }
+
     pub fn set_queue_depth(&self, depth: usize) {
         self.queue_depth.store(depth as u64, Ordering::Relaxed);
     }
@@ -195,6 +210,7 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_queries: self.batched_queries.load(Ordering::Relaxed),
             mean_batch: self.mean_batch_size(),
@@ -209,6 +225,12 @@ impl Metrics {
             queue: HistoSnapshot::of(&self.queue_latency.lock().unwrap()),
             execute: HistoSnapshot::of(&self.execute_latency.lock().unwrap()),
             total: HistoSnapshot::of(&self.total_latency.lock().unwrap()),
+            fabric: self
+                .fabric
+                .lock()
+                .unwrap()
+                .as_ref()
+                .map(|f| f.snapshot()),
         }
     }
 
@@ -271,12 +293,126 @@ impl HistoSnapshot {
     }
 }
 
+/// Per-replica transport counters: how many queries each worker
+/// replica absorbed, how many requests were retried onto it, and how
+/// many failovers *away* from it were triggered by its failures.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaSnapshot {
+    /// replica label, `s{shard}r{replica}@{addr}`
+    pub label: String,
+    pub queries: u64,
+    pub retries: u64,
+    pub failovers: u64,
+}
+
+/// Point-in-time copy of the fabric transport plane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FabricSnapshot {
+    pub replicas: Vec<ReplicaSnapshot>,
+    /// wire round-trip latency (write batch → last response read)
+    pub rtt: HistoSnapshot,
+}
+
+impl FabricSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "replicas",
+                Json::Arr(
+                    self.replicas
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("label", r.label.as_str().into()),
+                                ("queries", Json::Num(r.queries as f64)),
+                                ("retries", Json::Num(r.retries as f64)),
+                                ("failovers", Json::Num(r.failovers as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("rtt", self.rtt.to_json()),
+        ])
+    }
+}
+
+/// Transport-plane counters for the distributed fabric, indexed by
+/// replica *slot* (the shard-major `(shard, replica)` flattening of
+/// `shard::ReplicaPlan`).  Owned by the `RemoteShardEngine`; attach to
+/// a coordinator's [`Metrics`] via [`Metrics::attach_fabric`] to export
+/// through `snapshot()`.
+pub struct FabricMetrics {
+    labels: Vec<String>,
+    queries: Vec<AtomicU64>,
+    retries: Vec<AtomicU64>,
+    failovers: Vec<AtomicU64>,
+    rtt: Mutex<LatencyHisto>,
+}
+
+impl FabricMetrics {
+    /// One counter row per replica slot; `labels[slot]` names it.
+    pub fn new(labels: Vec<String>) -> Self {
+        let n = labels.len();
+        Self {
+            labels,
+            queries: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            retries: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            failovers: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            rtt: Mutex::new(LatencyHisto::default()),
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// `n` queries' rows dispatched to `slot`.
+    pub fn record_queries(&self, slot: usize, n: usize) {
+        self.queries[slot].fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// `n` queries' rows re-sent to `slot` after a sibling failed.
+    pub fn record_retries(&self, slot: usize, n: usize) {
+        self.retries[slot].fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// One failover triggered by `slot` (the replica that failed).
+    pub fn record_failover(&self, slot: usize) {
+        self.failovers[slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One wire round-trip (request batch written → last response read).
+    pub fn record_rtt(&self, d: Duration) {
+        self.rtt.lock().unwrap().record(d);
+    }
+
+    pub fn snapshot(&self) -> FabricSnapshot {
+        FabricSnapshot {
+            replicas: self
+                .labels
+                .iter()
+                .enumerate()
+                .map(|(i, label)| ReplicaSnapshot {
+                    label: label.clone(),
+                    queries: self.queries[i].load(Ordering::Relaxed),
+                    retries: self.retries[i].load(Ordering::Relaxed),
+                    failovers: self.failovers[i].load(Ordering::Relaxed),
+                })
+                .collect(),
+            rtt: HistoSnapshot::of(&self.rtt.lock().unwrap()),
+        }
+    }
+}
+
 /// Point-in-time copy of the whole metrics plane, JSON-renderable.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// deadline-shed queries (see `Metrics::timeouts`)
+    pub timeouts: u64,
     pub batches: u64,
     pub batched_queries: u64,
     pub mean_batch: f64,
@@ -294,6 +430,8 @@ pub struct MetricsSnapshot {
     pub queue: HistoSnapshot,
     pub execute: HistoSnapshot,
     pub total: HistoSnapshot,
+    /// transport plane, present when serving through the fabric
+    pub fabric: Option<FabricSnapshot>,
 }
 
 fn arr_u64(xs: &[u64]) -> Json {
@@ -302,10 +440,11 @@ fn arr_u64(xs: &[u64]) -> Json {
 
 impl MetricsSnapshot {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("submitted", Json::Num(self.submitted as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
+            ("timeouts", Json::Num(self.timeouts as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("batched_queries", Json::Num(self.batched_queries as f64)),
             ("mean_batch", Json::Num(self.mean_batch)),
@@ -320,7 +459,11 @@ impl MetricsSnapshot {
             ("queue_latency", self.queue.to_json()),
             ("execute_latency", self.execute.to_json()),
             ("total_latency", self.total.to_json()),
-        ])
+        ];
+        if let Some(f) = &self.fabric {
+            fields.push(("fabric", f.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// One-line JSON rendering (the shutdown export format).
@@ -408,6 +551,47 @@ mod tests {
         assert_eq!(m.snapshot().per_shard.len(), 1);
         m.record_shard_batch(0, 2);
         assert_eq!(m.snapshot().per_shard, vec![2]);
+    }
+
+    /// The fabric transport plane exports through the coordinator
+    /// snapshot once attached: per-replica counters plus the RTT
+    /// histogram, absent entirely for in-process engines.
+    #[test]
+    fn fabric_plane_exports_through_snapshot() {
+        let m = Metrics::new(2);
+        assert!(m.snapshot().fabric.is_none());
+        let j = Json::parse(&m.snapshot().render()).unwrap();
+        assert!(j.get("fabric").is_err());
+        assert_eq!(j.get("timeouts").unwrap().as_usize().unwrap(), 0);
+
+        let f = Arc::new(FabricMetrics::new(vec![
+            "s0r0@a".into(),
+            "s0r1@b".into(),
+            "s1r0@c".into(),
+        ]));
+        f.record_queries(0, 10);
+        f.record_queries(2, 4);
+        f.record_failover(0);
+        f.record_retries(1, 10);
+        f.record_rtt(Duration::from_micros(150));
+        f.record_rtt(Duration::from_micros(250));
+        m.attach_fabric(f.clone());
+        let snap = m.snapshot();
+        let fs = snap.fabric.as_ref().unwrap();
+        assert_eq!(fs.replicas.len(), 3);
+        assert_eq!(fs.replicas[0].queries, 10);
+        assert_eq!(fs.replicas[0].failovers, 1);
+        assert_eq!(fs.replicas[1].retries, 10);
+        assert_eq!(fs.replicas[2].queries, 4);
+        assert_eq!(fs.rtt.count, 2);
+        // and it renders as parseable JSON
+        let j = Json::parse(&snap.render()).unwrap();
+        let jf = j.get("fabric").unwrap();
+        let reps = jf.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 3);
+        assert_eq!(reps[0].get("label").unwrap().as_str().unwrap(), "s0r0@a");
+        assert_eq!(reps[0].get("queries").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(jf.get("rtt").unwrap().get("count").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

@@ -27,6 +27,22 @@
 //!          Replanner ◀── Metrics::            per flush, drop after)
 //!          skew? rebuild   routed_counts_generation
 //!          ShardPlan::weighted → ShardedEngine (off-thread) → swap
+//!
+//!   fabric plane (fabric) — the same pipeline over a process boundary:
+//!
+//!   remote clients ──▶ FabricFront (dss serve --listen)
+//!          │ Frame::Query over TCP    │ submit_with_deadline
+//!          ▼                          ▼
+//!       the ingress/batcher/worker pipeline above, with the engine a
+//!       fabric::RemoteShardEngine: gate replicated locally, each
+//!       per-expert flush an ExpertBatch frame to the owning shard's
+//!       least-loaded replica (shard::ReplicaPlan), retry-once
+//!       failover to a sibling on worker death/timeout
+//!          │                          ▲
+//!          ▼                          │ run_expert_batch
+//!   dss shard-worker × Σ replicas (each: EngineCell<shard slice>)
+//!       metrics: per-replica query/retry/failover counters + RTT
+//!       histogram (FabricMetrics, attached into Metrics::snapshot)
 //! ```
 //!
 //! The gate runs *before* batching so requests are grouped by expert —
@@ -66,7 +82,7 @@ pub mod server;
 pub use engine::NativeBatchEngine;
 #[cfg(feature = "pjrt")]
 pub use engine::PjrtBatchEngine;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{FabricMetrics, FabricSnapshot, Metrics, MetricsSnapshot};
 pub use server::{Coordinator, CoordinatorConfig, QueryError};
 
 /// The one engine trait, re-exported where the old `BatchEngine` lived.

@@ -16,6 +16,9 @@ pub struct RoutedQuery {
     pub k: usize,
     pub route: Route,
     pub submitted: Instant,
+    /// Shed with [`super::QueryError::Timeout`] if still unflushed at
+    /// this instant (`None` = wait forever).
+    pub deadline: Option<Instant>,
     pub responder: std::sync::mpsc::Sender<super::server::QueryResult>,
 }
 

@@ -46,6 +46,10 @@ pub enum QueryError {
     Engine(String),
     #[error("shutting down")]
     Shutdown,
+    #[error("deadline exceeded")]
+    Timeout,
+    #[error("transport failure: {0}")]
+    Transport(String),
 }
 
 #[derive(Clone, Debug)]
@@ -216,6 +220,20 @@ impl Coordinator {
     /// is full (the caller can retry / shed load) and with
     /// [`QueryError::Shutdown`] once the coordinator is stopping.
     pub fn submit(&self, h: Vec<f32>, k: usize) -> Result<Pending, QueryError> {
+        self.submit_with_deadline(h, k, None)
+    }
+
+    /// [`submit`](Self::submit) with an optional per-query deadline.
+    /// A query still unflushed when its deadline passes is shed at
+    /// flush time with [`QueryError::Timeout`] instead of executing —
+    /// the fabric serving front uses this so a slow batch never wedges
+    /// network callers that have already given up.
+    pub fn submit_with_deadline(
+        &self,
+        h: Vec<f32>,
+        k: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Pending, QueryError> {
         if self.stop.load(Ordering::Acquire) {
             return Err(QueryError::Shutdown);
         }
@@ -236,6 +254,7 @@ impl Coordinator {
             k,
             route,
             submitted: Instant::now(),
+            deadline,
             responder: tx,
         };
         self.ingress.try_push(q).map_err(|_| {
@@ -309,6 +328,25 @@ fn dispatch_loop(
             // single-generation run
             let engine = handle.load();
             let t0 = Instant::now();
+            // shed queries whose deadline passed while queued: the
+            // caller has already given up, so executing them only
+            // delays the rest of the batch
+            let mut batch = batch;
+            if batch.iter().any(|q| q.deadline.is_some_and(|d| d <= t0)) {
+                let mut live = Vec::with_capacity(batch.len());
+                for q in batch {
+                    if q.deadline.is_some_and(|d| d <= t0) {
+                        metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+                        let _ = q.responder.send(Err(QueryError::Timeout));
+                    } else {
+                        live.push(q);
+                    }
+                }
+                batch = live;
+                if batch.is_empty() {
+                    return;
+                }
+            }
             let mut s = scratches.lock().unwrap().pop().unwrap_or_default();
             s.pack.reset(engine.dim());
             s.gates.clear();
@@ -345,9 +383,16 @@ fn dispatch_loop(
                     }
                 }
                 Err(e) => {
-                    let msg = e.to_string();
+                    // preserve typed errors surfacing through anyhow
+                    // (the remote engine returns QueryError::Timeout /
+                    // Transport through this path); anything else is
+                    // an engine failure with the full context chain
+                    let err = e
+                        .downcast_ref::<QueryError>()
+                        .cloned()
+                        .unwrap_or_else(|| QueryError::Engine(format!("{e:#}")));
                     for q in batch {
-                        let _ = q.responder.send(Err(QueryError::Engine(msg.clone())));
+                        let _ = q.responder.send(Err(err.clone()));
                     }
                 }
             }
@@ -602,6 +647,31 @@ mod tests {
         assert_eq!(snap.engine_epoch, 1);
         // and the coordinator keeps serving
         assert!(c.query(vec![0.0; 8], 2).is_ok());
+    }
+
+    /// A query whose deadline has already passed when its batch
+    /// flushes resolves with `Timeout` instead of executing; live
+    /// queries in the same batch are unaffected.
+    #[test]
+    fn expired_deadline_sheds_with_timeout() {
+        let (c, reference) = native_coord();
+        let mut rng = Rng::new(11);
+        let h = rng.normal_vec(16, 1.0);
+        let past = Instant::now() - Duration::from_millis(5);
+        let p = c
+            .submit_with_deadline(h.clone(), 3, Some(past))
+            .unwrap();
+        assert_eq!(p.wait(), Err(QueryError::Timeout));
+        // a generous deadline behaves like no deadline at all
+        let far = Instant::now() + Duration::from_secs(60);
+        let got = c
+            .submit_with_deadline(h.clone(), 3, Some(far))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(got, reference.query(&h, 3));
+        c.shutdown();
+        assert_eq!(c.metrics.snapshot().timeouts, 1);
     }
 
     /// Submitting after shutdown resolves with `Shutdown`, not a

@@ -1,0 +1,139 @@
+//! [`FabricClient`] — a pipelining client of the serving front.
+//!
+//! The client assigns correlation ids on submit and hands back
+//! `(id, result)` pairs as responses arrive, so callers can keep a
+//! window of queries in flight over one connection
+//! (`submit … submit, recv … recv`) — the pattern `dss client` and
+//! `examples/lm_serve.rs` drive.  Responses arrive in the order the
+//! *coordinator* completes them, not submission order; match by id.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+
+use crate::coordinator::QueryError;
+use crate::fabric::proto::{bits_arr, read_frame, write_frame, Frame, Problem};
+use crate::util::json::Json;
+
+/// One connection to a `dss serve --listen` front.
+pub struct FabricClient {
+    stream: TcpStream,
+    /// query responses read while waiting for a control reply
+    backlog: VecDeque<Frame>,
+    next_id: u64,
+}
+
+/// A completed query: correlation id + typed outcome.
+pub type ClientResult = (u64, Result<Vec<(u32, f32)>, QueryError>);
+
+impl FabricClient {
+    pub fn connect(addr: &str) -> anyhow::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream, backlog: VecDeque::new(), next_id: 1 })
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send one query; returns its correlation id immediately (pair
+    /// with [`recv`](Self::recv)).
+    pub fn submit(&mut self, h: &[f32], k: usize) -> anyhow::Result<u64> {
+        let id = self.fresh_id();
+        let mut w = &self.stream;
+        write_frame(&mut w, &Frame::Query { id, h: h.to_vec(), k })?;
+        Ok(id)
+    }
+
+    /// Receive the next query response (completion order).
+    pub fn recv(&mut self) -> anyhow::Result<ClientResult> {
+        let frame = match self.backlog.pop_front() {
+            Some(f) => f,
+            None => {
+                let mut r = &self.stream;
+                read_frame(&mut r)?
+                    .ok_or_else(|| anyhow::anyhow!("server closed the connection"))?
+            }
+        };
+        match frame {
+            Frame::QueryOk { id, ids, probs } => {
+                anyhow::ensure!(
+                    ids.len() == probs.len(),
+                    "malformed response: {} ids vs {} probs",
+                    ids.len(),
+                    probs.len()
+                );
+                Ok((id, Ok(ids.into_iter().zip(probs).collect())))
+            }
+            Frame::Error { id, problem } => Ok((id, Err(problem.to_query_error()))),
+            other => anyhow::bail!("unexpected frame while awaiting a query: {other:?}"),
+        }
+    }
+
+    /// Synchronous convenience: submit + wait for that exact id.
+    /// A typed server-side failure surfaces as a downcastable
+    /// [`QueryError`].
+    pub fn query(&mut self, h: &[f32], k: usize) -> anyhow::Result<Vec<(u32, f32)>> {
+        let want = self.submit(h, k)?;
+        let (id, result) = self.recv()?;
+        anyhow::ensure!(
+            id == want,
+            "response {id} for request {want} on a non-pipelined query"
+        );
+        result.map_err(anyhow::Error::new)
+    }
+
+    /// Fetch the server's metrics snapshot (coordinator plane JSON,
+    /// including the fabric transport plane when serving remotely).
+    pub fn stats(&mut self) -> anyhow::Result<Json> {
+        let id = self.fresh_id();
+        let mut w = &self.stream;
+        write_frame(&mut w, &Frame::Stats { id })?;
+        match self.recv_control(id)? {
+            Frame::StatsOk { snapshot, .. } => Ok(snapshot),
+            other => anyhow::bail!("unexpected stats reply: {other:?}"),
+        }
+    }
+
+    /// Ask the server to stop serving (it acknowledges first).
+    pub fn shutdown_server(&mut self) -> anyhow::Result<()> {
+        let id = self.fresh_id();
+        let mut w = &self.stream;
+        write_frame(&mut w, &Frame::Shutdown { id })?;
+        match self.recv_control(id)? {
+            Frame::ShutdownOk { .. } => Ok(()),
+            other => anyhow::bail!("unexpected shutdown reply: {other:?}"),
+        }
+    }
+
+    /// Read until the control reply with `id` arrives, backlogging any
+    /// pipelined query responses that land first.
+    fn recv_control(&mut self, id: u64) -> anyhow::Result<Frame> {
+        loop {
+            let mut r = &self.stream;
+            let frame = read_frame(&mut r)?
+                .ok_or_else(|| anyhow::anyhow!("server closed the connection"))?;
+            match frame {
+                Frame::StatsOk { id: got, .. } | Frame::ShutdownOk { id: got }
+                    if got == id =>
+                {
+                    return Ok(frame)
+                }
+                Frame::Error { id: got, problem } if got == id => {
+                    anyhow::bail!("control request failed: {problem}")
+                }
+                Frame::QueryOk { .. } | Frame::Error { .. } => self.backlog.push_back(frame),
+                other => anyhow::bail!("unexpected frame: {other:?}"),
+            }
+        }
+    }
+}
+
+/// Render a top-k row for logs (ids with bit-exact probs).
+pub fn fmt_topk(top: &[(u32, f32)]) -> String {
+    let ids: Vec<u32> = top.iter().map(|&(i, _)| i).collect();
+    let probs: Vec<f32> = top.iter().map(|&(_, p)| p).collect();
+    format!("ids={:?} prob_bits={}", ids, bits_arr(&probs))
+}

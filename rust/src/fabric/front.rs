@@ -1,0 +1,245 @@
+//! [`FabricFront`] — the network serving front: `fabric::proto`
+//! queries in, the [`Coordinator`] pipeline behind.
+//!
+//! One front process (`dss serve --listen`) owns the coordinator —
+//! ingress backpressure, per-expert dynamic batching, the metrics
+//! plane, live `swap_engine` reconfiguration — and speaks
+//! [`Frame::Query`]/[`Frame::QueryOk`] to remote clients.  The engine
+//! behind the coordinator is whatever was installed: in-process, or a
+//! `RemoteShardEngine` scattering to shard workers (the full
+//! distributed topology).
+//!
+//! Per connection, two threads split the work so a slow query never
+//! blocks the read side:
+//!
+//! * the **reader** parses frames and submits queries (with the
+//!   front's deadline, if configured) — rejections are answered
+//!   immediately as typed [`Problem`]s;
+//! * the **collector** drains each query's [`Pending`] in submission
+//!   order and writes the response frame.  Responses carry the
+//!   request's correlation id, so clients may pipeline arbitrarily.
+
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::Pending;
+use crate::coordinator::{Coordinator, QueryError};
+use crate::fabric::proto::{read_frame, write_frame, Frame, Problem};
+
+/// TCP serving front over a [`Coordinator`].
+pub struct FabricFront {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl FabricFront {
+    /// Serve `coord` on `listener`.  `deadline`, when set, bounds
+    /// every query's time in the pipeline: expired queries resolve
+    /// with a `timeout` [`Problem`] instead of holding the connection.
+    pub fn spawn(
+        listener: TcpListener,
+        coord: Arc<Coordinator>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Self> {
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("dss-front".into())
+                .spawn(move || accept_loop(listener, coord, deadline, stop, conns))?
+        };
+        Ok(Self { addr, stop, accept: Some(accept), conns })
+    }
+
+    /// The bound address (useful with ephemeral `:0` listeners).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the front stops (remote `Shutdown` frame or
+    /// [`stop`](Self::stop)).
+    pub fn wait(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop serving and join every connection thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        for s in self.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        self.wait();
+    }
+}
+
+impl Drop for FabricFront {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    deadline: Option<Duration>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+) {
+    let mut threads = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                if let Ok(clone) = stream.try_clone() {
+                    conns.lock().unwrap().push(clone);
+                }
+                let _ = stream.set_nonblocking(false);
+                let coord = coord.clone();
+                let stop = stop.clone();
+                let conns = conns.clone();
+                threads.push(std::thread::spawn(move || {
+                    serve_conn(stream, coord, deadline, stop, conns);
+                }));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    for s in conns.lock().unwrap().iter() {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    for t in threads {
+        let _ = t.join();
+    }
+}
+
+/// An admitted query handed from the reader to the collector.
+struct InFlight {
+    id: u64,
+    pending: Pending,
+    submitted: Instant,
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    deadline: Option<Duration>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+) {
+    // reader and collector share the write side under a mutex: every
+    // frame write is atomic (one length prefix + body per acquisition)
+    let writer = match stream.try_clone() {
+        Ok(s) => Arc::new(Mutex::new(s)),
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<InFlight>();
+    let collector = {
+        let writer = writer.clone();
+        std::thread::spawn(move || {
+            for q in rx {
+                let result = match deadline {
+                    Some(d) => {
+                        let remaining = (q.submitted + d)
+                            .saturating_duration_since(Instant::now());
+                        q.pending
+                            .wait_timeout(remaining)
+                            .unwrap_or(Err(QueryError::Timeout))
+                    }
+                    None => q.pending.wait(),
+                };
+                let frame = match result {
+                    Ok(top) => {
+                        let (ids, probs) = top.into_iter().unzip();
+                        Frame::QueryOk { id: q.id, ids, probs }
+                    }
+                    Err(e) => Frame::Error {
+                        id: q.id,
+                        problem: Problem::from_query_error(&e),
+                    },
+                };
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &frame).is_err() {
+                    break; // client gone; drain silently
+                }
+            }
+        })
+    };
+
+    let mut r = &stream;
+    loop {
+        let frame = match read_frame(&mut r) {
+            Ok(Some(f)) => f,
+            Ok(None) | Err(_) => break,
+        };
+        match frame {
+            Frame::Query { id, h, k } => {
+                let submitted = Instant::now();
+                match coord.submit_with_deadline(h, k, deadline.map(|d| submitted + d)) {
+                    Ok(pending) => {
+                        if tx.send(InFlight { id, pending, submitted }).is_err() {
+                            break; // collector died (client gone)
+                        }
+                    }
+                    Err(e) => {
+                        let reply =
+                            Frame::Error { id, problem: Problem::from_query_error(&e) };
+                        let mut w = writer.lock().unwrap();
+                        if write_frame(&mut *w, &reply).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            Frame::Stats { id } => {
+                let reply = Frame::StatsOk {
+                    id,
+                    snapshot: coord.metrics.snapshot().to_json(),
+                };
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &reply).is_err() {
+                    break;
+                }
+            }
+            Frame::Shutdown { id } => {
+                {
+                    let mut w = writer.lock().unwrap();
+                    let _ = write_frame(&mut *w, &Frame::ShutdownOk { id });
+                }
+                stop.store(true, Ordering::Release);
+                for s in conns.lock().unwrap().iter() {
+                    let _ = s.shutdown(Shutdown::Both);
+                }
+                break;
+            }
+            other => {
+                let reply = Frame::Error {
+                    id: other.id(),
+                    problem: Problem::proto(format!(
+                        "the serving front does not serve this frame: {other:?}"
+                    )),
+                };
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &reply).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    drop(tx); // collector drains every in-flight query, then exits
+    let _ = collector.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}

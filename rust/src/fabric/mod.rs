@@ -1,0 +1,49 @@
+//! Distributed shard fabric: the scatter/merge of `shard::ShardedEngine`
+//! lifted over a process boundary.
+//!
+//! The paper's two-level hierarchy makes every expert a small
+//! independent softmax — exactly the unit that shards across processes.
+//! The fabric keeps the *replicated gate* local (routing is dense and
+//! cheap) and sends only per-expert batches over the wire:
+//!
+//! ```text
+//!   caller ──▶ RemoteShardEngine            dss shard-worker (one per shard replica)
+//!                │  route_batch (local gate)      │
+//!                │  group rows by expert          │  EngineCell<DsSoftmax(shard slice)>
+//!                ├──ExpertBatch──▶ TCP ──────────▶│  run_expert_batch
+//!                ◀──BatchOk────────────────────── ┘
+//!                ▼  merge into caller's TopKBuf (bit-identical to ShardedEngine)
+//! ```
+//!
+//! Layers, bottom up:
+//!
+//! - [`proto`] — length-prefixed, versioned JSON frames with exact
+//!   f32-bit encoding and RFC 7807-style [`proto::Problem`] errors.
+//! - [`worker`] — [`ShardWorker`]: hosts one shard's `DsSoftmax`
+//!   behind its own `EngineCell` and answers expert-batch frames
+//!   (`dss shard-worker` on the CLI).
+//! - [`remote`] — [`RemoteShardEngine`]: a full `SoftmaxEngine` whose
+//!   shards live in other processes; replica selection under
+//!   per-connection backpressure with retry-once failover to a sibling
+//!   replica on worker death or timeout.
+//! - [`front`] — [`FabricFront`]: a network serving front over the
+//!   `Coordinator` (`dss serve --listen`), installable live through
+//!   the `swap_engine`/`Replanner` path like any other engine.
+//! - [`client`] — [`FabricClient`]: a pipelining client of the front
+//!   (`dss client` on the CLI; `examples/lm_serve.rs` uses it too).
+//!
+//! Replica placement is the shard planner's job: see
+//! `shard::ReplicaPlan`, which extends a `ShardPlan` with a per-shard
+//! replica count so hot shards replicate.
+
+pub mod client;
+pub mod front;
+pub mod proto;
+pub mod remote;
+pub mod worker;
+
+pub use client::FabricClient;
+pub use front::FabricFront;
+pub use proto::{checksum_topk, Frame, Problem, PROTO_VERSION};
+pub use remote::{FabricOpts, RemoteShardEngine};
+pub use worker::ShardWorker;

@@ -1,0 +1,586 @@
+//! `fabric::proto` — the versioned wire layer of the distributed shard
+//! fabric: length-prefixed JSON frames over TCP, built on the in-house
+//! [`crate::util::json`] substrate (no serde offline).
+//!
+//! ## Framing
+//!
+//! Every frame is a 4-byte big-endian byte length followed by exactly
+//! that many bytes of JSON text.  [`write_frame`] / [`read_frame`] are
+//! the only encode/decode path — workers, the remote engine, the
+//! serving front and the client all speak through them, so the framing
+//! invariants (size bound, version check, clean-EOF handling) live in
+//! one place.
+//!
+//! ## Exactness
+//!
+//! The fabric's contract is *bit-identical* results across the process
+//! boundary ([`crate::fabric::remote::RemoteShardEngine`] vs the
+//! in-process `ShardedEngine`).  JSON's `f64` round-trip through the
+//! shortest-representation writer is not a safe carrier for arbitrary
+//! `f32` payloads (NaN/inf have no JSON literal at all), so every f32
+//! array on the wire is encoded as its IEEE-754 **bit pattern**: a JSON
+//! array of `u32` integers (`f32::to_bits`).  `u32 < 2^53` is exact in
+//! `f64`, so the round-trip is lossless by construction — including
+//! NaN payloads, infinities and signed zeros.
+//!
+//! ## Errors
+//!
+//! Failures cross the wire as RFC 7807-style [`Problem`] payloads
+//! (`{type, title, detail}`) with a closed mapping to and from the
+//! coordinator's typed [`QueryError`] — machine-parseable on both
+//! sides, human-readable in logs.
+
+use std::io::{self, Read, Write};
+
+use crate::coordinator::QueryError;
+use crate::util::json::{Json, JsonError};
+
+/// Wire protocol version, negotiated in the `Hello`/`HelloOk`
+/// handshake.  Bump on any frame-shape change.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Upper bound on one frame's JSON body.  Generous — the largest
+/// legitimate frame is an expert batch (rows × dim bit-encoded floats,
+/// ~12 bytes per value on the wire) — while still bounding what a
+/// corrupt or hostile length prefix can make a peer allocate.
+pub const MAX_FRAME: usize = 64 << 20;
+
+// ---- RFC 7807-style error payloads ------------------------------------
+
+/// Problem-type URNs (the closed `type` vocabulary).
+pub const PROBLEM_REJECTED: &str = "urn:dss:problem:rejected";
+pub const PROBLEM_ENGINE: &str = "urn:dss:problem:engine";
+pub const PROBLEM_SHUTDOWN: &str = "urn:dss:problem:shutdown";
+pub const PROBLEM_TIMEOUT: &str = "urn:dss:problem:timeout";
+pub const PROBLEM_TRANSPORT: &str = "urn:dss:problem:transport";
+pub const PROBLEM_PROTO: &str = "urn:dss:problem:proto";
+pub const PROBLEM_UNKNOWN_EXPERT: &str = "urn:dss:problem:unknown-expert";
+
+/// A machine-parseable wire error: RFC 7807's `{type, title, detail}`
+/// trio.  `ptype` is one of the `PROBLEM_*` URNs; unknown types map to
+/// [`QueryError::Engine`] so a newer peer degrades to a stringly error
+/// instead of a protocol failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Problem {
+    pub ptype: String,
+    pub title: String,
+    pub detail: String,
+}
+
+impl Problem {
+    pub fn new(
+        ptype: impl Into<String>,
+        title: impl Into<String>,
+        detail: impl Into<String>,
+    ) -> Self {
+        Self { ptype: ptype.into(), title: title.into(), detail: detail.into() }
+    }
+
+    /// A protocol violation (bad version, malformed frame, wrong role).
+    pub fn proto(detail: impl Into<String>) -> Self {
+        Self::new(PROBLEM_PROTO, "protocol violation", detail)
+    }
+
+    /// A batch named an expert this worker does not serve.
+    pub fn unknown_expert(detail: impl Into<String>) -> Self {
+        Self::new(PROBLEM_UNKNOWN_EXPERT, "expert not served by this shard", detail)
+    }
+
+    /// The wire form of the coordinator's typed [`QueryError`].
+    pub fn from_query_error(e: &QueryError) -> Self {
+        match e {
+            QueryError::Rejected(d) => Self::new(PROBLEM_REJECTED, "query rejected", d.clone()),
+            QueryError::Engine(d) => Self::new(PROBLEM_ENGINE, "engine failure", d.clone()),
+            QueryError::Shutdown => Self::new(PROBLEM_SHUTDOWN, "shutting down", ""),
+            QueryError::Timeout => Self::new(PROBLEM_TIMEOUT, "deadline exceeded", ""),
+            QueryError::Transport(d) => {
+                Self::new(PROBLEM_TRANSPORT, "transport failure", d.clone())
+            }
+        }
+    }
+
+    /// Inverse of [`from_query_error`](Self::from_query_error): the
+    /// closed URN vocabulary maps back exactly; anything else degrades
+    /// to [`QueryError::Engine`] with the full payload preserved.
+    pub fn to_query_error(&self) -> QueryError {
+        match self.ptype.as_str() {
+            PROBLEM_REJECTED => QueryError::Rejected(self.detail.clone()),
+            PROBLEM_ENGINE => QueryError::Engine(self.detail.clone()),
+            PROBLEM_SHUTDOWN => QueryError::Shutdown,
+            PROBLEM_TIMEOUT => QueryError::Timeout,
+            PROBLEM_TRANSPORT => QueryError::Transport(self.detail.clone()),
+            _ => QueryError::Engine(format!("{}: {}", self.title, self.detail)),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", self.ptype.as_str().into()),
+            ("title", self.title.as_str().into()),
+            ("detail", self.detail.as_str().into()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self, JsonError> {
+        Ok(Self {
+            ptype: j.get("type")?.as_str()?.to_string(),
+            title: j.get("title")?.as_str()?.to_string(),
+            detail: j.get("detail")?.as_str()?.to_string(),
+        })
+    }
+}
+
+impl std::fmt::Display for Problem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.detail.is_empty() {
+            write!(f, "{} ({})", self.title, self.ptype)
+        } else {
+            write!(f, "{} ({}): {}", self.title, self.ptype, self.detail)
+        }
+    }
+}
+
+// ---- frames ------------------------------------------------------------
+
+/// Every message the fabric speaks.  Request ids are caller-assigned
+/// correlation numbers echoed back in the matching response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → worker handshake: protocol version + the shard the
+    /// client believes it is dialing.
+    Hello { proto: u64, shard: usize },
+    /// Worker → client handshake reply: the shard's identity card.
+    /// `experts` lists the *global* expert indices this worker serves,
+    /// in global order; `k_experts` is their count (the worker's local
+    /// engine size).
+    HelloOk {
+        proto: u64,
+        shard: usize,
+        epoch: u64,
+        dim: usize,
+        n_classes: usize,
+        k_experts: usize,
+        experts: Vec<usize>,
+    },
+    /// A `run_expert_batch`-shaped request: `rows × dim` packed context
+    /// vectors plus per-row gate values, all bit-encoded, against the
+    /// *global* expert index.
+    ExpertBatch {
+        id: u64,
+        expert: usize,
+        rows: usize,
+        dim: usize,
+        data: Vec<f32>,
+        gates: Vec<f32>,
+        k: usize,
+    },
+    /// Expert-batch reply: per-row result lengths (an expert may hold
+    /// fewer than k classes) over flat `ids`/`probs` arrays.
+    BatchOk { id: u64, k: usize, lens: Vec<u32>, ids: Vec<u32>, probs: Vec<f32> },
+    /// A routed-query request against the serving front.
+    Query { id: u64, h: Vec<f32>, k: usize },
+    /// Routed-query reply: the top-k (class, prob) rows.
+    QueryOk { id: u64, ids: Vec<u32>, probs: Vec<f32> },
+    /// Any request's failure reply.
+    Error { id: u64, problem: Problem },
+    /// Metrics snapshot request (front: coordinator plane; worker:
+    /// worker counters).
+    Stats { id: u64 },
+    StatsOk { id: u64, snapshot: Json },
+    /// Graceful stop: the peer replies `ShutdownOk` and stops serving.
+    Shutdown { id: u64 },
+    ShutdownOk { id: u64 },
+}
+
+impl Frame {
+    /// The correlation id carried by this frame (0 for handshakes,
+    /// which are strictly request/response on a fresh connection).
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Hello { .. } | Frame::HelloOk { .. } => 0,
+            Frame::ExpertBatch { id, .. }
+            | Frame::BatchOk { id, .. }
+            | Frame::Query { id, .. }
+            | Frame::QueryOk { id, .. }
+            | Frame::Error { id, .. }
+            | Frame::Stats { id }
+            | Frame::StatsOk { id, .. }
+            | Frame::Shutdown { id }
+            | Frame::ShutdownOk { id } => *id,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num = |x: u64| Json::Num(x as f64);
+        match self {
+            Frame::Hello { proto, shard } => Json::obj(vec![
+                ("t", "hello".into()),
+                ("proto", num(*proto)),
+                ("shard", (*shard).into()),
+            ]),
+            Frame::HelloOk { proto, shard, epoch, dim, n_classes, k_experts, experts } => {
+                Json::obj(vec![
+                    ("t", "hello_ok".into()),
+                    ("proto", num(*proto)),
+                    ("shard", (*shard).into()),
+                    ("epoch", num(*epoch)),
+                    ("dim", (*dim).into()),
+                    ("n_classes", (*n_classes).into()),
+                    ("k_experts", (*k_experts).into()),
+                    ("experts", Json::arr_usize(experts)),
+                ])
+            }
+            Frame::ExpertBatch { id, expert, rows, dim, data, gates, k } => Json::obj(vec![
+                ("t", "batch".into()),
+                ("id", num(*id)),
+                ("expert", (*expert).into()),
+                ("rows", (*rows).into()),
+                ("dim", (*dim).into()),
+                ("data", bits_arr(data)),
+                ("gates", bits_arr(gates)),
+                ("k", (*k).into()),
+            ]),
+            Frame::BatchOk { id, k, lens, ids, probs } => Json::obj(vec![
+                ("t", "batch_ok".into()),
+                ("id", num(*id)),
+                ("k", (*k).into()),
+                ("lens", u32_arr(lens)),
+                ("ids", u32_arr(ids)),
+                ("probs", bits_arr(probs)),
+            ]),
+            Frame::Query { id, h, k } => Json::obj(vec![
+                ("t", "query".into()),
+                ("id", num(*id)),
+                ("h", bits_arr(h)),
+                ("k", (*k).into()),
+            ]),
+            Frame::QueryOk { id, ids, probs } => Json::obj(vec![
+                ("t", "query_ok".into()),
+                ("id", num(*id)),
+                ("ids", u32_arr(ids)),
+                ("probs", bits_arr(probs)),
+            ]),
+            Frame::Error { id, problem } => Json::obj(vec![
+                ("t", "error".into()),
+                ("id", num(*id)),
+                ("problem", problem.to_json()),
+            ]),
+            Frame::Stats { id } => {
+                Json::obj(vec![("t", "stats".into()), ("id", num(*id))])
+            }
+            Frame::StatsOk { id, snapshot } => Json::obj(vec![
+                ("t", "stats_ok".into()),
+                ("id", num(*id)),
+                ("snapshot", snapshot.clone()),
+            ]),
+            Frame::Shutdown { id } => {
+                Json::obj(vec![("t", "shutdown".into()), ("id", num(*id))])
+            }
+            Frame::ShutdownOk { id } => {
+                Json::obj(vec![("t", "shutdown_ok".into()), ("id", num(*id))])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Frame, JsonError> {
+        let id = |j: &Json| -> Result<u64, JsonError> { Ok(j.get("id")?.as_f64()? as u64) };
+        match j.get("t")?.as_str()? {
+            "hello" => Ok(Frame::Hello {
+                proto: j.get("proto")?.as_f64()? as u64,
+                shard: j.get("shard")?.as_usize()?,
+            }),
+            "hello_ok" => Ok(Frame::HelloOk {
+                proto: j.get("proto")?.as_f64()? as u64,
+                shard: j.get("shard")?.as_usize()?,
+                epoch: j.get("epoch")?.as_f64()? as u64,
+                dim: j.get("dim")?.as_usize()?,
+                n_classes: j.get("n_classes")?.as_usize()?,
+                k_experts: j.get("k_experts")?.as_usize()?,
+                experts: j.get("experts")?.usize_vec()?,
+            }),
+            "batch" => Ok(Frame::ExpertBatch {
+                id: id(j)?,
+                expert: j.get("expert")?.as_usize()?,
+                rows: j.get("rows")?.as_usize()?,
+                dim: j.get("dim")?.as_usize()?,
+                data: bits_vec(j.get("data")?)?,
+                gates: bits_vec(j.get("gates")?)?,
+                k: j.get("k")?.as_usize()?,
+            }),
+            "batch_ok" => Ok(Frame::BatchOk {
+                id: id(j)?,
+                k: j.get("k")?.as_usize()?,
+                lens: u32_vec(j.get("lens")?)?,
+                ids: u32_vec(j.get("ids")?)?,
+                probs: bits_vec(j.get("probs")?)?,
+            }),
+            "query" => Ok(Frame::Query {
+                id: id(j)?,
+                h: bits_vec(j.get("h")?)?,
+                k: j.get("k")?.as_usize()?,
+            }),
+            "query_ok" => Ok(Frame::QueryOk {
+                id: id(j)?,
+                ids: u32_vec(j.get("ids")?)?,
+                probs: bits_vec(j.get("probs")?)?,
+            }),
+            "error" => Ok(Frame::Error {
+                id: id(j)?,
+                problem: Problem::from_json(j.get("problem")?)?,
+            }),
+            "stats" => Ok(Frame::Stats { id: id(j)? }),
+            "stats_ok" => Ok(Frame::StatsOk { id: id(j)?, snapshot: j.get("snapshot")?.clone() }),
+            "shutdown" => Ok(Frame::Shutdown { id: id(j)? }),
+            "shutdown_ok" => Ok(Frame::ShutdownOk { id: id(j)? }),
+            _ => Err(JsonError::Type("known frame tag in \"t\"")),
+        }
+    }
+}
+
+// ---- exact f32 / u32 array encoding ------------------------------------
+
+/// Encode an f32 slice as its IEEE-754 bit patterns (exact, total —
+/// see the module doc).
+pub fn bits_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Num(x.to_bits() as f64)).collect())
+}
+
+/// Decode a [`bits_arr`] payload.
+pub fn bits_vec(j: &Json) -> Result<Vec<f32>, JsonError> {
+    j.as_arr()?
+        .iter()
+        .map(|v| Ok(f32::from_bits(v.as_f64()? as u32)))
+        .collect()
+}
+
+fn u32_arr(xs: &[u32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn u32_vec(j: &Json) -> Result<Vec<u32>, JsonError> {
+    j.as_arr()?.iter().map(|v| Ok(v.as_f64()? as u32)).collect()
+}
+
+// ---- framing -----------------------------------------------------------
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Write one length-prefixed frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> io::Result<()> {
+    let body = f.to_json().to_string();
+    let bytes = body.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(invalid(format!("frame of {} bytes exceeds MAX_FRAME", bytes.len())));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one frame.  `Ok(None)` is a clean end-of-stream (the peer
+/// closed between frames); a close or corruption *inside* a frame is
+/// an error, as is a length prefix past [`MAX_FRAME`].
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Frame>> {
+    let mut len = [0u8; 4];
+    if let Err(e) = r.read_exact(&mut len) {
+        return if e.kind() == io::ErrorKind::UnexpectedEof { Ok(None) } else { Err(e) };
+    }
+    let n = u32::from_be_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(invalid(format!("frame length {n} exceeds MAX_FRAME")));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    let text = std::str::from_utf8(&buf)
+        .map_err(|e| invalid(format!("frame is not UTF-8: {e}")))?;
+    let j = Json::parse(text).map_err(|e| invalid(format!("frame is not JSON: {e}")))?;
+    Frame::from_json(&j)
+        .map(Some)
+        .map_err(|e| invalid(format!("malformed frame: {e}")))
+}
+
+// ---- result checksum ---------------------------------------------------
+
+/// Fold one query's top-k rows into a running FNV-1a checksum (ids and
+/// prob *bit patterns*, so two runs agree iff their results are
+/// bit-identical).  Start from `0`; the seed is folded in on first
+/// use.  Used by `dss serve --checksum` / `dss client --checksum` and
+/// the CI fabric smoke step to compare a remote run against the
+/// in-process reference.
+pub fn checksum_topk(mut acc: u64, top: &[(u32, f32)]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    if acc == 0 {
+        acc = OFFSET;
+    }
+    for &(id, p) in top {
+        for b in id.to_le_bytes() {
+            acc = (acc ^ b as u64).wrapping_mul(PRIME);
+        }
+        for b in p.to_bits().to_le_bytes() {
+            acc = (acc ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, f).unwrap();
+        let mut cur = Cursor::new(buf);
+        let back = read_frame(&mut cur).unwrap().unwrap();
+        // and the stream is exactly one frame long
+        assert!(read_frame(&mut cur).unwrap().is_none());
+        back
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        let frames = vec![
+            Frame::Hello { proto: PROTO_VERSION, shard: 3 },
+            Frame::HelloOk {
+                proto: PROTO_VERSION,
+                shard: 3,
+                epoch: 7,
+                dim: 16,
+                n_classes: 256,
+                k_experts: 2,
+                experts: vec![1, 5],
+            },
+            Frame::ExpertBatch {
+                id: 42,
+                expert: 5,
+                rows: 2,
+                dim: 3,
+                data: vec![1.5, -0.25, 3.0, 0.0, -0.0, 2.5e-7],
+                gates: vec![0.75, 0.5],
+                k: 4,
+            },
+            Frame::BatchOk {
+                id: 42,
+                k: 2,
+                lens: vec![2, 1],
+                ids: vec![9, 11, 200],
+                probs: vec![0.5, 0.25, 1.0],
+            },
+            Frame::Query { id: 1, h: vec![0.1, 0.2], k: 10 },
+            Frame::QueryOk { id: 1, ids: vec![7], probs: vec![0.9] },
+            Frame::Error {
+                id: 9,
+                problem: Problem::new(PROBLEM_REJECTED, "query rejected", "k must be >= 1"),
+            },
+            Frame::Stats { id: 2 },
+            Frame::StatsOk { id: 2, snapshot: Json::obj(vec![("completed", 5usize.into())]) },
+            Frame::Shutdown { id: 3 },
+            Frame::ShutdownOk { id: 3 },
+        ];
+        for f in &frames {
+            assert_eq!(&roundtrip(f), f);
+        }
+    }
+
+    /// The bit-pattern encoding is exact for every f32, including the
+    /// values plain JSON cannot carry at all.
+    #[test]
+    fn f32_bits_encoding_is_total_and_exact() {
+        let awkward = vec![
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0,
+            f32::MIN_POSITIVE,
+            f32::from_bits(1), // smallest subnormal
+            1.0 + f32::EPSILON,
+            -3.402_823_5e38,
+        ];
+        let back = bits_vec(&bits_arr(&awkward)).unwrap();
+        assert_eq!(awkward.len(), back.len());
+        for (a, b) in awkward.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn problem_query_error_mapping_is_closed() {
+        use crate::coordinator::QueryError as QE;
+        let errors = vec![
+            QE::Rejected("queue full".into()),
+            QE::Engine("kernel shape".into()),
+            QE::Shutdown,
+            QE::Timeout,
+            QE::Transport("127.0.0.1:9: connection refused".into()),
+        ];
+        for e in &errors {
+            assert_eq!(&Problem::from_query_error(e).to_query_error(), e);
+        }
+        // unknown URNs degrade to Engine, preserving the payload
+        let alien = Problem::new("urn:dss:problem:from-the-future", "novel", "details");
+        match alien.to_query_error() {
+            QE::Engine(m) => assert!(m.contains("novel") && m.contains("details")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_and_truncation_are_distinguished() {
+        // empty stream: clean end
+        assert!(read_frame(&mut Cursor::new(Vec::new())).unwrap().is_none());
+        // a frame cut mid-body: an error, not a silent None
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Stats { id: 1 }).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn oversized_and_garbage_frames_are_rejected() {
+        // oversized length prefix
+        let mut buf = ((MAX_FRAME + 1) as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(b"x");
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+        // valid length, non-JSON body
+        let body = b"not json";
+        let mut buf = (body.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(body);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+        // JSON, but not a frame
+        let body = br#"{"t":"wat"}"#;
+        let mut buf = (body.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(body);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn pipelined_frames_read_in_order() {
+        let mut buf = Vec::new();
+        for id in 0..5u64 {
+            write_frame(&mut buf, &Frame::Stats { id }).unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for id in 0..5u64 {
+            assert_eq!(read_frame(&mut cur).unwrap().unwrap().id(), id);
+        }
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn checksum_is_order_and_bit_sensitive() {
+        let a = checksum_topk(0, &[(1, 0.5), (2, 0.25)]);
+        let b = checksum_topk(0, &[(2, 0.25), (1, 0.5)]);
+        assert_ne!(a, b);
+        assert_eq!(a, checksum_topk(0, &[(1, 0.5), (2, 0.25)]));
+        // one flipped mantissa bit changes the sum
+        let c = checksum_topk(0, &[(1, f32::from_bits(0.5f32.to_bits() ^ 1)), (2, 0.25)]);
+        assert_ne!(a, c);
+        // chaining: fold of two rows != fold of first row alone
+        let chained = checksum_topk(checksum_topk(0, &[(1, 0.5)]), &[(2, 0.25)]);
+        assert_ne!(chained, checksum_topk(0, &[(1, 0.5)]));
+    }
+}

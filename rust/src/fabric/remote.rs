@@ -1,0 +1,579 @@
+//! [`RemoteShardEngine`] — the in-process `ShardedEngine`'s
+//! scatter/merge, lifted over TCP to a fleet of [`ShardWorker`]
+//! processes.
+//!
+//! The split mirrors the local engine exactly, which is the
+//! bit-identity argument:
+//!
+//! * **Routing is local.**  The gate matrix is replicated on the
+//!   engine and `route_batch` runs the same batched m=1 gate kernel as
+//!   every other engine — routes never cross the wire.
+//! * **Grouping is shared code.**  Rows are grouped per expert through
+//!   `query::group_rows`, the same counting sort the local engines
+//!   use, so each expert's segment holds the same rows in the same
+//!   (ascending) order.
+//! * **Execution is the same flush.**  Each non-empty expert segment
+//!   becomes one [`Frame::ExpertBatch`]; the worker runs it through
+//!   `DsSoftmax::run_expert_batch` on a shard slice built by the same
+//!   partition code — same kernel, same rows, same order.  Floats
+//!   cross the wire as exact bit patterns ([`super::proto`]), so
+//!   nothing is perturbed in flight.
+//!
+//! **Replica selection and failover.**  A shard may have several
+//! replicas ([`ReplicaPlan`]).  Each request picks the replica with
+//! the fewest in-flight round-trips (per-connection backpressure; ties
+//! to the lowest slot).  If the round-trip fails — worker death,
+//! connection reset, or an I/O timeout — the failed connection is
+//! poisoned (a partial frame exchange cannot be resumed), the whole
+//! request set is retried **once** on the least-loaded *sibling*
+//! replica, and partial responses from the failed attempt are
+//! discarded — every query's result is used exactly once, so failover
+//! never loses or duplicates work.  With no sibling left the error
+//! surfaces as a typed [`QueryError`] (`Timeout` or `Transport`)
+//! through the engine's `anyhow` path.
+
+use std::io;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::FabricMetrics;
+use crate::coordinator::QueryError;
+use crate::fabric::proto::{read_frame, write_frame, Frame, PROTO_VERSION};
+use crate::model::SoftmaxEngine;
+use crate::query::{with_scratch, MatrixView, Route, TopKBuf};
+use crate::shard::ReplicaPlan;
+use crate::sparse::ExpertSet;
+use crate::tensor::Matrix;
+
+/// Transport knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricOpts {
+    pub connect_timeout: Duration,
+    /// Per-read/write socket timeout.  A round-trip that trips it is
+    /// treated as a replica failure (poison + failover), because a
+    /// partially-read frame desynchronizes the connection.
+    pub io_timeout: Duration,
+}
+
+impl Default for FabricOpts {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One worker connection: lazily re-dialed after poisoning, serialized
+/// per round-trip by the stream mutex (which is also what makes the
+/// `outstanding` gauge a meaningful backpressure signal).
+struct ReplicaConn {
+    addr: String,
+    shard: usize,
+    /// shard-major replica slot (indexes [`FabricMetrics`])
+    slot: usize,
+    label: String,
+    stream: Mutex<Option<TcpStream>>,
+    /// round-trips currently in flight or queued on this connection
+    outstanding: AtomicUsize,
+}
+
+/// Pick the replica with the fewest in-flight round-trips, excluding
+/// `skip` (the replica that just failed).  Ties break to the lowest
+/// index so selection is deterministic under zero load.
+fn least_loaded(replicas: &[ReplicaConn], skip: Option<usize>) -> usize {
+    replicas
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| Some(i) != skip)
+        .min_by_key(|&(i, c)| (c.outstanding.load(Ordering::Relaxed), i))
+        .map(|(i, _)| i)
+        .expect("shard with no usable replica")
+}
+
+/// A full [`SoftmaxEngine`] whose experts live in other processes.
+pub struct RemoteShardEngine {
+    rplan: ReplicaPlan,
+    /// replicated K×d gate (identical to every local engine's)
+    gate: Matrix,
+    /// global expert indices per shard, ascending (= each worker's
+    /// advertised slice, verified at handshake)
+    expected: Vec<Vec<usize>>,
+    /// conns[shard][replica]
+    conns: Vec<Vec<ReplicaConn>>,
+    metrics: Arc<FabricMetrics>,
+    next_id: AtomicU64,
+    opts: FabricOpts,
+    n_classes: usize,
+    dim: usize,
+    k_experts: usize,
+    flops: u64,
+}
+
+impl RemoteShardEngine {
+    /// Connect to a worker fleet.  `addrs` lists one worker address
+    /// per replica **slot** — the shard-major `(shard, replica)` order
+    /// of `rplan` — and every worker's handshake is verified against
+    /// the plan: protocol version, shard identity, model shape, and
+    /// the exact global expert list the plan assigns its shard.
+    /// `set` is the *full* expert set; only its gate (and shape/flops
+    /// metadata) is kept — the experts themselves live in the workers.
+    pub fn connect(
+        set: &ExpertSet,
+        rplan: ReplicaPlan,
+        addrs: &[String],
+        opts: FabricOpts,
+    ) -> anyhow::Result<Self> {
+        rplan.validate(set.k()).map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            addrs.len() == rplan.total_workers(),
+            "{} worker addresses for a plan of {} replica slots",
+            addrs.len(),
+            rplan.total_workers()
+        );
+        let k = set.k();
+        let dim = set.dim();
+        let uniform = vec![1.0 / k.max(1) as f64; k];
+        let flops =
+            crate::flops::ds_softmax_expected(&set.expert_sizes(), &uniform, dim) as u64;
+        let expected: Vec<Vec<usize>> =
+            (0..rplan.plan.shards).map(|s| rplan.plan.experts_on(s)).collect();
+        let mut conns = Vec::with_capacity(rplan.plan.shards);
+        let mut labels = Vec::with_capacity(addrs.len());
+        for shard in 0..rplan.plan.shards {
+            let mut replicas = Vec::new();
+            for r in 0..rplan.replicas[shard] as usize {
+                let slot = rplan.slot(shard, r);
+                let addr = addrs[slot].clone();
+                let label = format!("s{shard}r{r}@{addr}");
+                labels.push(label.clone());
+                replicas.push(ReplicaConn {
+                    addr,
+                    shard,
+                    slot,
+                    label,
+                    stream: Mutex::new(None),
+                    outstanding: AtomicUsize::new(0),
+                });
+            }
+            conns.push(replicas);
+        }
+        let engine = Self {
+            rplan,
+            gate: set.gate.clone(),
+            expected,
+            conns,
+            metrics: Arc::new(FabricMetrics::new(labels)),
+            next_id: AtomicU64::new(1),
+            opts,
+            n_classes: set.n_classes,
+            dim,
+            k_experts: k,
+            flops,
+        };
+        // eager dial + handshake so a misdeployed fleet fails at
+        // construction, not on the first query
+        for shard_conns in &engine.conns {
+            for conn in shard_conns {
+                let stream = engine.dial(conn)?;
+                *conn.stream.lock().unwrap() = Some(stream);
+            }
+        }
+        Ok(engine)
+    }
+
+    /// The transport plane's counters (attach to a coordinator's
+    /// `Metrics` via `Metrics::attach_fabric` to export them).
+    pub fn metrics(&self) -> Arc<FabricMetrics> {
+        self.metrics.clone()
+    }
+
+    pub fn replica_plan(&self) -> &ReplicaPlan {
+        &self.rplan
+    }
+
+    /// Dial + handshake + verify one replica.
+    fn dial(&self, conn: &ReplicaConn) -> anyhow::Result<TcpStream> {
+        let sockaddr = conn
+            .addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{}: unresolvable address", conn.label))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, self.opts.connect_timeout)
+            .map_err(|e| anyhow::anyhow!("{}: connect: {e}", conn.label))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(self.opts.io_timeout))?;
+        stream.set_write_timeout(Some(self.opts.io_timeout))?;
+        let mut w = &stream;
+        write_frame(&mut w, &Frame::Hello { proto: PROTO_VERSION, shard: conn.shard })?;
+        let mut r = &stream;
+        let reply = read_frame(&mut r)?
+            .ok_or_else(|| anyhow::anyhow!("{}: closed during handshake", conn.label))?;
+        match reply {
+            Frame::HelloOk { proto, shard, dim, n_classes, experts, .. } => {
+                anyhow::ensure!(
+                    proto == PROTO_VERSION,
+                    "{}: protocol {proto} vs client {PROTO_VERSION}",
+                    conn.label
+                );
+                anyhow::ensure!(
+                    shard == conn.shard,
+                    "{}: worker serves shard {shard}",
+                    conn.label
+                );
+                anyhow::ensure!(
+                    dim == self.dim && n_classes == self.n_classes,
+                    "{}: worker model is {n_classes}x{dim}, plan expects {}x{}",
+                    conn.label,
+                    self.n_classes,
+                    self.dim
+                );
+                anyhow::ensure!(
+                    experts == self.expected[conn.shard],
+                    "{}: worker serves experts {experts:?}, plan assigns {:?}",
+                    conn.label,
+                    self.expected[conn.shard]
+                );
+                Ok(stream)
+            }
+            Frame::Error { problem, .. } => {
+                anyhow::bail!("{}: handshake refused: {problem}", conn.label)
+            }
+            other => anyhow::bail!("{}: unexpected handshake reply {other:?}", conn.label),
+        }
+    }
+
+    /// Classify a round-trip failure into the typed error vocabulary:
+    /// socket timeouts become [`QueryError::Timeout`], everything else
+    /// [`QueryError::Transport`].
+    fn classify(e: io::Error, label: &str) -> anyhow::Error {
+        match e.kind() {
+            // SO_RCVTIMEO surfaces as WouldBlock on Unix, TimedOut on
+            // Windows — both mean the deadline tripped
+            io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => {
+                anyhow::Error::new(QueryError::Timeout).context(label.to_string())
+            }
+            _ => anyhow::Error::new(QueryError::Transport(format!("{label}: {e}"))),
+        }
+    }
+
+    /// One pipelined round-trip on one replica connection: write every
+    /// request, read the responses in order, validate correlation ids.
+    /// Any failure poisons the connection (dropped; re-dialed lazily on
+    /// next use) — a partial exchange cannot be resumed mid-frame.
+    fn exec_on(&self, conn: &ReplicaConn, reqs: &[Frame]) -> anyhow::Result<Vec<Frame>> {
+        let mut guard = conn.stream.lock().unwrap();
+        if guard.is_none() {
+            match self.dial(conn) {
+                Ok(s) => *guard = Some(s),
+                Err(e) => {
+                    return Err(e.context(QueryError::Transport(format!(
+                        "{}: redial failed",
+                        conn.label
+                    ))))
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let res = (|| -> io::Result<Vec<Frame>> {
+            let stream = guard.as_ref().unwrap();
+            let mut w = stream;
+            for f in reqs {
+                write_frame(&mut w, f)?;
+            }
+            let mut r = stream;
+            let mut out = Vec::with_capacity(reqs.len());
+            for f in reqs {
+                let resp = read_frame(&mut r)?.ok_or_else(|| {
+                    io::Error::new(io::ErrorKind::UnexpectedEof, "worker closed mid-roundtrip")
+                })?;
+                if resp.id() != f.id() {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("response {} for request {}", resp.id(), f.id()),
+                    ));
+                }
+                out.push(resp);
+            }
+            Ok(out)
+        })();
+        match res {
+            Ok(frames) => {
+                self.metrics.record_rtt(t0.elapsed());
+                Ok(frames)
+            }
+            Err(e) => {
+                if let Some(s) = guard.take() {
+                    let _ = s.shutdown(Shutdown::Both);
+                }
+                Err(Self::classify(e, &conn.label))
+            }
+        }
+    }
+
+    /// Execute a request set on `shard`: least-loaded replica first,
+    /// retry-once failover to the least-loaded sibling on failure.
+    /// `nrows` is the query count the set carries (for the counters).
+    fn exec_shard(&self, shard: usize, reqs: &[Frame], nrows: usize) -> anyhow::Result<Vec<Frame>> {
+        let replicas = &self.conns[shard];
+        let first = least_loaded(replicas, None);
+        self.metrics.record_queries(replicas[first].slot, nrows);
+        replicas[first].outstanding.fetch_add(1, Ordering::Relaxed);
+        let res = self.exec_on(&replicas[first], reqs);
+        replicas[first].outstanding.fetch_sub(1, Ordering::Relaxed);
+        let err = match res {
+            Ok(frames) => return Ok(frames),
+            Err(e) => e,
+        };
+        // the failed attempt's partial responses died with its
+        // connection — the whole request set moves to a sibling, so
+        // every query still resolves exactly once
+        self.metrics.record_failover(replicas[first].slot);
+        if replicas.len() < 2 {
+            return Err(err);
+        }
+        let second = least_loaded(replicas, Some(first));
+        self.metrics.record_retries(replicas[second].slot, nrows);
+        replicas[second].outstanding.fetch_add(1, Ordering::Relaxed);
+        let res = self.exec_on(&replicas[second], reqs);
+        replicas[second].outstanding.fetch_sub(1, Ordering::Relaxed);
+        res.map_err(|e2| e2.context(format!("failover after: {err:#}")))
+    }
+
+    /// Unpack one worker response into `rows` of `out` (the global row
+    /// indices the request packed, in request order).
+    fn merge_response(
+        resp: Frame,
+        rows: &[u32],
+        out: &mut TopKBuf,
+    ) -> anyhow::Result<()> {
+        match resp {
+            Frame::BatchOk { lens, ids, probs, .. } => {
+                anyhow::ensure!(
+                    lens.len() == rows.len(),
+                    "worker returned {} rows for a {}-row batch",
+                    lens.len(),
+                    rows.len()
+                );
+                let total: usize = lens.iter().map(|&l| l as usize).sum();
+                anyhow::ensure!(
+                    ids.len() == total && probs.len() == total,
+                    "worker result arrays disagree with row lengths"
+                );
+                let mut off = 0usize;
+                for (i, &len) in lens.iter().enumerate() {
+                    let row = rows[i] as usize;
+                    for j in 0..len as usize {
+                        out.push(row, ids[off + j], probs[off + j]);
+                    }
+                    off += len as usize;
+                }
+                Ok(())
+            }
+            Frame::Error { problem, .. } => Err(anyhow::Error::new(problem.to_query_error())),
+            other => anyhow::bail!("unexpected worker reply {other:?}"),
+        }
+    }
+
+    fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+impl SoftmaxEngine for RemoteShardEngine {
+    fn query_batch(&self, hs: MatrixView<'_>, k: usize, out: &mut TopKBuf) {
+        assert_eq!(hs.cols, self.dim, "row width vs model dim");
+        out.reset(hs.rows, k);
+        if hs.rows == 0 {
+            return;
+        }
+        // 1. route locally on the replicated gate (same kernel as the
+        //    in-process engines)
+        let mut routes = vec![Route::empty(); hs.rows];
+        self.route_batch(hs, &mut routes);
+        // 2. group rows by global expert — the shared counting sort,
+        //    so segment order matches the local sharded engine
+        let (mut counts, mut starts, mut order) = (Vec::new(), Vec::new(), Vec::new());
+        crate::query::group_rows(
+            hs.rows,
+            self.k_experts,
+            |r| Some(routes[r].expert()),
+            &mut counts,
+            &mut starts,
+            &mut order,
+        );
+        // 3. per shard: one pipelined round-trip carrying one
+        //    ExpertBatch per non-empty expert segment
+        let mut failed: Option<anyhow::Error> = None;
+        for shard in 0..self.conns.len() {
+            let mut reqs = Vec::new();
+            let mut req_rows: Vec<&[u32]> = Vec::new();
+            let mut nrows = 0usize;
+            for &e in &self.expected[shard] {
+                let (lo, hi) = (starts[e] as usize, starts[e + 1] as usize);
+                if lo == hi {
+                    continue;
+                }
+                let rows = &order[lo..hi];
+                let mut data = Vec::with_capacity(rows.len() * self.dim);
+                let mut gates = Vec::with_capacity(rows.len());
+                for &r in rows {
+                    data.extend_from_slice(hs.row(r as usize));
+                    gates.push(routes[r as usize].gate_value());
+                }
+                reqs.push(Frame::ExpertBatch {
+                    id: self.fresh_id(),
+                    expert: e,
+                    rows: rows.len(),
+                    dim: self.dim,
+                    data,
+                    gates,
+                    k,
+                });
+                req_rows.push(rows);
+                nrows += rows.len();
+            }
+            if reqs.is_empty() {
+                continue;
+            }
+            match self.exec_shard(shard, &reqs, nrows) {
+                Ok(resps) => {
+                    for (resp, rows) in resps.into_iter().zip(&req_rows) {
+                        if let Err(e) = Self::merge_response(resp, rows, out) {
+                            failed = Some(e);
+                        }
+                    }
+                }
+                Err(e) => failed = Some(e),
+            }
+        }
+        if let Some(e) = failed {
+            // mirror ShardedEngine: the infallible batched path
+            // surfaces unrecoverable shard failures at the fault
+            panic!("remote query_batch: {e:#}");
+        }
+    }
+
+    fn route_batch(&self, hs: MatrixView<'_>, out: &mut [Route]) {
+        assert_eq!(hs.rows, out.len(), "route_batch shape mismatch");
+        assert_eq!(hs.cols, self.dim, "row width vs model dim");
+        with_scratch(|s| {
+            crate::model::dssoftmax::route_batch_m1(&self.gate, hs, &mut s.gate, out);
+        });
+    }
+
+    fn run_expert_batch(
+        &self,
+        expert: usize,
+        hs: MatrixView<'_>,
+        gates: &[f32],
+        k: usize,
+        out: &mut TopKBuf,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            expert < self.k_experts,
+            "expert {expert} out of range (K={})",
+            self.k_experts
+        );
+        anyhow::ensure!(
+            hs.rows == gates.len(),
+            "{} gates for {} rows",
+            gates.len(),
+            hs.rows
+        );
+        anyhow::ensure!(hs.cols == self.dim, "row width vs model dim");
+        out.reset(hs.rows, k);
+        if hs.rows == 0 {
+            return Ok(());
+        }
+        let shard = self.rplan.plan.shard_of(expert);
+        let req = Frame::ExpertBatch {
+            id: self.fresh_id(),
+            expert,
+            rows: hs.rows,
+            dim: self.dim,
+            data: hs.data().to_vec(),
+            gates: gates.to_vec(),
+            k,
+        };
+        let rows: Vec<u32> = (0..hs.rows as u32).collect();
+        let resps = self.exec_shard(shard, std::slice::from_ref(&req), hs.rows)?;
+        let resp = resps.into_iter().next().expect("one response per request");
+        Self::merge_response(resp, &rows, out)
+    }
+
+    fn flops_per_query(&self) -> u64 {
+        self.flops
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn k_experts(&self) -> usize {
+        self.k_experts
+    }
+
+    fn n_shards(&self) -> usize {
+        self.rplan.plan.shards
+    }
+
+    fn shard_of(&self, expert: usize) -> usize {
+        self.rplan.plan.shard_of(expert)
+    }
+
+    fn name(&self) -> &'static str {
+        "remote-sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conn(slot: usize, outstanding: usize) -> ReplicaConn {
+        ReplicaConn {
+            addr: "127.0.0.1:0".into(),
+            shard: 0,
+            slot,
+            label: format!("s0r{slot}@test"),
+            stream: Mutex::new(None),
+            outstanding: AtomicUsize::new(outstanding),
+        }
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_and_breaks_ties_low() {
+        let replicas = vec![conn(0, 2), conn(1, 0), conn(2, 0)];
+        // replica 1 and 2 tie at 0 in-flight: lowest index wins
+        assert_eq!(least_loaded(&replicas, None), 1);
+        // skipping the winner moves to its sibling
+        assert_eq!(least_loaded(&replicas, Some(1)), 2);
+        // everything else loaded: the failed one is still excluded
+        let replicas = vec![conn(0, 0), conn(1, 5)];
+        assert_eq!(least_loaded(&replicas, Some(0)), 1);
+    }
+
+    #[test]
+    fn classify_separates_timeouts_from_transport() {
+        let t = RemoteShardEngine::classify(
+            io::Error::new(io::ErrorKind::WouldBlock, "read timed out"),
+            "s0r0@x",
+        );
+        assert_eq!(t.downcast_ref::<QueryError>(), Some(&QueryError::Timeout));
+        let e = RemoteShardEngine::classify(
+            io::Error::new(io::ErrorKind::ConnectionReset, "peer reset"),
+            "s0r0@x",
+        );
+        match e.downcast_ref::<QueryError>() {
+            Some(QueryError::Transport(m)) => assert!(m.contains("s0r0@x")),
+            other => panic!("{other:?}"),
+        }
+    }
+}

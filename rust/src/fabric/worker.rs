@@ -1,0 +1,612 @@
+//! [`ShardWorker`] — one shard of the expert set, served over TCP.
+//!
+//! A worker process (`dss shard-worker`) hosts exactly one shard's
+//! slice of the model: the shard-local [`DsSoftmax`] holding its
+//! experts (built from the [`ShardPlan`] with **the same partition
+//! code path as the in-process `ShardedEngine`** — experts in global
+//! order, the gate replicated — which is what makes remote execution
+//! bit-identical), behind its own [`EngineCell`] so a re-planned slice
+//! can install live without dropping connections.
+//!
+//! The wire surface is deliberately tiny: after a `Hello`/`HelloOk`
+//! handshake (protocol version + shard identity + the exact global
+//! expert list, which the client verifies against its own plan), the
+//! worker answers `run_expert_batch`-shaped [`Frame::ExpertBatch`]
+//! requests — the same unit of work the coordinator's dispatch loop
+//! flushes, so one wire round-trip is one engine flush.  Requests on a
+//! connection are answered strictly in order, so clients can pipeline.
+//!
+//! Connection handling is thread-per-connection over a nonblocking
+//! accept poll.  Conn threads use *blocking* reads with no timeout —
+//! [`ShardWorker::stop`] unblocks them by `shutdown(2)`-ing every
+//! registered stream, which surfaces as a clean read error.
+
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::fabric::proto::{read_frame, write_frame, Frame, Problem, PROTO_VERSION};
+use crate::model::dssoftmax::DsSoftmax;
+use crate::model::SoftmaxEngine;
+use crate::query::{MatrixView, TopKBuf};
+use crate::runtime::reload::{EngineCell, EngineHandle, Epoch};
+use crate::shard::ShardPlan;
+use crate::sparse::ExpertSet;
+use crate::util::json::Json;
+
+/// Lifetime counters, exported through the `Stats` frame.
+#[derive(Default)]
+pub struct WorkerStats {
+    pub connections: AtomicU64,
+    pub batches: AtomicU64,
+    pub rows: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl WorkerStats {
+    fn to_json(&self, shard: usize, epoch: Epoch) -> Json {
+        let n = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("shard", shard.into()),
+            ("epoch", Json::Num(epoch as f64)),
+            ("connections", n(&self.connections)),
+            ("batches", n(&self.batches)),
+            ("rows", n(&self.rows)),
+            ("errors", n(&self.errors)),
+        ])
+    }
+}
+
+/// One shard's serving process: accept loop + thread-per-connection
+/// frame service over an [`EngineCell`]-owned shard-local engine.
+pub struct ShardWorker {
+    shard: usize,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    /// every accepted stream, `try_clone`d, so `stop` can unblock the
+    /// conn threads' blocking reads
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    stats: Arc<WorkerStats>,
+    cell: Arc<EngineCell>,
+    /// global expert indices this shard serves, ascending
+    experts: Arc<Vec<usize>>,
+}
+
+impl ShardWorker {
+    /// Build shard `shard`'s slice of `set` under `plan` and serve it
+    /// on `listener`.  The slice is constructed exactly like the
+    /// in-process `ShardedEngine` builds its shard engines: this
+    /// shard's experts in global order, the gate replicated — so a
+    /// batch sent here returns bit-identical results to the same flush
+    /// against the sharded (or unsharded) local engine.
+    pub fn spawn_for(
+        set: ExpertSet,
+        plan: &ShardPlan,
+        shard: usize,
+        listener: TcpListener,
+    ) -> anyhow::Result<Self> {
+        plan.validate(set.k()).map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(shard < plan.shards, "shard {shard} of {}", plan.shards);
+        let gate = set.gate.clone();
+        let n_classes = set.n_classes;
+        let mut experts = Vec::new();
+        let mut members = Vec::new();
+        for (e, expert) in set.experts.into_iter().enumerate() {
+            if plan.shard_of(e) == shard {
+                experts.push(e);
+                members.push(expert);
+            }
+        }
+        let engine = DsSoftmax::new(ExpertSet { gate, experts: members, n_classes });
+        Self::spawn(listener, shard, experts, Arc::new(engine))
+    }
+
+    /// Serve an already-built shard slice.  `experts` are the global
+    /// expert indices the engine's local experts correspond to, in
+    /// local order (must be ascending: local order == global order).
+    pub fn spawn(
+        listener: TcpListener,
+        shard: usize,
+        experts: Vec<usize>,
+        engine: Arc<dyn SoftmaxEngine>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            experts.len() == engine.k_experts(),
+            "{} global indices for an engine of {} experts",
+            experts.len(),
+            engine.k_experts()
+        );
+        anyhow::ensure!(
+            experts.windows(2).all(|w| w[0] < w[1]),
+            "global expert indices must be strictly ascending"
+        );
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let stats = Arc::new(WorkerStats::default());
+        let cell = Arc::new(EngineCell::new(engine));
+        let experts = Arc::new(experts);
+
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let stats = stats.clone();
+            let experts = experts.clone();
+            let handle = cell.handle();
+            std::thread::Builder::new()
+                .name(format!("dss-worker-s{shard}"))
+                .spawn(move || {
+                    accept_loop(listener, shard, stop, conns, stats, experts, handle)
+                })?
+        };
+        Ok(Self {
+            shard,
+            addr,
+            stop,
+            accept: Some(accept),
+            conns,
+            stats,
+            cell,
+            experts,
+        })
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The bound address (useful with ephemeral `:0` listeners).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Global expert indices this worker serves, ascending.
+    pub fn experts(&self) -> &[usize] {
+        &self.experts
+    }
+
+    pub fn stats(&self) -> &WorkerStats {
+        &self.stats
+    }
+
+    /// Install a replacement shard slice live (same shape contract as
+    /// `Coordinator::swap_engine`: the expert list is fixed, only the
+    /// weights may change).
+    pub fn swap_engine(&self, engine: Arc<dyn SoftmaxEngine>) -> anyhow::Result<Epoch> {
+        {
+            let cur = self.cell.load();
+            anyhow::ensure!(cur.dim() == engine.dim(), "swap changes dim");
+            anyhow::ensure!(cur.n_classes() == engine.n_classes(), "swap changes n_classes");
+            anyhow::ensure!(
+                cur.k_experts() == engine.k_experts(),
+                "swap changes this shard's expert count"
+            );
+        }
+        Ok(self.cell.swap(engine))
+    }
+
+    /// Block until the worker stops (remote `Shutdown` frame or
+    /// [`stop`](Self::stop)).
+    pub fn wait(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop serving: close the listener, unblock and join every
+    /// connection thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        for s in self.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        self.wait();
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: TcpListener,
+    shard: usize,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    stats: Arc<WorkerStats>,
+    experts: Arc<Vec<usize>>,
+    handle: EngineHandle,
+) {
+    let mut threads = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                // conn threads read blocking; stop() unblocks them by
+                // shutting down this registered clone
+                if let Ok(clone) = stream.try_clone() {
+                    conns.lock().unwrap().push(clone);
+                }
+                let _ = stream.set_nonblocking(false);
+                stats.connections.fetch_add(1, Ordering::Relaxed);
+                let stop = stop.clone();
+                let conns = conns.clone();
+                let stats = stats.clone();
+                let experts = experts.clone();
+                let handle = handle.clone();
+                threads.push(std::thread::spawn(move || {
+                    serve_conn(stream, shard, stop, conns, stats, experts, handle);
+                }));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    // unblock any conn thread still parked in a read
+    for s in conns.lock().unwrap().iter() {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    for t in threads {
+        let _ = t.join();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_conn(
+    stream: TcpStream,
+    shard: usize,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    stats: Arc<WorkerStats>,
+    experts: Arc<Vec<usize>>,
+    handle: EngineHandle,
+) {
+    let mut r = &stream;
+    let mut w = &stream;
+    let mut out = TopKBuf::new();
+    loop {
+        let frame = match read_frame(&mut r) {
+            Ok(Some(f)) => f,
+            // clean close, stop()-induced shutdown, or a framing error
+            // (a desynced peer cannot be answered) — drop the conn
+            Ok(None) | Err(_) => break,
+        };
+        let reply = match frame {
+            Frame::Hello { proto, shard: want } => {
+                if proto != PROTO_VERSION {
+                    Frame::Error {
+                        id: 0,
+                        problem: Problem::proto(format!(
+                            "protocol {proto} vs worker {PROTO_VERSION}"
+                        )),
+                    }
+                } else if want != shard {
+                    Frame::Error {
+                        id: 0,
+                        problem: Problem::proto(format!(
+                            "dialed shard {want} but this worker serves shard {shard}"
+                        )),
+                    }
+                } else {
+                    let engine = handle.load();
+                    Frame::HelloOk {
+                        proto: PROTO_VERSION,
+                        shard,
+                        epoch: handle.epoch(),
+                        dim: engine.dim(),
+                        n_classes: engine.n_classes(),
+                        k_experts: engine.k_experts(),
+                        experts: experts.as_ref().clone(),
+                    }
+                }
+            }
+            Frame::ExpertBatch { id, expert, rows, dim, data, gates, k } => {
+                stats.batches.fetch_add(1, Ordering::Relaxed);
+                stats.rows.fetch_add(rows as u64, Ordering::Relaxed);
+                let res =
+                    run_batch(&handle, &experts, expert, rows, dim, &data, &gates, k, &mut out);
+                match res {
+                    Ok(()) => {
+                        let mut lens = Vec::with_capacity(out.rows());
+                        let mut ids = Vec::new();
+                        let mut probs = Vec::new();
+                        for i in 0..out.rows() {
+                            let (ri, rp) = out.row(i);
+                            lens.push(ri.len() as u32);
+                            ids.extend_from_slice(ri);
+                            probs.extend_from_slice(rp);
+                        }
+                        Frame::BatchOk { id, k, lens, ids, probs }
+                    }
+                    Err(problem) => {
+                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                        Frame::Error { id, problem }
+                    }
+                }
+            }
+            Frame::Stats { id } => Frame::StatsOk {
+                id,
+                snapshot: stats.to_json(shard, handle.epoch()),
+            },
+            Frame::Shutdown { id } => {
+                let _ = write_frame(&mut w, &Frame::ShutdownOk { id });
+                stop.store(true, Ordering::Release);
+                for s in conns.lock().unwrap().iter() {
+                    let _ = s.shutdown(Shutdown::Both);
+                }
+                break;
+            }
+            other => Frame::Error {
+                id: other.id(),
+                problem: Problem::proto(format!(
+                    "shard workers do not serve this frame: {other:?}"
+                )),
+            },
+        };
+        if write_frame(&mut w, &reply).is_err() {
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Validate + execute one expert batch against the current engine
+/// generation.  Global→local expert translation goes through the
+/// ascending `experts` list; results land in `out`.
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    handle: &EngineHandle,
+    experts: &[usize],
+    expert: usize,
+    rows: usize,
+    dim: usize,
+    data: &[f32],
+    gates: &[f32],
+    k: usize,
+    out: &mut TopKBuf,
+) -> Result<(), Problem> {
+    let engine = handle.load();
+    if k == 0 {
+        return Err(Problem::proto("k must be >= 1"));
+    }
+    if dim != engine.dim() {
+        return Err(Problem::proto(format!(
+            "batch dim {dim} vs model dim {}",
+            engine.dim()
+        )));
+    }
+    if data.len() != rows * dim {
+        return Err(Problem::proto(format!(
+            "{} data values for {rows} rows x {dim}",
+            data.len()
+        )));
+    }
+    if gates.len() != rows {
+        return Err(Problem::proto(format!("{} gates for {rows} rows", gates.len())));
+    }
+    let local = experts
+        .binary_search(&expert)
+        .map_err(|_| Problem::unknown_expert(format!("global expert {expert}")))?;
+    engine
+        .run_expert_batch(local, MatrixView::new(data, rows, dim), gates, k, out)
+        .map_err(|e| Problem::new(
+            super::proto::PROBLEM_ENGINE,
+            "engine failure",
+            format!("{e:#}"),
+        ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::proto::bits_arr;
+    use crate::util::rng::Rng;
+
+    fn loopback() -> TcpListener {
+        TcpListener::bind("127.0.0.1:0").unwrap()
+    }
+
+    fn test_set(seed: u64) -> ExpertSet {
+        let mut rng = Rng::new(seed);
+        ExpertSet::synthetic(128, 8, 4, 1.2, &mut rng)
+    }
+
+    fn hello(stream: &TcpStream, shard: usize) -> Frame {
+        let mut w = stream;
+        write_frame(&mut w, &Frame::Hello { proto: PROTO_VERSION, shard }).unwrap();
+        let mut r = stream;
+        read_frame(&mut r).unwrap().unwrap()
+    }
+
+    #[test]
+    fn handshake_reports_shard_slice() {
+        let set = test_set(1);
+        let plan = ShardPlan::greedy(&set, 2);
+        let want: Vec<usize> = plan.experts_on(1);
+        let mut w = ShardWorker::spawn_for(set, &plan, 1, loopback()).unwrap();
+        let stream = TcpStream::connect(w.local_addr()).unwrap();
+        match hello(&stream, 1) {
+            Frame::HelloOk { proto, shard, dim, n_classes, k_experts, experts, .. } => {
+                assert_eq!(proto, PROTO_VERSION);
+                assert_eq!(shard, 1);
+                assert_eq!(dim, 8);
+                assert_eq!(n_classes, 128);
+                assert_eq!(k_experts, want.len());
+                assert_eq!(experts, want);
+            }
+            other => panic!("{other:?}"),
+        }
+        // wrong shard / wrong version are typed protocol errors
+        let stream2 = TcpStream::connect(w.local_addr()).unwrap();
+        match hello(&stream2, 0) {
+            Frame::Error { problem, .. } => {
+                assert_eq!(problem.ptype, super::super::proto::PROBLEM_PROTO)
+            }
+            other => panic!("{other:?}"),
+        }
+        w.stop();
+    }
+
+    #[test]
+    fn expert_batch_matches_local_slice_bitwise() {
+        let set = test_set(2);
+        let plan = ShardPlan::greedy(&set, 2);
+        // reference: the same shard slice built locally
+        let gate = set.gate.clone();
+        let members: Vec<_> = set
+            .experts
+            .iter()
+            .enumerate()
+            .filter(|(e, _)| plan.shard_of(*e) == 0)
+            .map(|(_, x)| x.clone())
+            .collect();
+        let local = DsSoftmax::new(ExpertSet {
+            gate,
+            experts: members,
+            n_classes: set.n_classes,
+        });
+        let globals = plan.experts_on(0);
+        let mut w = ShardWorker::spawn_for(set, &plan, 0, loopback()).unwrap();
+        let stream = TcpStream::connect(w.local_addr()).unwrap();
+        hello(&stream, 0);
+
+        let mut rng = Rng::new(3);
+        let rows = 5;
+        let data: Vec<f32> = (0..rows).flat_map(|_| rng.normal_vec(8, 1.0)).collect();
+        let gates: Vec<f32> = (0..rows).map(|_| rng.f32()).collect();
+        let (mut r, mut s) = (&stream, &stream);
+        write_frame(
+            &mut s,
+            &Frame::ExpertBatch {
+                id: 7,
+                expert: globals[0],
+                rows,
+                dim: 8,
+                data: data.clone(),
+                gates: gates.clone(),
+                k: 4,
+            },
+        )
+        .unwrap();
+        let mut want = TopKBuf::new();
+        local
+            .run_expert_batch(0, MatrixView::new(&data, rows, 8), &gates, 4, &mut want)
+            .unwrap();
+        match read_frame(&mut r).unwrap().unwrap() {
+            Frame::BatchOk { id, lens, ids, probs, .. } => {
+                assert_eq!(id, 7);
+                assert_eq!(lens.len(), rows);
+                let mut off = 0usize;
+                for i in 0..rows {
+                    let (wi, wp) = want.row(i);
+                    let n = lens[i] as usize;
+                    assert_eq!(&ids[off..off + n], wi);
+                    // bit-exact across the wire
+                    assert_eq!(
+                        bits_arr(&probs[off..off + n]).to_string(),
+                        bits_arr(wp).to_string()
+                    );
+                    off += n;
+                }
+                assert_eq!(off, ids.len());
+            }
+            other => panic!("{other:?}"),
+        }
+        w.stop();
+    }
+
+    #[test]
+    fn malformed_batches_get_typed_problems() {
+        let set = test_set(4);
+        let plan = ShardPlan::greedy(&set, 2);
+        let served = plan.experts_on(0);
+        let missing = (0..set.k()).find(|e| !served.contains(e)).unwrap();
+        let mut w = ShardWorker::spawn_for(set, &plan, 0, loopback()).unwrap();
+        let stream = TcpStream::connect(w.local_addr()).unwrap();
+        hello(&stream, 0);
+        let (mut r, mut s) = (&stream, &stream);
+        let cases = vec![
+            // expert owned by the other shard
+            (
+                Frame::ExpertBatch {
+                    id: 1,
+                    expert: missing,
+                    rows: 1,
+                    dim: 8,
+                    data: vec![0.0; 8],
+                    gates: vec![1.0],
+                    k: 2,
+                },
+                super::super::proto::PROBLEM_UNKNOWN_EXPERT,
+            ),
+            // wrong dim
+            (
+                Frame::ExpertBatch {
+                    id: 2,
+                    expert: served[0],
+                    rows: 1,
+                    dim: 5,
+                    data: vec![0.0; 5],
+                    gates: vec![1.0],
+                    k: 2,
+                },
+                super::super::proto::PROBLEM_PROTO,
+            ),
+            // gates/rows mismatch
+            (
+                Frame::ExpertBatch {
+                    id: 3,
+                    expert: served[0],
+                    rows: 2,
+                    dim: 8,
+                    data: vec![0.0; 16],
+                    gates: vec![1.0],
+                    k: 2,
+                },
+                super::super::proto::PROBLEM_PROTO,
+            ),
+        ];
+        for (frame, want_type) in cases {
+            let want_id = frame.id();
+            write_frame(&mut s, &frame).unwrap();
+            match read_frame(&mut r).unwrap().unwrap() {
+                Frame::Error { id, problem } => {
+                    assert_eq!(id, want_id);
+                    assert_eq!(problem.ptype, want_type, "{problem}");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // the connection survives all of it
+        assert!(matches!(
+            { write_frame(&mut s, &Frame::Stats { id: 9 }).unwrap(); read_frame(&mut r) },
+            Ok(Some(Frame::StatsOk { id: 9, .. }))
+        ));
+        w.stop();
+    }
+
+    #[test]
+    fn shutdown_frame_stops_the_worker() {
+        let set = test_set(5);
+        let plan = ShardPlan::greedy(&set, 1);
+        let mut w = ShardWorker::spawn_for(set, &plan, 0, loopback()).unwrap();
+        let stream = TcpStream::connect(w.local_addr()).unwrap();
+        hello(&stream, 0);
+        let (mut r, mut s) = (&stream, &stream);
+        write_frame(&mut s, &Frame::Shutdown { id: 1 }).unwrap();
+        assert!(matches!(
+            read_frame(&mut r).unwrap().unwrap(),
+            Frame::ShutdownOk { id: 1 }
+        ));
+        w.wait(); // returns: the shutdown frame stopped the accept loop
+    }
+}

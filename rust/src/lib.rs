@@ -17,7 +17,12 @@
 //!   [`runtime::reload::EngineCell`] hot-swaps the serving engine
 //!   without pausing, and a drift-triggered
 //!   [`runtime::reload::Replanner`] re-balances the shard plan from
-//!   observed routing counts), the PJRT runtime that executes the AOT
+//!   observed routing counts), the distributed shard fabric
+//!   ([`fabric`]: `dss shard-worker` processes host shard slices behind
+//!   a length-prefixed wire protocol, a [`fabric::RemoteShardEngine`]
+//!   scatters expert batches to replica-aware workers with
+//!   failover, and a [`fabric::FabricFront`] serves queries over TCP),
+//!   the PJRT runtime that executes the AOT
 //!   artifacts (`pjrt` feature), native fallback engines, all paper
 //!   baselines (full softmax, SVD-softmax, D-softmax), FLOPs
 //!   accounting, and the benchmark harness that regenerates every
@@ -78,6 +83,7 @@ pub mod benchlib;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod fabric;
 pub mod flops;
 pub mod model;
 pub mod query;

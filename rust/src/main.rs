@@ -1,25 +1,34 @@
 //! `dss` — the DS-Softmax CLI.
 //!
 //! Subcommands:
-//!   serve     run the coordinator on an artifact set and drive a
-//!             synthetic workload against it (latency/throughput report)
-//!   query     one-shot top-k query with a random or supplied context
-//!   inspect   print an artifact set's structure (expert sizes,
-//!             redundancy, theoretical speedup)
-//!   gen       generate a synthetic ExpertSet and report its stats
-//!   bench     quick engine micro-bench (full vs DS at given sizes)
+//!   serve         run the coordinator on an artifact set and drive a
+//!                 synthetic workload against it (latency/throughput
+//!                 report); --listen serves remote clients instead,
+//!                 --workers scatters experts to shard-worker processes
+//!   shard-worker  host one shard's experts for a remote `serve`
+//!   client        drive queries against a `serve --listen` front
+//!   query         one-shot top-k query with a random or supplied context
+//!   inspect       print an artifact set's structure (expert sizes,
+//!                 redundancy, theoretical speedup)
+//!   gen           generate a synthetic ExpertSet and report its stats
+//!   bench         quick engine micro-bench (full vs DS at given sizes)
 
+use std::net::TcpListener;
 use std::sync::Arc;
+use std::time::Duration;
 
 use ds_softmax::artifacts::{artifacts_root, Manifest};
 use ds_softmax::benchlib;
-use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, FabricMetrics, NativeBatchEngine};
+use ds_softmax::fabric::{
+    checksum_topk, FabricClient, FabricFront, FabricOpts, RemoteShardEngine, ShardWorker,
+};
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::query::{MatrixView, TopKBuf};
 use ds_softmax::runtime::reload::{ReplanPolicy, Replanner};
-use ds_softmax::shard::{ShardPlan, ShardStrategy, ShardedEngine};
+use ds_softmax::shard::{ReplicaPlan, ShardPlan, ShardStrategy, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::util::cli::Args;
 use ds_softmax::util::rng::Rng;
@@ -27,7 +36,7 @@ use ds_softmax::util::rng::Rng;
 const USAGE: &str = "\
 dss — Doubly Sparse Softmax serving CLI
 
-USAGE: dss <serve|query|inspect|gen|bench> [options]
+USAGE: dss <serve|shard-worker|client|query|inspect|gen|bench> [options]
 
   serve    --artifact <name> --queries N --k K --pjrt
            --shards S --shard-plan <contiguous|greedy|weighted|file.json>
@@ -38,8 +47,20 @@ USAGE: dss <serve|query|inspect|gen|bench> [options]
             weighted plan from observed counts and hot-swap the
             engine; each installed plan is written generation-stamped
             to --shard-plan-out)
+           --workers a:p,b:p,…   scatter experts to shard-worker
+            processes (one address per replica slot, shard-major);
+            --replicas r0,r1,… pins per-shard replica counts, default
+            load-aware from utilization
+           --listen <addr>       serve fabric clients over TCP instead
+            of driving a local workload [--deadline-ms MS]
+           --checksum            print the FNV fold of all results
            (without an artifact set, serves a synthetic index:
-            --n N --d D --experts K --redundancy M)
+            --n N --d D --experts K --redundancy M --gen-seed S)
+  shard-worker  --listen <addr> --shard I --shards S
+           [--shard-plan …] [--artifact <name> | --n/--d/--experts/…]
+           (must be given the same set + plan flags as the serve front)
+  client   --connect <addr> --queries N --k K --d D [--seed S]
+           [--window W] [--checksum] [--stats] [--shutdown]
   query    --artifact <name> --k K [--seed S]
   inspect  --artifact <name>
   gen      --n N --d D --experts K --redundancy M
@@ -50,9 +71,19 @@ Common: --artifacts-dir <path> (default ./artifacts or $DSS_ARTIFACTS)
 ";
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["serve", "query", "inspect", "gen", "bench"]);
+    let args = Args::from_env(&[
+        "serve",
+        "shard-worker",
+        "client",
+        "query",
+        "inspect",
+        "gen",
+        "bench",
+    ]);
     match args.subcommand.as_deref() {
         Some("serve") => serve(&args),
+        Some("shard-worker") => shard_worker(&args),
+        Some("client") => client(&args),
         Some("query") => query(&args),
         Some("inspect") => inspect(&args),
         Some("gen") => gen(&args),
@@ -185,7 +216,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             );
             if args.flag("pjrt") {
                 let engine = pjrt_engine(&m)?;
-                return drive(args, engine, set.dim(), n_queries, k, shards, None);
+                return drive(args, engine, set.dim(), n_queries, k, shards, None, None);
             }
             (set, m.utilization.clone(), m.name.clone())
         }
@@ -193,19 +224,66 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             if args.get("artifact").is_some() || args.flag("pjrt") {
                 return Err(e);
             }
-            let n = args.usize_or("n", 10_000);
-            let d = args.usize_or("d", 200);
-            let kx = args.usize_or("experts", 64);
-            let m = args.f64_or("redundancy", 1.2);
-            let mut rng = Rng::new(args.u64_or("gen-seed", 42));
-            let set = ExpertSet::synthetic(n, d, kx, m, &mut rng);
-            set.validate().map_err(anyhow::Error::msg)?;
-            println!("no artifact set ({e:#}); serving a synthetic index N={n} d={d} K={kx}");
-            (set, vec![1.0 / kx as f64; kx], "synthetic".to_string())
+            let (set, util) = synthetic_set(args)?;
+            println!(
+                "no artifact set ({e:#}); serving a synthetic index N={} d={} K={}",
+                set.n_classes,
+                set.dim(),
+                set.k()
+            );
+            (set, util, "synthetic".to_string())
         }
     };
 
     let d = set.dim();
+
+    // --workers: the expert plane lives in shard-worker processes and
+    // the engine behind the coordinator becomes a RemoteShardEngine
+    if let Some(spec) = args.get("workers") {
+        anyhow::ensure!(!args.flag("pjrt"), "--workers and --pjrt are mutually exclusive");
+        anyhow::ensure!(
+            !replan_requested,
+            "--replan-* re-plans the in-process sharded engine; it does not \
+             apply to --workers (restart the fabric with a new plan instead)"
+        );
+        let addrs: Vec<String> = spec
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        anyhow::ensure!(!addrs.is_empty(), "--workers needs at least one address");
+        let plan = shard_plan_from(args, &set, shards.max(1), &util, plan_file)?;
+        let shards = plan.shards;
+        let rplan = match args.get("replicas") {
+            Some(rspec) => {
+                let replicas = rspec
+                    .split(',')
+                    .map(|r| r.trim().parse::<u32>())
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|e| anyhow::anyhow!("bad --replicas '{rspec}': {e}"))?;
+                ReplicaPlan::explicit(plan, replicas)?
+            }
+            None => {
+                let counts: Vec<u64> = util.iter().map(|&u| (u * 1e6) as u64).collect();
+                ReplicaPlan::load_aware(plan, &set, &counts, addrs.len())?
+            }
+        };
+        anyhow::ensure!(
+            rplan.total_workers() == addrs.len(),
+            "plan needs {} worker addresses (shard-major, one per replica slot), got {}",
+            rplan.total_workers(),
+            addrs.len()
+        );
+        println!(
+            "fabric plan for '{label}': {shards} shards, replicas {:?}, {} workers",
+            rplan.replicas,
+            addrs.len()
+        );
+        let engine = RemoteShardEngine::connect(&set, rplan, &addrs, FabricOpts::default())?;
+        let fabric = engine.metrics();
+        return drive(args, Arc::new(engine), d, n_queries, k, shards, None, Some(fabric));
+    }
+
     let (engine, replan): (Arc<dyn SoftmaxEngine>, Option<ReplanSetup>) = if shards > 1 {
         let plan = shard_plan_from(args, &set, shards, &util, plan_file)?;
         println!(
@@ -241,7 +319,124 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             None,
         )
     };
-    drive(args, engine, d, n_queries, k, shards, replan)
+    drive(args, engine, d, n_queries, k, shards, replan, None)
+}
+
+/// Build the synthetic fallback set.  `serve` (without an artifact),
+/// `shard-worker`, and the CI fabric smoke all construct *identical*
+/// sets from the same flags — determinism here is what makes the
+/// front's gate routing agree with each worker's expert slice.
+fn synthetic_set(args: &Args) -> anyhow::Result<(ExpertSet, Vec<f64>)> {
+    let n = args.usize_or("n", 10_000);
+    let d = args.usize_or("d", 200);
+    let kx = args.usize_or("experts", 64);
+    let m = args.f64_or("redundancy", 1.2);
+    let mut rng = Rng::new(args.u64_or("gen-seed", 42));
+    let set = ExpertSet::synthetic(n, d, kx, m, &mut rng);
+    set.validate().map_err(anyhow::Error::msg)?;
+    Ok((set, vec![1.0 / kx as f64; kx]))
+}
+
+/// `dss shard-worker` — host one shard's expert slice behind a TCP
+/// listener.  The set and plan flags must match the serving front's.
+fn shard_worker(args: &Args) -> anyhow::Result<()> {
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("shard-worker needs --listen <addr>"))?;
+    let shard = args.usize_or("shard", 0);
+    let mut shards = args.usize_or("shards", 1);
+    let plan_spec = args.get("shard-plan");
+    let plan_file: Option<ShardPlan> = match plan_spec {
+        Some(spec) if spec.ends_with(".json") => Some(ShardPlan::load(spec)?),
+        _ => None,
+    };
+    if let Some(p) = &plan_file {
+        shards = p.shards;
+    }
+    anyhow::ensure!(shard < shards, "--shard {shard} out of range for {shards} shards");
+
+    let (set, util) = match manifest_from(args) {
+        Ok(m) => (m.expert_set()?, m.utilization.clone()),
+        Err(e) => {
+            if args.get("artifact").is_some() {
+                return Err(e);
+            }
+            synthetic_set(args)?
+        }
+    };
+    let plan = shard_plan_from(args, &set, shards, &util, plan_file)?;
+    let listener = TcpListener::bind(listen)?;
+    let mut w = ShardWorker::spawn_for(set, &plan, shard, listener)?;
+    println!(
+        "shard-worker s{shard}/{shards} on {} serving {} experts {:?}",
+        w.local_addr(),
+        w.experts().len(),
+        w.experts()
+    );
+    w.wait();
+    Ok(())
+}
+
+/// `dss client` — drive a window-pipelined workload against a
+/// `serve --listen` front; the query stream is bit-identical to the
+/// one `serve` drives locally from the same `--seed`/`--d`.
+fn client(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("client needs --connect <addr>"))?;
+    let n_queries = args.usize_or("queries", 100);
+    let k = args.usize_or("k", 10);
+    let d = args.usize_or("d", 200);
+    let window = args.usize_or("window", 256).max(1);
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let queries: Vec<Vec<f32>> = (0..n_queries).map(|_| rng.normal_vec(d, 1.0)).collect();
+
+    let mut cl = FabricClient::connect(addr)?;
+    let mut results: Vec<Option<Result<Vec<(u32, f32)>, _>>> = Vec::new();
+    results.resize_with(n_queries, || None);
+    let mut id_to_idx = std::collections::HashMap::new();
+    let t0 = std::time::Instant::now();
+    let (mut submitted, mut received) = (0usize, 0usize);
+    while received < n_queries {
+        while submitted < n_queries && submitted - received < window {
+            let id = cl.submit(&queries[submitted], k)?;
+            id_to_idx.insert(id, submitted);
+            submitted += 1;
+        }
+        let (id, res) = cl.recv()?;
+        let idx = *id_to_idx
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("response for unknown id {id}"))?;
+        anyhow::ensure!(results[idx].is_none(), "duplicate response for id {id}");
+        results[idx] = Some(res);
+        received += 1;
+    }
+    let dt = t0.elapsed();
+    let ok = results.iter().flatten().filter(|r| r.is_ok()).count();
+    println!(
+        "{ok}/{n_queries} ok in {:?} → {:.0} qps",
+        dt,
+        ok as f64 / dt.as_secs_f64()
+    );
+    if args.flag("checksum") {
+        // fold Ok results in submission order — comparable across a
+        // local `serve --checksum` run and any fabric topology
+        let mut cs = 0u64;
+        for r in results.iter().flatten() {
+            if let Ok(top) = r {
+                cs = checksum_topk(cs, top);
+            }
+        }
+        println!("checksum: {cs:016x}");
+    }
+    if args.flag("stats") {
+        println!("server stats: {}", cl.stats()?);
+    }
+    if args.flag("shutdown") {
+        cl.shutdown_server()?;
+        println!("server acknowledged shutdown");
+    }
+    Ok(())
 }
 
 /// Live re-planning configuration carried from `serve` into the driver.
@@ -253,8 +448,10 @@ struct ReplanSetup {
 }
 
 /// Shared serve driver: start the coordinator (plus the drift
-/// re-planner when configured), push the workload, wait, report, and
-/// print the metrics snapshot (JSON) after shutdown.
+/// re-planner when configured), then either serve remote clients
+/// (`--listen`) or push the local workload, wait, report, and print
+/// the metrics snapshot (JSON) after shutdown.
+#[allow(clippy::too_many_arguments)]
 fn drive(
     args: &Args,
     engine: Arc<dyn SoftmaxEngine>,
@@ -263,9 +460,14 @@ fn drive(
     k: usize,
     shards: usize,
     replan: Option<ReplanSetup>,
+    fabric: Option<Arc<FabricMetrics>>,
 ) -> anyhow::Result<()> {
     let cfg = CoordinatorConfig { shards, ..Default::default() };
     let c = Arc::new(Coordinator::start(engine, cfg));
+    if let Some(f) = fabric {
+        // transport counters ride along in Metrics::snapshot()
+        c.metrics.attach_fabric(f);
+    }
     let replanner = replan.map(|r| {
         println!(
             "replanner armed: skew >= {:.2}, every {} queries, hysteresis {:?}",
@@ -273,6 +475,29 @@ fn drive(
         );
         Replanner::spawn(c.clone(), r.set, r.plan, r.policy, r.out)
     });
+
+    // --listen: serve fabric clients instead of a local workload; runs
+    // until a client sends Shutdown (or the process is killed)
+    if let Some(listen) = args.get("listen") {
+        let deadline_ms = args.u64_or("deadline-ms", 0);
+        let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
+        let listener = TcpListener::bind(listen)?;
+        let mut front = FabricFront::spawn(listener, c.clone(), deadline)?;
+        match deadline {
+            Some(dl) => println!("fabric front on {} (deadline {dl:?})", front.local_addr()),
+            None => println!("fabric front on {}", front.local_addr()),
+        }
+        front.wait();
+        if let Some(rp) = replanner {
+            let swaps = rp.stop();
+            println!("replans completed: {swaps} (engine epoch {})", c.engine_epoch());
+        }
+        println!("{}", c.metrics.report());
+        c.shutdown();
+        println!("metrics snapshot: {}", c.metrics.snapshot().render());
+        return Ok(());
+    }
+
     let mut rng = Rng::new(args.u64_or("seed", 0));
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n_queries);
@@ -282,10 +507,15 @@ fn drive(
             pending.push(p);
         }
     }
+    let want_checksum = args.flag("checksum");
+    let mut cs = 0u64;
     let mut ok = 0;
     for p in pending {
-        if p.wait().is_ok() {
+        if let Ok(top) = p.wait() {
             ok += 1;
+            if want_checksum {
+                cs = checksum_topk(cs, &top);
+            }
         }
     }
     let dt = t0.elapsed();
@@ -294,6 +524,9 @@ fn drive(
         dt,
         ok as f64 / dt.as_secs_f64()
     );
+    if want_checksum {
+        println!("checksum: {cs:016x}");
+    }
     if let Some(rp) = replanner {
         // final policy evaluation runs inside stop(), so short
         // workloads still get their re-plan before the report

@@ -9,6 +9,10 @@
 //! * [`ShardPlan`] (`plan.rs`) — *where experts live*: a serializable
 //!   expert→shard partition with contiguous, size-balanced greedy, and
 //!   load-aware weighted strategies.
+//! * [`ReplicaPlan`] (`plan.rs`) — *how many copies*: a [`ShardPlan`]
+//!   extended with per-shard replica counts so hot shards replicate
+//!   across worker processes (consumed by the distributed
+//!   [`fabric`](crate::fabric)).
 //! * [`ShardedEngine`] (`engine.rs`) — *how queries execute*: a drop-in
 //!   [`SoftmaxEngine`](crate::model::SoftmaxEngine) that routes on a
 //!   replicated gate, scatters per-expert work to shard-local engines
@@ -25,4 +29,4 @@ pub mod engine;
 pub mod plan;
 
 pub use engine::ShardedEngine;
-pub use plan::{ShardPlan, ShardStrategy};
+pub use plan::{ReplicaPlan, ShardPlan, ShardStrategy};

@@ -269,6 +269,170 @@ impl ShardPlan {
     }
 }
 
+/// A [`ShardPlan`] extended with a per-shard **replica count**: the
+/// `(shard, replica)` assignment the distributed fabric deploys.  Hot
+/// shards — by observed routing load — get extra replicas so their
+/// traffic spreads across worker processes, and every shard keeps at
+/// least one replica so the partition stays total.
+///
+/// Worker processes are addressed by **slot**, the shard-major
+/// flattening of `(shard, replica)`: shard 0's replicas first, then
+/// shard 1's, and so on.  `dss serve --workers a,b,c` binds worker
+/// addresses to slots in exactly this order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaPlan {
+    pub plan: ShardPlan,
+    /// replicas per shard (len = `plan.shards`, every entry ≥ 1)
+    pub replicas: Vec<u32>,
+}
+
+impl ReplicaPlan {
+    /// Every shard gets the same `r` replicas.
+    pub fn uniform(plan: ShardPlan, r: usize) -> Self {
+        assert!(r >= 1, "replication factor must be >= 1");
+        let replicas = vec![r as u32; plan.shards];
+        Self { plan, replicas }
+    }
+
+    /// Explicit per-shard replica counts (e.g. `--replicas 2,1,1`).
+    pub fn explicit(plan: ShardPlan, replicas: Vec<u32>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            replicas.len() == plan.shards,
+            "{} replica counts for {} shards",
+            replicas.len(),
+            plan.shards
+        );
+        anyhow::ensure!(
+            replicas.iter().all(|&r| r >= 1),
+            "every shard needs at least one replica: {replicas:?}"
+        );
+        Ok(Self { plan, replicas })
+    }
+
+    /// Load-aware replication: give every shard one replica, then hand
+    /// the remaining `workers - shards` replicas one at a time to the
+    /// shard with the highest *per-replica* expected load
+    /// `Σ |v_k|·(routed_k + 1) / replicas` — the same `size × traffic`
+    /// load model the [`weighted`](ShardPlan::weighted) partitioner
+    /// uses, applied to the replication axis.  Ties break to the lower
+    /// shard index (plans are reproducible artifacts).
+    pub fn load_aware(
+        plan: ShardPlan,
+        set: &ExpertSet,
+        routed: &[u64],
+        workers: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(routed.len() == set.k(), "routing counts vs expert count");
+        anyhow::ensure!(
+            workers >= plan.shards,
+            "{workers} workers cannot host {} shards (need >= 1 each)",
+            plan.shards
+        );
+        let mut load = vec![0u64; plan.shards];
+        for (e, &s) in plan.assign.iter().enumerate() {
+            load[s as usize] += set.experts[e].size() as u64 * (routed[e] + 1);
+        }
+        let mut replicas = vec![1u32; plan.shards];
+        for _ in plan.shards..workers {
+            let hot = (0..plan.shards)
+                .max_by(|&a, &b| {
+                    let la = load[a] as f64 / replicas[a] as f64;
+                    let lb = load[b] as f64 / replicas[b] as f64;
+                    la.partial_cmp(&lb)
+                        .unwrap()
+                        // max_by keeps the *last* max; prefer the
+                        // lower index on ties instead
+                        .then(b.cmp(&a))
+                })
+                .unwrap();
+            replicas[hot] += 1;
+        }
+        Ok(Self { plan, replicas })
+    }
+
+    /// Total worker processes the plan expects (Σ replicas).
+    pub fn total_workers(&self) -> usize {
+        self.replicas.iter().map(|&r| r as usize).sum()
+    }
+
+    /// Shard-major slot of `(shard, replica)`.
+    pub fn slot(&self, shard: usize, replica: usize) -> usize {
+        self.replicas[..shard]
+            .iter()
+            .map(|&r| r as usize)
+            .sum::<usize>()
+            + replica
+    }
+
+    /// Inverse of [`slot`](Self::slot): which `(shard, replica)` a
+    /// flat worker index serves.
+    pub fn shard_of_slot(&self, slot: usize) -> (usize, usize) {
+        let mut rest = slot;
+        for (s, &r) in self.replicas.iter().enumerate() {
+            if rest < r as usize {
+                return (s, rest);
+            }
+            rest -= r as usize;
+        }
+        panic!("slot {slot} out of range for {} workers", self.total_workers());
+    }
+
+    /// Structural validity against an expert count.
+    pub fn validate(&self, k_experts: usize) -> Result<(), String> {
+        self.plan.validate(k_experts)?;
+        if self.replicas.len() != self.plan.shards {
+            return Err(format!(
+                "{} replica counts for {} shards",
+                self.replicas.len(),
+                self.plan.shards
+            ));
+        }
+        if let Some((s, _)) = self.replicas.iter().enumerate().find(|&(_, &r)| r == 0) {
+            return Err(format!("shard {s} has zero replicas"));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plan", self.plan.to_json()),
+            (
+                "replicas",
+                Json::arr_usize(
+                    &self.replicas.iter().map(|&r| r as usize).collect::<Vec<_>>(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, JsonError> {
+        let plan = ShardPlan::from_json(j.get("plan")?)?;
+        let replicas: Vec<u32> = j
+            .get("replicas")?
+            .usize_vec()?
+            .into_iter()
+            .map(|r| r as u32)
+            .collect();
+        let rp = Self { plan, replicas };
+        if rp.validate(rp.plan.assign.len()).is_err() {
+            return Err(JsonError::Type("one replica count >= 1 per shard"));
+        }
+        Ok(rp)
+    }
+
+    /// Write the replica plan as a JSON artifact.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path.as_ref(), format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+
+    /// Load an artifact written by [`save`](Self::save).
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Ok(Self::from_json(&Json::parse(text.trim())?)?)
+    }
+}
+
 /// Longest-processing-time bin-pack: heaviest item first onto the
 /// least-loaded shard.  Ties break to the lower expert index / lower
 /// shard index, so identical inputs always produce identical plans
@@ -411,6 +575,83 @@ mod tests {
         assert!(ShardPlan::from_json(&j).is_err());
         let j = Json::parse(r#"{"strategy":"nope","shards":2,"assign":[0,1]}"#).unwrap();
         assert!(ShardPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn replica_plan_slots_are_shard_major_and_invertible() {
+        let s = set();
+        let rp = ReplicaPlan::explicit(ShardPlan::greedy(&s, 3), vec![2, 1, 3]).unwrap();
+        rp.validate(s.k()).unwrap();
+        assert_eq!(rp.total_workers(), 6);
+        assert_eq!(rp.slot(0, 0), 0);
+        assert_eq!(rp.slot(0, 1), 1);
+        assert_eq!(rp.slot(1, 0), 2);
+        assert_eq!(rp.slot(2, 2), 5);
+        for slot in 0..rp.total_workers() {
+            let (sh, r) = rp.shard_of_slot(slot);
+            assert_eq!(rp.slot(sh, r), slot);
+        }
+    }
+
+    #[test]
+    fn replica_plan_explicit_validates() {
+        let s = set();
+        let plan = ShardPlan::greedy(&s, 3);
+        assert!(ReplicaPlan::explicit(plan.clone(), vec![1, 1]).is_err());
+        assert!(ReplicaPlan::explicit(plan.clone(), vec![1, 0, 1]).is_err());
+        assert!(ReplicaPlan::explicit(plan, vec![1, 1, 1]).is_ok());
+    }
+
+    /// Load-aware replication spends the extra workers on the hottest
+    /// shard (per-replica load), never leaves a shard uncovered, and is
+    /// deterministic.
+    #[test]
+    fn replica_plan_load_aware_replicates_hot_shard() {
+        let s = set();
+        let plan = ShardPlan::greedy(&s, 4);
+        // concentrate traffic on shard_of(0)'s experts
+        let hot_shard = plan.shard_of(0);
+        let mut routed = vec![0u64; s.k()];
+        for (e, r) in routed.iter_mut().enumerate() {
+            if plan.shard_of(e) == hot_shard {
+                *r = 100_000;
+            }
+        }
+        let rp = ReplicaPlan::load_aware(plan.clone(), &s, &routed, 7).unwrap();
+        rp.validate(s.k()).unwrap();
+        assert_eq!(rp.total_workers(), 7);
+        assert!(rp.replicas.iter().all(|&r| r >= 1));
+        // all 3 extra replicas should land on the hot shard
+        assert_eq!(rp.replicas[hot_shard], 4, "{:?}", rp.replicas);
+        assert_eq!(
+            rp,
+            ReplicaPlan::load_aware(plan.clone(), &s, &routed, 7).unwrap()
+        );
+        // fewer workers than shards is an error, workers == shards is 1×
+        assert!(ReplicaPlan::load_aware(plan.clone(), &s, &routed, 3).is_err());
+        let flat = ReplicaPlan::load_aware(plan, &s, &routed, 4).unwrap();
+        assert!(flat.replicas.iter().all(|&r| r == 1));
+    }
+
+    #[test]
+    fn replica_plan_json_roundtrip() {
+        let s = set();
+        let rp = ReplicaPlan::uniform(ShardPlan::greedy(&s, 2).with_generation(3), 2);
+        let parsed = ReplicaPlan::from_json(&rp.to_json()).unwrap();
+        assert_eq!(parsed, rp);
+        // zero replica counts rejected on parse
+        let mut bad = rp.to_json().to_string();
+        bad = bad.replace("\"replicas\":[2,2]", "\"replicas\":[2,0]");
+        assert!(bad.contains("[2,0]"), "fixture drift: {bad}");
+        assert!(ReplicaPlan::from_json(&Json::parse(&bad).unwrap()).is_err());
+
+        let path = std::env::temp_dir().join(format!(
+            "dss-replica-plan-{}.json",
+            std::process::id()
+        ));
+        rp.save(&path).unwrap();
+        assert_eq!(ReplicaPlan::load(&path).unwrap(), rp);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Fabric-correctness properties: the distributed topology must be an
+//! exact drop-in for the in-process engines.  Loopback shard-workers
+//! host real `DsSoftmax` slices; a `RemoteShardEngine` scatters to
+//! them over `fabric::proto`; and the results must match the
+//! unsharded `DsSoftmax` AND the in-process `ShardedEngine` bit for
+//! bit — across shard counts, replication factors, and the edge
+//! batches (empty, single row).  Replica death mid-stream degrades to
+//! retry-once-failover with zero lost or duplicated queries.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Instant;
+
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine, QueryError};
+use ds_softmax::fabric::{FabricClient, FabricFront, FabricOpts, RemoteShardEngine, ShardWorker};
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::query::{MatrixView, TopKBuf};
+use ds_softmax::shard::{ReplicaPlan, ShardPlan, ShardedEngine};
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::util::rng::Rng;
+
+/// Spin up one loopback worker process-analogue per replica slot
+/// (shard-major), returning the workers and their addresses in the
+/// order `RemoteShardEngine::connect` expects.
+fn spawn_cluster(set: &ExpertSet, rplan: &ReplicaPlan) -> (Vec<ShardWorker>, Vec<String>) {
+    let mut workers = Vec::new();
+    let mut addrs = Vec::new();
+    for shard in 0..rplan.plan.shards {
+        for _replica in 0..rplan.replicas[shard] {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let w = ShardWorker::spawn_for(set.clone(), &rplan.plan, shard, listener).unwrap();
+            addrs.push(w.local_addr().to_string());
+            workers.push(w);
+        }
+    }
+    (workers, addrs)
+}
+
+fn assert_rows_equal(got: &TopKBuf, want: &TopKBuf, ctx: &str) {
+    assert_eq!(got.rows(), want.rows(), "{ctx}: row count");
+    assert_eq!(got.to_vecs(), want.to_vecs(), "{ctx}: rows diverged");
+}
+
+/// The acceptance property: remote == local sharded == unsharded,
+/// bit-identical, for S ∈ {1, 2, 4} × replication ∈ {1, 2} × batch
+/// sizes {0, 1, random}, including the coordinator's
+/// `run_expert_batch` flush shape.
+#[test]
+fn remote_equals_local_sharded_equals_unsharded() {
+    let mut rng = Rng::new(61);
+    let set = ExpertSet::synthetic(256, 16, 6, 1.2, &mut rng);
+    let reference = DsSoftmax::new(set.clone());
+    let k = 5usize;
+    for s in [1usize, 2, 4] {
+        for repl in [1usize, 2] {
+            let plan = ShardPlan::greedy(&set, s);
+            let rplan = ReplicaPlan::uniform(plan.clone(), repl);
+            let sharded = ShardedEngine::new(set.clone(), plan).unwrap();
+            let (workers, addrs) = spawn_cluster(&set, &rplan);
+            let remote =
+                RemoteShardEngine::connect(&set, rplan, &addrs, FabricOpts::default()).unwrap();
+            assert_eq!(remote.n_shards(), s);
+            let mut want = TopKBuf::new();
+            let mut local = TopKBuf::new();
+            let mut got = TopKBuf::new();
+            for b in [0usize, 1, 1 + rng.below(24)] {
+                let packed: Vec<f32> = (0..b * 16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let hs = MatrixView::new(&packed, b, 16);
+                let ctx = format!("S={s} repl={repl} b={b}");
+                reference.query_batch(hs, k, &mut want);
+                sharded.query_batch(hs, k, &mut local);
+                remote.query_batch(hs, k, &mut got);
+                assert_rows_equal(&local, &want, &format!("{ctx} (sharded)"));
+                assert_rows_equal(&got, &want, &format!("{ctx} (remote)"));
+                // the coordinator flush shape: one expert, shared gate
+                if b > 0 {
+                    let gates = vec![0.7f32; b];
+                    for e in [0usize, set.k() - 1] {
+                        reference.run_expert_batch(e, hs, &gates, k, &mut want).unwrap();
+                        remote.run_expert_batch(e, hs, &gates, k, &mut got).unwrap();
+                        assert_rows_equal(&got, &want, &format!("{ctx} expert {e}"));
+                    }
+                }
+            }
+            drop(workers); // Drop stops every worker thread
+        }
+    }
+}
+
+/// Kill one replica mid-stream: every query still answers, every
+/// answer is still exact, and the metrics plane records the failovers
+/// — zero lost, zero duplicated.
+#[test]
+fn replica_death_degrades_to_failover_without_loss() {
+    let mut rng = Rng::new(77);
+    let set = ExpertSet::synthetic(256, 16, 4, 1.2, &mut rng);
+    let reference = DsSoftmax::new(set.clone());
+    let plan = ShardPlan::greedy(&set, 2);
+    let rplan = ReplicaPlan::uniform(plan, 2);
+    let (mut workers, addrs) = spawn_cluster(&set, &rplan);
+    let remote = RemoteShardEngine::connect(
+        &set,
+        rplan,
+        &addrs,
+        FabricOpts { io_timeout: std::time::Duration::from_secs(2), ..Default::default() },
+    )
+    .unwrap();
+
+    let mut want = TopKBuf::new();
+    let mut got = TopKBuf::new();
+    for i in 0..60 {
+        if i == 30 {
+            // shard 0, replica 0 dies; its sibling must absorb the load
+            workers[0].stop();
+        }
+        let h = rng.normal_vec(16, 1.0);
+        let hs = MatrixView::new(&h, 1, 16);
+        reference.query_batch(hs, 5, &mut want);
+        remote.query_batch(hs, 5, &mut got);
+        assert_rows_equal(&got, &want, &format!("query {i}"));
+    }
+    // force traffic onto the dead replica's shard so the failover path
+    // is exercised even if routing happened to avoid shard 0 above
+    let owned = remote.replica_plan().plan.experts_on(0);
+    let e = owned[0];
+    let h = rng.normal_vec(16, 1.0);
+    let hs = MatrixView::new(&h, 1, 16);
+    reference.run_expert_batch(e, hs, &[0.5], 5, &mut want).unwrap();
+    remote.run_expert_batch(e, hs, &[0.5], 5, &mut got).unwrap();
+    assert_rows_equal(&got, &want, "post-kill expert batch");
+
+    let snap = remote.metrics().snapshot();
+    let failovers: u64 = snap.replicas.iter().map(|r| r.failovers).sum();
+    let retries: u64 = snap.replicas.iter().map(|r| r.retries).sum();
+    assert!(failovers >= 1, "expected at least one failover, snapshot {snap:?}");
+    assert!(retries >= 1, "expected retried queries on the sibling, snapshot {snap:?}");
+    drop(workers);
+}
+
+/// The full pipeline over the wire: coordinator → RemoteShardEngine →
+/// loopback workers serves exact answers, and per-query deadlines
+/// surface as typed timeouts.
+#[test]
+fn coordinator_over_remote_engine_with_deadlines() {
+    let mut rng = Rng::new(5);
+    let set = ExpertSet::synthetic(192, 12, 4, 1.2, &mut rng);
+    let reference = DsSoftmax::new(set.clone());
+    let plan = ShardPlan::greedy(&set, 2);
+    let rplan = ReplicaPlan::uniform(plan, 1);
+    let (workers, addrs) = spawn_cluster(&set, &rplan);
+    let remote = Arc::new(
+        RemoteShardEngine::connect(&set, rplan, &addrs, FabricOpts::default()).unwrap(),
+    );
+    let c = Coordinator::start(remote, CoordinatorConfig { shards: 2, ..Default::default() });
+
+    let queries: Vec<Vec<f32>> = (0..80).map(|_| rng.normal_vec(12, 1.0)).collect();
+    let pend: Vec<_> = queries.iter().map(|h| c.submit(h.clone(), 4).unwrap()).collect();
+    for (h, p) in queries.iter().zip(pend) {
+        assert_eq!(p.wait().unwrap(), reference.query(h, 4));
+    }
+    // an already-expired deadline sheds with the typed timeout error
+    let p = c
+        .submit_with_deadline(queries[0].clone(), 4, Some(Instant::now()))
+        .unwrap();
+    assert_eq!(p.wait(), Err(QueryError::Timeout));
+    assert!(c.metrics.snapshot().timeouts >= 1);
+    c.shutdown();
+    drop(workers);
+}
+
+/// The serving front end-to-end: a pipelining client gets exact
+/// answers and typed wire errors, stats round-trips the metrics
+/// snapshot, and a client-initiated shutdown stops the front.
+#[test]
+fn front_and_client_roundtrip() {
+    let mut rng = Rng::new(23);
+    let set = ExpertSet::synthetic(128, 10, 4, 1.2, &mut rng);
+    let reference = DsSoftmax::new(set.clone());
+    let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(set)));
+    let c = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let mut front = FabricFront::spawn(listener, c.clone(), None).unwrap();
+    let mut cl = FabricClient::connect(&front.local_addr().to_string()).unwrap();
+
+    // pipelined correctness: submit a window, then match ids
+    let queries: Vec<Vec<f32>> = (0..40).map(|_| rng.normal_vec(10, 1.0)).collect();
+    let ids: Vec<u64> = queries.iter().map(|h| cl.submit(h, 5).unwrap()).collect();
+    let mut got = vec![None; queries.len()];
+    for _ in 0..queries.len() {
+        let (id, res) = cl.recv().unwrap();
+        let idx = ids.iter().position(|&i| i == id).unwrap();
+        assert!(got[idx].is_none(), "duplicate response for id {id}");
+        got[idx] = Some(res.unwrap());
+    }
+    for (h, top) in queries.iter().zip(&got) {
+        assert_eq!(top.as_ref().unwrap(), &reference.query(h, 5));
+    }
+
+    // a malformed query surfaces as the typed rejection, not a hangup
+    let bad = cl.query(&[0.0f32; 3], 5);
+    let err = bad.unwrap_err();
+    match err.downcast_ref::<QueryError>() {
+        Some(QueryError::Rejected(msg)) => assert!(msg.contains("dimension"), "{msg}"),
+        other => panic!("expected a typed rejection, got {other:?}"),
+    }
+
+    // stats round-trips the snapshot (completed counts what we served)
+    let stats = cl.stats().unwrap();
+    let completed = stats.get("completed").unwrap().as_usize().unwrap();
+    assert!(completed >= 40, "completed={completed}");
+
+    // client-initiated shutdown: acknowledged, then the front stops
+    cl.shutdown_server().unwrap();
+    front.wait();
+    c.shutdown();
+}
