@@ -30,6 +30,7 @@ use ds_softmax::fabric::{FabricOpts, RemoteShardEngine, ShardWorker};
 use ds_softmax::model::dssoftmax::{DsScratch, DsSoftmax};
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::obs::trace::{self, Stage};
 use ds_softmax::query::{MatrixView, Route, TopKBuf};
 use ds_softmax::runtime::reload::EngineCell;
 use ds_softmax::shard::{ReplicaPlan, ShardPlan, ShardedEngine};
@@ -458,6 +459,63 @@ fn main() {
         "-".into(),
     ]);
     report.push("reload-swap-under-load", "publish+drain", 1, 1, m_swap.median_ns);
+
+    // obs plane: tracing overhead at each hot-path touch point — the
+    // admission-time sampling decision with tracing off (the default:
+    // one relaxed load), the unsampled decision and span guard under
+    // `--trace-sample N` (what every *unsampled* query pays), and a
+    // full sampled span record (two clock reads + one seqlock ring
+    // write); `query_alloc.rs` proves the unsampled path is also
+    // allocation-free
+    trace::init(0);
+    let m_off = bench("trace off", 200, 5000, || {
+        std::hint::black_box(trace::try_sample());
+    });
+    table.row(vec![
+        "trace off".into(),
+        "try_sample".into(),
+        format!("{:.1}ns", m_off.median_ns),
+        "-".into(),
+    ]);
+    trace::init(1 << 30);
+    std::hint::black_box(trace::try_sample()); // consume the one sample
+    let m_uns = bench("trace unsampled", 200, 5000, || {
+        std::hint::black_box(trace::try_sample());
+    });
+    table.row(vec![
+        "trace unsampled".into(),
+        "try_sample".into(),
+        format!("{:.1}ns", m_uns.median_ns),
+        format!("(off {:.2}x)", m_uns.median_ns / m_off.median_ns.max(1.0)),
+    ]);
+    let m_guard = bench("trace unsampled guard", 200, 5000, || {
+        let g = trace::span(Stage::Kernel);
+        std::hint::black_box(&g);
+    });
+    table.row(vec![
+        "trace guard untraced".into(),
+        "span()+drop".into(),
+        format!("{:.1}ns", m_guard.median_ns),
+        "-".into(),
+    ]);
+    let m_span = {
+        let _ctx = trace::set_ctx(0xB0B, 1);
+        bench("trace sampled span", 100, 5000, || {
+            let g = trace::span(Stage::Kernel);
+            std::hint::black_box(&g);
+        })
+    };
+    trace::init(0);
+    table.row(vec![
+        "trace sampled span".into(),
+        "record to ring".into(),
+        format!("{:.1}ns", m_span.median_ns),
+        format!("(guard {:.2}x)", m_span.median_ns / m_guard.median_ns.max(1.0)),
+    ]);
+    report.push("trace-off-sample", "1 relaxed load", 1, 1, m_off.median_ns);
+    report.push("trace-unsampled-sample", "load+counter", 1, 1, m_uns.median_ns);
+    report.push("trace-unsampled-guard", "span()+drop", 1, 1, m_guard.median_ns);
+    report.push("trace-sampled-span", "record to ring", 1, 1, m_span.median_ns);
 
     table.print();
     // counters + quantiles exported the same way `dss serve` does on

@@ -127,6 +127,7 @@ mod tests {
             route: Route::single(expert, 0.5),
             submitted,
             deadline: None,
+            trace: 0,
             responder: tx,
         }
     }

@@ -43,6 +43,16 @@
 //!   dss shard-worker × Σ replicas (each: EngineCell<shard slice>)
 //!       metrics: per-replica query/retry/failover counters + RTT
 //!       histogram (FabricMetrics, attached into Metrics::snapshot)
+//!
+//!   obs plane (obs) — sampled spans riding the whole path above:
+//!
+//!       ingress → queue_wait → route → gather → kernel → merge → reply
+//!          (obs::trace::try_sample at admission; span guards at each
+//!           stage; wire_rtt + remote_exec on the fabric path, the
+//!           worker's spans shipped back inside BatchOk and re-based)
+//!       structured events (obs::event JSONL: swap/replan/failover/…)
+//!       scrape surface (obs::export behind Stats/Scrape/TraceFetch
+//!           frames — `dss top`, `dss trace`, Prometheus text)
 //! ```
 //!
 //! The gate runs *before* batching so requests are grouped by expert —

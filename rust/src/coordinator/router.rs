@@ -19,6 +19,9 @@ pub struct RoutedQuery {
     /// Shed with [`super::QueryError::Timeout`] if still unflushed at
     /// this instant (`None` = wait forever).
     pub deadline: Option<Instant>,
+    /// Sampled trace id (`obs::trace::try_sample` at admission); 0 for
+    /// the unsampled common case.
+    pub trace: u64,
     pub responder: std::sync::mpsc::Sender<super::server::QueryResult>,
 }
 

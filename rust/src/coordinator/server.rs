@@ -31,6 +31,8 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{RoutedQuery, Router};
 use crate::model::SoftmaxEngine;
+use crate::obs;
+use crate::obs::trace::Stage;
 use crate::query::{RowPack, TopKBuf};
 use crate::runtime::reload::{EngineCell, EngineHandle, Epoch};
 use crate::util::threadpool::{BoundedQueue, ThreadPool};
@@ -213,6 +215,13 @@ impl Coordinator {
         let _swap = self.swap_lock.lock().unwrap();
         let epoch = self.cell.swap(new);
         self.metrics.on_swap(epoch, n_shards);
+        obs::event::info(
+            "swap",
+            vec![
+                ("epoch", crate::util::json::Json::from(epoch as f64)),
+                ("shards", crate::util::json::Json::from(n_shards)),
+            ],
+        );
         Ok(epoch)
     }
 
@@ -240,13 +249,36 @@ impl Coordinator {
         if k == 0 {
             return Err(QueryError::Rejected("k must be >= 1".into()));
         }
+        // sampling decision at admission: a sampled query carries its
+        // trace id through batching (and over the fabric); the common
+        // unsampled case costs one atomic load and records nothing
+        let trace = obs::trace::try_sample();
+        let t_in = if trace != 0 { obs::trace::now_ns() } else { 0 };
         // route up-front: empty/dimension/NaN validation + expert
         // assignment, against a generation pinned for this call
         let engine = self.handle.load();
         let router = Router::new(&*engine);
+        let t_route = if trace != 0 { obs::trace::now_ns() } else { 0 };
         let route = router.route(&h).map_err(QueryError::Rejected)?;
+        if trace != 0 {
+            let end = obs::trace::now_ns();
+            obs::trace::record_span(
+                trace,
+                engine.epoch(),
+                Stage::Route,
+                t_route,
+                end - t_route,
+            );
+        }
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.metrics.record_route(route.expert());
+        if trace != 0 {
+            // close the ingress span (validation + routing) *before*
+            // the enqueue timestamp below, so the queue_wait span that
+            // starts there never overlaps it
+            let end = obs::trace::now_ns();
+            obs::trace::record_span(trace, engine.epoch(), Stage::Ingress, t_in, end - t_in);
+        }
         let (tx, rx) = mpsc::channel();
         let q = RoutedQuery {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -255,6 +287,7 @@ impl Coordinator {
             route,
             submitted: Instant::now(),
             deadline,
+            trace,
             responder: tx,
         };
         self.ingress.try_push(q).map_err(|_| {
@@ -327,6 +360,13 @@ fn dispatch_loop(
             // and the batch must be bit-identical to a
             // single-generation run
             let engine = handle.load();
+            let epoch = engine.epoch();
+            // scope this flush to the first sampled query of the batch
+            // (if any): spans opened below — including wire_rtt inside
+            // a remote engine — attach to that query's trace, stamped
+            // with the pinned engine generation
+            let trace = batch.iter().map(|q| q.trace).find(|&t| t != 0).unwrap_or(0);
+            let _trace_ctx = obs::trace::set_ctx(trace, epoch);
             let t0 = Instant::now();
             // shed queries whose deadline passed while queued: the
             // caller has already given up, so executing them only
@@ -347,12 +387,25 @@ fn dispatch_loop(
                     return;
                 }
             }
+            // queue_wait: enqueue → this flush, per sampled query
+            for q in batch.iter().filter(|q| q.trace != 0) {
+                obs::trace::record_span(
+                    q.trace,
+                    epoch,
+                    Stage::QueueWait,
+                    obs::trace::instant_ns(q.submitted),
+                    t0.duration_since(q.submitted).as_nanos() as u64,
+                );
+            }
             let mut s = scratches.lock().unwrap().pop().unwrap_or_default();
-            s.pack.reset(engine.dim());
-            s.gates.clear();
-            for q in &batch {
-                s.pack.push_row(&q.h);
-                s.gates.push(q.route.gate_value());
+            {
+                let _gather = obs::trace::span(Stage::Gather);
+                s.pack.reset(engine.dim());
+                s.gates.clear();
+                for q in &batch {
+                    s.pack.push_row(&q.h);
+                    s.gates.push(q.route.gate_value());
+                }
             }
             let kmax = batch.iter().map(|q| q.k).max().unwrap_or(1);
             metrics.record_batch(batch.len());
@@ -366,20 +419,34 @@ fn dispatch_loop(
                     .unwrap()
                     .record(t0.duration_since(q.submitted));
             }
-            match engine.run_expert_batch(expert, s.pack.view(), &s.gates, kmax, &mut s.out) {
+            let kernel = obs::trace::span(Stage::Kernel);
+            let result = engine.run_expert_batch(expert, s.pack.view(), &s.gates, kmax, &mut s.out);
+            drop(kernel);
+            match result {
                 Ok(()) => {
                     let exec = t0.elapsed();
                     metrics.execute_latency.lock().unwrap().record(exec);
                     for (i, q) in batch.into_iter().enumerate() {
+                        let traced = q.trace != 0;
+                        let t_m = if traced { obs::trace::now_ns() } else { 0 };
                         let mut r = s.out.row_vec(i);
                         r.truncate(q.k);
+                        if traced {
+                            let end = obs::trace::now_ns();
+                            obs::trace::record_span(q.trace, epoch, Stage::Merge, t_m, end - t_m);
+                        }
                         metrics
                             .total_latency
                             .lock()
                             .unwrap()
                             .record(q.submitted.elapsed());
                         metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        let t_r = if traced { obs::trace::now_ns() } else { 0 };
                         let _ = q.responder.send(Ok(r));
+                        if traced {
+                            let end = obs::trace::now_ns();
+                            obs::trace::record_span(q.trace, epoch, Stage::Reply, t_r, end - t_r);
+                        }
                     }
                 }
                 Err(e) => {

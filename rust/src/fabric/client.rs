@@ -97,6 +97,31 @@ impl FabricClient {
         }
     }
 
+    /// Fetch the Prometheus-style text exposition of the server's
+    /// metrics (the same snapshot as [`stats`](Self::stats), flattened
+    /// to `dss_*` metric lines).
+    pub fn scrape(&mut self) -> anyhow::Result<String> {
+        let id = self.fresh_id();
+        let mut w = &self.stream;
+        write_frame(&mut w, &Frame::Scrape { id })?;
+        match self.recv_control(id)? {
+            Frame::ScrapeOk { text, .. } => Ok(text),
+            other => anyhow::bail!("unexpected scrape reply: {other:?}"),
+        }
+    }
+
+    /// Fetch up to `n` recent sampled span trees (JSON array in
+    /// `obs::export::TraceTree` encoding, newest first).
+    pub fn traces(&mut self, n: usize) -> anyhow::Result<Json> {
+        let id = self.fresh_id();
+        let mut w = &self.stream;
+        write_frame(&mut w, &Frame::TraceFetch { id, n })?;
+        match self.recv_control(id)? {
+            Frame::TraceOk { traces, .. } => Ok(traces),
+            other => anyhow::bail!("unexpected trace reply: {other:?}"),
+        }
+    }
+
     /// Ask the server to stop serving (it acknowledges first).
     pub fn shutdown_server(&mut self) -> anyhow::Result<()> {
         let id = self.fresh_id();
@@ -116,7 +141,10 @@ impl FabricClient {
             let frame = read_frame(&mut r)?
                 .ok_or_else(|| anyhow::anyhow!("server closed the connection"))?;
             match frame {
-                Frame::StatsOk { id: got, .. } | Frame::ShutdownOk { id: got }
+                Frame::StatsOk { id: got, .. }
+                | Frame::ScrapeOk { id: got, .. }
+                | Frame::TraceOk { id: got, .. }
+                | Frame::ShutdownOk { id: got }
                     if got == id =>
                 {
                     return Ok(frame)

@@ -28,6 +28,8 @@ use std::time::{Duration, Instant};
 use crate::coordinator::server::Pending;
 use crate::coordinator::{Coordinator, QueryError};
 use crate::fabric::proto::{read_frame, write_frame, Frame, Problem};
+use crate::obs;
+use crate::util::json::Json;
 
 /// TCP serving front over a [`Coordinator`].
 pub struct FabricFront {
@@ -126,6 +128,17 @@ fn accept_loop(
     }
 }
 
+/// The coordinator snapshot plus the obs plane's per-stage latency
+/// histograms — the one JSON both scrape surfaces (`Stats` and the
+/// Prometheus-style `Scrape`) serve.
+fn snapshot_with_stages(coord: &Coordinator) -> Json {
+    let mut snap = coord.metrics.snapshot().to_json();
+    if let Json::Obj(map) = &mut snap {
+        map.insert("stages".to_string(), obs::export::stage_histos_json());
+    }
+    snap
+}
+
 /// An admitted query handed from the reader to the collector.
 struct InFlight {
     id: u64,
@@ -205,10 +218,26 @@ fn serve_conn(
                 }
             }
             Frame::Stats { id } => {
-                let reply = Frame::StatsOk {
+                let reply = Frame::StatsOk { id, snapshot: snapshot_with_stages(&coord) };
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &reply).is_err() {
+                    break;
+                }
+            }
+            Frame::Scrape { id } => {
+                let reply = Frame::ScrapeOk {
                     id,
-                    snapshot: coord.metrics.snapshot().to_json(),
+                    text: obs::export::prometheus_text(&snapshot_with_stages(&coord)),
                 };
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &reply).is_err() {
+                    break;
+                }
+            }
+            Frame::TraceFetch { id, n } => {
+                let traces: Vec<Json> =
+                    obs::export::recent_traces(n).iter().map(|t| t.to_json()).collect();
+                let reply = Frame::TraceOk { id, traces: Json::Arr(traces) };
                 let mut w = writer.lock().unwrap();
                 if write_frame(&mut *w, &reply).is_err() {
                     break;

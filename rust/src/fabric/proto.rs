@@ -37,7 +37,22 @@ use crate::util::json::{Json, JsonError};
 
 /// Wire protocol version, negotiated in the `Hello`/`HelloOk`
 /// handshake.  Bump on any frame-shape change.
-pub const PROTO_VERSION: u64 = 1;
+///
+/// Version history:
+/// - **1** — the PR-6 fabric frames.
+/// - **2** — observability: optional `trace` on `ExpertBatch`,
+///   optional `spans` on `BatchOk`, and the `Scrape`/`TraceFetch`
+///   front frames.  All v2 additions are optional fields or new frame
+///   types, so v1 peers interoperate: a worker answers any client
+///   `proto >=` [`MIN_PROTO_VERSION`] with `min(client, worker)`, the
+///   client pins that negotiated version per connection and only
+///   attaches v2 fields when it is `>= 2` (a *pre-negotiation* v1
+///   worker instead refuses the handshake with [`PROBLEM_PROTO`], and
+///   the client re-dials once offering v1).
+pub const PROTO_VERSION: u64 = 2;
+
+/// Oldest protocol version current binaries still speak.
+pub const MIN_PROTO_VERSION: u64 = 1;
 
 /// Upper bound on one frame's JSON body.  Generous — the largest
 /// legitimate frame is an expert batch (rows × dim bit-encoded floats,
@@ -140,6 +155,51 @@ impl std::fmt::Display for Problem {
     }
 }
 
+// ---- spans on the wire -------------------------------------------------
+
+/// One trace span crossing the wire in a `BatchOk` reply.  The worker
+/// and the caller run different monotonic clocks, so `off_ns` is the
+/// span's start relative to the *earliest* span of the batch (the
+/// worker's `remote_exec` span); the caller re-bases the offsets into
+/// its own `wire_rtt` interval.  `stage` is the raw
+/// [`crate::obs::Stage`] discriminant — unknown values from a newer
+/// peer are skipped, not errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireSpan {
+    pub stage: u8,
+    pub epoch: u64,
+    pub off_ns: u64,
+    pub dur_ns: u64,
+}
+
+impl WireSpan {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("s", Json::Num(self.stage as f64)),
+            ("e", Json::Num(self.epoch as f64)),
+            ("o", Json::Num(self.off_ns as f64)),
+            ("d", Json::Num(self.dur_ns as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self, JsonError> {
+        Ok(Self {
+            stage: j.get("s")?.as_f64()? as u8,
+            epoch: j.get("e")?.as_f64()? as u64,
+            off_ns: j.get("o")?.as_f64()? as u64,
+            dur_ns: j.get("d")?.as_f64()? as u64,
+        })
+    }
+}
+
+fn spans_arr(spans: &[WireSpan]) -> Json {
+    Json::Arr(spans.iter().map(|s| s.to_json()).collect())
+}
+
+fn spans_vec(j: &Json) -> Result<Vec<WireSpan>, JsonError> {
+    j.as_arr()?.iter().map(WireSpan::from_json).collect()
+}
+
 // ---- frames ------------------------------------------------------------
 
 /// Every message the fabric speaks.  Request ids are caller-assigned
@@ -164,7 +224,8 @@ pub enum Frame {
     },
     /// A `run_expert_batch`-shaped request: `rows × dim` packed context
     /// vectors plus per-row gate values, all bit-encoded, against the
-    /// *global* expert index.
+    /// *global* expert index.  `trace` (v2, optional on the wire) is
+    /// the sampled trace id this batch serves, 0 when untraced.
     ExpertBatch {
         id: u64,
         expert: usize,
@@ -173,10 +234,20 @@ pub enum Frame {
         data: Vec<f32>,
         gates: Vec<f32>,
         k: usize,
+        trace: u64,
     },
     /// Expert-batch reply: per-row result lengths (an expert may hold
-    /// fewer than k classes) over flat `ids`/`probs` arrays.
-    BatchOk { id: u64, k: usize, lens: Vec<u32>, ids: Vec<u32>, probs: Vec<f32> },
+    /// fewer than k classes) over flat `ids`/`probs` arrays.  `spans`
+    /// (v2, optional on the wire) carries the worker-side trace spans
+    /// of a traced batch.
+    BatchOk {
+        id: u64,
+        k: usize,
+        lens: Vec<u32>,
+        ids: Vec<u32>,
+        probs: Vec<f32>,
+        spans: Vec<WireSpan>,
+    },
     /// A routed-query request against the serving front.
     Query { id: u64, h: Vec<f32>, k: usize },
     /// Routed-query reply: the top-k (class, prob) rows.
@@ -187,6 +258,15 @@ pub enum Frame {
     /// worker counters).
     Stats { id: u64 },
     StatsOk { id: u64, snapshot: Json },
+    /// (v2) Prometheus-style text exposition request against the front.
+    Scrape { id: u64 },
+    ScrapeOk { id: u64, text: String },
+    /// (v2) Fetch up to `n` recent sampled span trees from the front.
+    TraceFetch { id: u64, n: usize },
+    /// (v2) Span-tree reply: an array of `obs::export::TraceTree` JSON
+    /// objects (kept as raw [`Json`] — the trees are display payloads,
+    /// not part of the exactness contract).
+    TraceOk { id: u64, traces: Json },
     /// Graceful stop: the peer replies `ShutdownOk` and stops serving.
     Shutdown { id: u64 },
     ShutdownOk { id: u64 },
@@ -205,6 +285,10 @@ impl Frame {
             | Frame::Error { id, .. }
             | Frame::Stats { id }
             | Frame::StatsOk { id, .. }
+            | Frame::Scrape { id }
+            | Frame::ScrapeOk { id, .. }
+            | Frame::TraceFetch { id, .. }
+            | Frame::TraceOk { id, .. }
             | Frame::Shutdown { id }
             | Frame::ShutdownOk { id } => *id,
         }
@@ -230,24 +314,38 @@ impl Frame {
                     ("experts", Json::arr_usize(experts)),
                 ])
             }
-            Frame::ExpertBatch { id, expert, rows, dim, data, gates, k } => Json::obj(vec![
-                ("t", "batch".into()),
-                ("id", num(*id)),
-                ("expert", (*expert).into()),
-                ("rows", (*rows).into()),
-                ("dim", (*dim).into()),
-                ("data", bits_arr(data)),
-                ("gates", bits_arr(gates)),
-                ("k", (*k).into()),
-            ]),
-            Frame::BatchOk { id, k, lens, ids, probs } => Json::obj(vec![
-                ("t", "batch_ok".into()),
-                ("id", num(*id)),
-                ("k", (*k).into()),
-                ("lens", u32_arr(lens)),
-                ("ids", u32_arr(ids)),
-                ("probs", bits_arr(probs)),
-            ]),
+            Frame::ExpertBatch { id, expert, rows, dim, data, gates, k, trace } => {
+                let mut pairs = vec![
+                    ("t", "batch".into()),
+                    ("id", num(*id)),
+                    ("expert", (*expert).into()),
+                    ("rows", (*rows).into()),
+                    ("dim", (*dim).into()),
+                    ("data", bits_arr(data)),
+                    ("gates", bits_arr(gates)),
+                    ("k", (*k).into()),
+                ];
+                // v2 optional field: absent when untraced, so a v1
+                // reader never sees it and a traced frame stays small
+                if *trace != 0 {
+                    pairs.push(("trace", num(*trace)));
+                }
+                Json::obj(pairs)
+            }
+            Frame::BatchOk { id, k, lens, ids, probs, spans } => {
+                let mut pairs = vec![
+                    ("t", "batch_ok".into()),
+                    ("id", num(*id)),
+                    ("k", (*k).into()),
+                    ("lens", u32_arr(lens)),
+                    ("ids", u32_arr(ids)),
+                    ("probs", bits_arr(probs)),
+                ];
+                if !spans.is_empty() {
+                    pairs.push(("spans", spans_arr(spans)));
+                }
+                Json::obj(pairs)
+            }
             Frame::Query { id, h, k } => Json::obj(vec![
                 ("t", "query".into()),
                 ("id", num(*id)),
@@ -272,6 +370,24 @@ impl Frame {
                 ("t", "stats_ok".into()),
                 ("id", num(*id)),
                 ("snapshot", snapshot.clone()),
+            ]),
+            Frame::Scrape { id } => {
+                Json::obj(vec![("t", "scrape".into()), ("id", num(*id))])
+            }
+            Frame::ScrapeOk { id, text } => Json::obj(vec![
+                ("t", "scrape_ok".into()),
+                ("id", num(*id)),
+                ("text", text.as_str().into()),
+            ]),
+            Frame::TraceFetch { id, n } => Json::obj(vec![
+                ("t", "trace".into()),
+                ("id", num(*id)),
+                ("n", (*n).into()),
+            ]),
+            Frame::TraceOk { id, traces } => Json::obj(vec![
+                ("t", "trace_ok".into()),
+                ("id", num(*id)),
+                ("traces", traces.clone()),
             ]),
             Frame::Shutdown { id } => {
                 Json::obj(vec![("t", "shutdown".into()), ("id", num(*id))])
@@ -306,6 +422,10 @@ impl Frame {
                 data: bits_vec(j.get("data")?)?,
                 gates: bits_vec(j.get("gates")?)?,
                 k: j.get("k")?.as_usize()?,
+                trace: match j.opt("trace") {
+                    Some(t) => t.as_f64()? as u64,
+                    None => 0,
+                },
             }),
             "batch_ok" => Ok(Frame::BatchOk {
                 id: id(j)?,
@@ -313,6 +433,10 @@ impl Frame {
                 lens: u32_vec(j.get("lens")?)?,
                 ids: u32_vec(j.get("ids")?)?,
                 probs: bits_vec(j.get("probs")?)?,
+                spans: match j.opt("spans") {
+                    Some(s) => spans_vec(s)?,
+                    None => Vec::new(),
+                },
             }),
             "query" => Ok(Frame::Query {
                 id: id(j)?,
@@ -330,6 +454,13 @@ impl Frame {
             }),
             "stats" => Ok(Frame::Stats { id: id(j)? }),
             "stats_ok" => Ok(Frame::StatsOk { id: id(j)?, snapshot: j.get("snapshot")?.clone() }),
+            "scrape" => Ok(Frame::Scrape { id: id(j)? }),
+            "scrape_ok" => Ok(Frame::ScrapeOk {
+                id: id(j)?,
+                text: j.get("text")?.as_str()?.to_string(),
+            }),
+            "trace" => Ok(Frame::TraceFetch { id: id(j)?, n: j.get("n")?.as_usize()? }),
+            "trace_ok" => Ok(Frame::TraceOk { id: id(j)?, traces: j.get("traces")?.clone() }),
             "shutdown" => Ok(Frame::Shutdown { id: id(j)? }),
             "shutdown_ok" => Ok(Frame::ShutdownOk { id: id(j)? }),
             _ => Err(JsonError::Type("known frame tag in \"t\"")),
@@ -462,6 +593,17 @@ mod tests {
                 data: vec![1.5, -0.25, 3.0, 0.0, -0.0, 2.5e-7],
                 gates: vec![0.75, 0.5],
                 k: 4,
+                trace: 0,
+            },
+            Frame::ExpertBatch {
+                id: 43,
+                expert: 5,
+                rows: 1,
+                dim: 2,
+                data: vec![1.0, 2.0],
+                gates: vec![1.0],
+                k: 1,
+                trace: (1 << 53) - 7, // the largest ids stay exact
             },
             Frame::BatchOk {
                 id: 42,
@@ -469,6 +611,18 @@ mod tests {
                 lens: vec![2, 1],
                 ids: vec![9, 11, 200],
                 probs: vec![0.5, 0.25, 1.0],
+                spans: Vec::new(),
+            },
+            Frame::BatchOk {
+                id: 43,
+                k: 1,
+                lens: vec![1],
+                ids: vec![9],
+                probs: vec![1.0],
+                spans: vec![
+                    WireSpan { stage: 9, epoch: 3, off_ns: 0, dur_ns: 1200 },
+                    WireSpan { stage: 4, epoch: 3, off_ns: 100, dur_ns: 800 },
+                ],
             },
             Frame::Query { id: 1, h: vec![0.1, 0.2], k: 10 },
             Frame::QueryOk { id: 1, ids: vec![7], probs: vec![0.9] },
@@ -478,12 +632,65 @@ mod tests {
             },
             Frame::Stats { id: 2 },
             Frame::StatsOk { id: 2, snapshot: Json::obj(vec![("completed", 5usize.into())]) },
+            Frame::Scrape { id: 4 },
+            Frame::ScrapeOk { id: 4, text: "dss_completed 5\n".into() },
+            Frame::TraceFetch { id: 5, n: 3 },
+            Frame::TraceOk {
+                id: 5,
+                traces: Json::Arr(vec![Json::obj(vec![("trace", 9usize.into())])]),
+            },
             Frame::Shutdown { id: 3 },
             Frame::ShutdownOk { id: 3 },
         ];
         for f in &frames {
             assert_eq!(&roundtrip(f), f);
         }
+    }
+
+    /// v1 interop both ways: frames written by a v1 peer (no `trace` /
+    /// `spans` keys) decode with the zero defaults, and untraced v2
+    /// frames don't emit the keys at all — so a v1 reader (which
+    /// ignores unknown keys in known frames anyway) sees byte-shapes
+    /// it already knows.
+    #[test]
+    fn v2_trace_fields_are_optional_on_the_wire() {
+        let v1 = br#"{"t":"batch","id":7,"expert":1,"rows":1,"dim":1,
+                      "data":[1065353216],"gates":[1065353216],"k":1}"#;
+        let f = Frame::from_json(&Json::parse(std::str::from_utf8(v1).unwrap()).unwrap())
+            .unwrap();
+        match f {
+            Frame::ExpertBatch { trace, .. } => assert_eq!(trace, 0),
+            other => panic!("{other:?}"),
+        }
+        let v1 = br#"{"t":"batch_ok","id":7,"k":1,"lens":[1],"ids":[0],
+                      "probs":[1065353216]}"#;
+        let f = Frame::from_json(&Json::parse(std::str::from_utf8(v1).unwrap()).unwrap())
+            .unwrap();
+        match f {
+            Frame::BatchOk { ref spans, .. } => assert!(spans.is_empty()),
+            other => panic!("{other:?}"),
+        }
+        // untraced encode omits the new keys
+        let f = Frame::ExpertBatch {
+            id: 1,
+            expert: 0,
+            rows: 1,
+            dim: 1,
+            data: vec![1.0],
+            gates: vec![1.0],
+            k: 1,
+            trace: 0,
+        };
+        assert!(!f.to_json().to_string().contains("trace"));
+        let f = Frame::BatchOk {
+            id: 1,
+            k: 1,
+            lens: vec![1],
+            ids: vec![0],
+            probs: vec![1.0],
+            spans: Vec::new(),
+        };
+        assert!(!f.to_json().to_string().contains("spans"));
     }
 
     /// The bit-pattern encoding is exact for every f32, including the

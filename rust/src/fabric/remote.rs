@@ -40,12 +40,17 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::FabricMetrics;
 use crate::coordinator::QueryError;
-use crate::fabric::proto::{read_frame, write_frame, Frame, PROTO_VERSION};
+use crate::fabric::proto::{
+    read_frame, write_frame, Frame, MIN_PROTO_VERSION, PROBLEM_PROTO, PROTO_VERSION,
+};
 use crate::model::SoftmaxEngine;
+use crate::obs;
+use crate::obs::trace::{Span, Stage};
 use crate::query::{with_scratch, MatrixView, Route, TopKBuf};
 use crate::shard::ReplicaPlan;
 use crate::sparse::ExpertSet;
 use crate::tensor::Matrix;
+use crate::util::json::Json;
 
 /// Transport knobs.
 #[derive(Clone, Copy, Debug)]
@@ -66,6 +71,21 @@ impl Default for FabricOpts {
     }
 }
 
+/// Marker error: the worker refused our offered protocol version
+/// outright (v1 workers predate min-version negotiation and reject
+/// anything but their own version), so [`RemoteShardEngine::dial`]
+/// retries once offering the floor.
+#[derive(Debug)]
+struct ProtoRefused(String);
+
+impl std::fmt::Display for ProtoRefused {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "handshake refused: {}", self.0)
+    }
+}
+
+impl std::error::Error for ProtoRefused {}
+
 /// One worker connection: lazily re-dialed after poisoning, serialized
 /// per round-trip by the stream mutex (which is also what makes the
 /// `outstanding` gauge a meaningful backpressure signal).
@@ -78,6 +98,9 @@ struct ReplicaConn {
     stream: Mutex<Option<TcpStream>>,
     /// round-trips currently in flight or queued on this connection
     outstanding: AtomicUsize,
+    /// protocol version negotiated at the last successful handshake
+    /// (0 before the first one)
+    proto: AtomicU64,
 }
 
 /// Pick the replica with the fewest in-flight round-trips, excluding
@@ -156,6 +179,7 @@ impl RemoteShardEngine {
                     label,
                     stream: Mutex::new(None),
                     outstanding: AtomicUsize::new(0),
+                    proto: AtomicU64::new(0),
                 });
             }
             conns.push(replicas);
@@ -194,8 +218,24 @@ impl RemoteShardEngine {
         &self.rplan
     }
 
-    /// Dial + handshake + verify one replica.
+    /// Dial + handshake + verify one replica.  Offers our own protocol
+    /// version first; a worker that predates min-version negotiation
+    /// (v1) refuses unknown versions outright instead of echoing down,
+    /// so a typed `PROBLEM_PROTO` refusal triggers exactly one re-dial
+    /// offering the floor.
     fn dial(&self, conn: &ReplicaConn) -> anyhow::Result<TcpStream> {
+        match self.dial_offering(conn, PROTO_VERSION) {
+            Err(e)
+                if PROTO_VERSION > MIN_PROTO_VERSION
+                    && e.downcast_ref::<ProtoRefused>().is_some() =>
+            {
+                self.dial_offering(conn, MIN_PROTO_VERSION)
+            }
+            other => other,
+        }
+    }
+
+    fn dial_offering(&self, conn: &ReplicaConn, offer: u64) -> anyhow::Result<TcpStream> {
         let sockaddr = conn
             .addr
             .to_socket_addrs()?
@@ -207,15 +247,15 @@ impl RemoteShardEngine {
         stream.set_read_timeout(Some(self.opts.io_timeout))?;
         stream.set_write_timeout(Some(self.opts.io_timeout))?;
         let mut w = &stream;
-        write_frame(&mut w, &Frame::Hello { proto: PROTO_VERSION, shard: conn.shard })?;
+        write_frame(&mut w, &Frame::Hello { proto: offer, shard: conn.shard })?;
         let mut r = &stream;
         let reply = read_frame(&mut r)?
             .ok_or_else(|| anyhow::anyhow!("{}: closed during handshake", conn.label))?;
         match reply {
             Frame::HelloOk { proto, shard, dim, n_classes, experts, .. } => {
                 anyhow::ensure!(
-                    proto == PROTO_VERSION,
-                    "{}: protocol {proto} vs client {PROTO_VERSION}",
+                    (MIN_PROTO_VERSION..=offer).contains(&proto),
+                    "{}: worker answered protocol {proto} to an offer of {offer}",
                     conn.label
                 );
                 anyhow::ensure!(
@@ -236,7 +276,20 @@ impl RemoteShardEngine {
                     conn.label,
                     self.expected[conn.shard]
                 );
+                conn.proto.store(proto, Ordering::Relaxed);
+                obs::event::info(
+                    "worker_connected",
+                    vec![
+                        ("label", conn.label.as_str().into()),
+                        ("shard", conn.shard.into()),
+                        ("proto", Json::Num(proto as f64)),
+                    ],
+                );
                 Ok(stream)
+            }
+            Frame::Error { problem, .. } if problem.ptype == PROBLEM_PROTO => {
+                Err(anyhow::Error::new(ProtoRefused(problem.to_string()))
+                    .context(conn.label.clone()))
             }
             Frame::Error { problem, .. } => {
                 anyhow::bail!("{}: handshake refused: {problem}", conn.label)
@@ -277,6 +330,8 @@ impl RemoteShardEngine {
             }
         }
         let t0 = Instant::now();
+        let traced = obs::trace::current() != 0;
+        let w0 = if traced { obs::trace::now_ns() } else { 0 };
         let res = (|| -> io::Result<Vec<Frame>> {
             let stream = guard.as_ref().unwrap();
             let mut w = stream;
@@ -302,12 +357,23 @@ impl RemoteShardEngine {
         match res {
             Ok(frames) => {
                 self.metrics.record_rtt(t0.elapsed());
+                if traced {
+                    graft_remote_spans(&frames, w0, obs::trace::now_ns().saturating_sub(w0));
+                }
                 Ok(frames)
             }
             Err(e) => {
                 if let Some(s) = guard.take() {
                     let _ = s.shutdown(Shutdown::Both);
                 }
+                obs::event::warn(
+                    "conn_poisoned",
+                    vec![
+                        ("label", conn.label.as_str().into()),
+                        ("proto", Json::Num(conn.proto.load(Ordering::Relaxed) as f64)),
+                        ("err", Json::Str(e.to_string())),
+                    ],
+                );
                 Err(Self::classify(e, &conn.label))
             }
         }
@@ -331,6 +397,15 @@ impl RemoteShardEngine {
         // connection — the whole request set moves to a sibling, so
         // every query still resolves exactly once
         self.metrics.record_failover(replicas[first].slot);
+        obs::event::warn(
+            "failover",
+            vec![
+                ("shard", shard.into()),
+                ("from", replicas[first].label.as_str().into()),
+                ("siblings", (replicas.len() - 1).into()),
+                ("err", Json::Str(format!("{err:#}"))),
+            ],
+        );
         if replicas.len() < 2 {
             return Err(err);
         }
@@ -379,6 +454,40 @@ impl RemoteShardEngine {
 
     fn fresh_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// Record the wire round-trip `[w0, w0+wd]` as a [`Stage::WireRtt`]
+/// span and graft the workers' offset-encoded spans into it.  The
+/// remote monotonic clock shares no origin with ours, so each batch's
+/// spans are re-based by centering the remote busy interval inside the
+/// round-trip window (attributing the leftover symmetric transit half
+/// to each side), then clamped so children never escape the envelope.
+fn graft_remote_spans(frames: &[Frame], w0: u64, wd: u64) {
+    let trace = obs::trace::current();
+    if trace == 0 {
+        return;
+    }
+    obs::trace::record_span(trace, obs::trace::current_epoch(), Stage::WireRtt, w0, wd);
+    for f in frames {
+        let Frame::BatchOk { spans, .. } = f else { continue };
+        if spans.is_empty() {
+            continue;
+        }
+        let remote_total = spans.iter().map(|s| s.off_ns + s.dur_ns).max().unwrap_or(0);
+        let shift = w0 + wd.saturating_sub(remote_total) / 2;
+        for s in spans {
+            let Some(stage) = Stage::from_u8(s.stage) else { continue };
+            let start_ns = (shift + s.off_ns).min(w0 + wd);
+            let dur_ns = s.dur_ns.min(w0 + wd - start_ns);
+            obs::trace::record_raw(Span {
+                trace,
+                stage,
+                epoch: s.epoch,
+                start_ns,
+                dur_ns,
+            });
+        }
     }
 }
 
@@ -431,6 +540,9 @@ impl SoftmaxEngine for RemoteShardEngine {
                     data,
                     gates,
                     k,
+                    // v2 workers collect + return spans for a nonzero
+                    // trace; v1 peers ignore the extra key harmlessly
+                    trace: obs::trace::current(),
                 });
                 req_rows.push(rows);
                 nrows += rows.len();
@@ -497,6 +609,7 @@ impl SoftmaxEngine for RemoteShardEngine {
             data: hs.data().to_vec(),
             gates: gates.to_vec(),
             k,
+            trace: obs::trace::current(),
         };
         let rows: Vec<u32> = (0..hs.rows as u32).collect();
         let resps = self.exec_shard(shard, std::slice::from_ref(&req), hs.rows)?;
@@ -545,6 +658,7 @@ mod tests {
             label: format!("s0r{slot}@test"),
             stream: Mutex::new(None),
             outstanding: AtomicUsize::new(outstanding),
+            proto: AtomicU64::new(PROTO_VERSION),
         }
     }
 

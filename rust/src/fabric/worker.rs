@@ -27,9 +27,13 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::fabric::proto::{read_frame, write_frame, Frame, Problem, PROTO_VERSION};
+use crate::fabric::proto::{
+    read_frame, write_frame, Frame, Problem, WireSpan, MIN_PROTO_VERSION, PROTO_VERSION,
+};
 use crate::model::dssoftmax::DsSoftmax;
 use crate::model::SoftmaxEngine;
+use crate::obs;
+use crate::obs::trace::Stage;
 use crate::query::{MatrixView, TopKBuf};
 use crate::runtime::reload::{EngineCell, EngineHandle, Epoch};
 use crate::shard::ShardPlan;
@@ -273,6 +277,9 @@ fn serve_conn(
     let mut r = &stream;
     let mut w = &stream;
     let mut out = TopKBuf::new();
+    // protocol version agreed at Hello time: min(peer, ours).  A v1
+    // peer never sees the v2 trace fields in replies.
+    let mut negotiated: u64 = PROTO_VERSION;
     loop {
         let frame = match read_frame(&mut r) {
             Ok(Some(f)) => f,
@@ -282,11 +289,11 @@ fn serve_conn(
         };
         let reply = match frame {
             Frame::Hello { proto, shard: want } => {
-                if proto != PROTO_VERSION {
+                if proto < MIN_PROTO_VERSION {
                     Frame::Error {
                         id: 0,
                         problem: Problem::proto(format!(
-                            "protocol {proto} vs worker {PROTO_VERSION}"
+                            "protocol {proto} below worker minimum {MIN_PROTO_VERSION}"
                         )),
                     }
                 } else if want != shard {
@@ -297,9 +304,17 @@ fn serve_conn(
                         )),
                     }
                 } else {
+                    negotiated = proto.min(PROTO_VERSION);
+                    obs::event::info(
+                        "worker_connect",
+                        vec![
+                            ("shard", shard.into()),
+                            ("proto", Json::Num(negotiated as f64)),
+                        ],
+                    );
                     let engine = handle.load();
                     Frame::HelloOk {
-                        proto: PROTO_VERSION,
+                        proto: negotiated,
                         shard,
                         epoch: handle.epoch(),
                         dim: engine.dim(),
@@ -309,11 +324,22 @@ fn serve_conn(
                     }
                 }
             }
-            Frame::ExpertBatch { id, expert, rows, dim, data, gates, k } => {
+            Frame::ExpertBatch { id, expert, rows, dim, data, gates, k, trace } => {
                 stats.batches.fetch_add(1, Ordering::Relaxed);
                 stats.rows.fetch_add(rows as u64, Ordering::Relaxed);
-                let res =
-                    run_batch(&handle, &experts, expert, rows, dim, &data, &gates, k, &mut out);
+                let trace = if negotiated >= 2 { trace } else { 0 };
+                let (res, spans) = if trace != 0 {
+                    let (res, spans) = obs::trace::collect_batch(trace, handle.epoch(), || {
+                        let _exec = obs::trace::span(Stage::RemoteExec);
+                        run_batch(&handle, &experts, expert, rows, dim, &data, &gates, k, &mut out)
+                    });
+                    (res, wire_spans(&spans))
+                } else {
+                    let res = run_batch(
+                        &handle, &experts, expert, rows, dim, &data, &gates, k, &mut out,
+                    );
+                    (res, Vec::new())
+                };
                 match res {
                     Ok(()) => {
                         let mut lens = Vec::with_capacity(out.rows());
@@ -325,7 +351,7 @@ fn serve_conn(
                             ids.extend_from_slice(ri);
                             probs.extend_from_slice(rp);
                         }
-                        Frame::BatchOk { id, k, lens, ids, probs }
+                        Frame::BatchOk { id, k, lens, ids, probs, spans }
                     }
                     Err(problem) => {
                         stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -396,13 +422,32 @@ fn run_batch(
     let local = experts
         .binary_search(&expert)
         .map_err(|_| Problem::unknown_expert(format!("global expert {expert}")))?;
-    engine
+    let kernel = obs::trace::span(Stage::Kernel);
+    let res = engine
         .run_expert_batch(local, MatrixView::new(data, rows, dim), gates, k, out)
         .map_err(|e| Problem::new(
             super::proto::PROBLEM_ENGINE,
             "engine failure",
             format!("{e:#}"),
-        ))
+        ));
+    drop(kernel);
+    res
+}
+
+/// Re-base a batch's collected spans to offsets from their earliest
+/// start, so the client can graft them into its own clock domain (the
+/// worker's monotonic clock shares no origin with the client's).
+fn wire_spans(spans: &[obs::trace::Span]) -> Vec<WireSpan> {
+    let origin = spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+    spans
+        .iter()
+        .map(|s| WireSpan {
+            stage: s.stage as u8,
+            epoch: s.epoch,
+            off_ns: s.start_ns - origin,
+            dur_ns: s.dur_ns,
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -494,6 +539,7 @@ mod tests {
                 data: data.clone(),
                 gates: gates.clone(),
                 k: 4,
+                trace: 0,
             },
         )
         .unwrap();
@@ -545,6 +591,7 @@ mod tests {
                     data: vec![0.0; 8],
                     gates: vec![1.0],
                     k: 2,
+                    trace: 0,
                 },
                 super::super::proto::PROBLEM_UNKNOWN_EXPERT,
             ),
@@ -558,6 +605,7 @@ mod tests {
                     data: vec![0.0; 5],
                     gates: vec![1.0],
                     k: 2,
+                    trace: 0,
                 },
                 super::super::proto::PROBLEM_PROTO,
             ),
@@ -571,6 +619,7 @@ mod tests {
                     data: vec![0.0; 16],
                     gates: vec![1.0],
                     k: 2,
+                    trace: 0,
                 },
                 super::super::proto::PROBLEM_PROTO,
             ),
@@ -591,6 +640,90 @@ mod tests {
             { write_frame(&mut s, &Frame::Stats { id: 9 }).unwrap(); read_frame(&mut r) },
             Ok(Some(Frame::StatsOk { id: 9, .. }))
         ));
+        w.stop();
+    }
+
+    #[test]
+    fn v1_hello_negotiates_down_and_gets_untraced_replies() {
+        let set = test_set(6);
+        let plan = ShardPlan::greedy(&set, 1);
+        let mut w = ShardWorker::spawn_for(set, &plan, 0, loopback()).unwrap();
+        let expert = w.experts()[0];
+        let stream = TcpStream::connect(w.local_addr()).unwrap();
+        let (mut r, mut s) = (&stream, &stream);
+        write_frame(&mut s, &Frame::Hello { proto: 1, shard: 0 }).unwrap();
+        match read_frame(&mut r).unwrap().unwrap() {
+            Frame::HelloOk { proto, .. } => assert_eq!(proto, 1),
+            other => panic!("{other:?}"),
+        }
+        // a trace id slipped to a v1-negotiated peer is ignored: the
+        // batch is served, no spans come back
+        write_frame(
+            &mut s,
+            &Frame::ExpertBatch {
+                id: 1,
+                expert,
+                rows: 1,
+                dim: 8,
+                data: vec![0.0; 8],
+                gates: vec![1.0],
+                k: 2,
+                trace: 42,
+            },
+        )
+        .unwrap();
+        match read_frame(&mut r).unwrap().unwrap() {
+            Frame::BatchOk { id: 1, spans, .. } => assert!(spans.is_empty()),
+            other => panic!("{other:?}"),
+        }
+        w.stop();
+    }
+
+    #[test]
+    fn traced_batch_returns_remote_exec_and_kernel_spans() {
+        let _g = crate::obs::trace::tests::lock();
+        let set = test_set(7);
+        let plan = ShardPlan::greedy(&set, 1);
+        let mut w = ShardWorker::spawn_for(set, &plan, 0, loopback()).unwrap();
+        let expert = w.experts()[0];
+        let stream = TcpStream::connect(w.local_addr()).unwrap();
+        hello(&stream, 0);
+        let (mut r, mut s) = (&stream, &stream);
+        write_frame(
+            &mut s,
+            &Frame::ExpertBatch {
+                id: 2,
+                expert,
+                rows: 1,
+                dim: 8,
+                data: vec![0.0; 8],
+                gates: vec![1.0],
+                k: 2,
+                trace: 99,
+            },
+        )
+        .unwrap();
+        match read_frame(&mut r).unwrap().unwrap() {
+            Frame::BatchOk { id: 2, spans, .. } => {
+                let stages: Vec<u8> = spans.iter().map(|sp| sp.stage).collect();
+                assert!(stages.contains(&(Stage::RemoteExec as u8)), "{stages:?}");
+                assert!(stages.contains(&(Stage::Kernel as u8)), "{stages:?}");
+                // offsets re-based: at least one span starts at 0, and
+                // every child fits inside the remote_exec envelope
+                assert_eq!(spans.iter().map(|sp| sp.off_ns).min(), Some(0));
+                let exec = spans
+                    .iter()
+                    .find(|sp| sp.stage == Stage::RemoteExec as u8)
+                    .unwrap();
+                for sp in &spans {
+                    assert!(
+                        sp.off_ns + sp.dur_ns <= exec.off_ns + exec.dur_ns,
+                        "span escapes the remote_exec envelope"
+                    );
+                }
+            }
+            other => panic!("{other:?}"),
+        }
         w.stop();
     }
 

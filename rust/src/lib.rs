@@ -22,6 +22,9 @@
 //!   a length-prefixed wire protocol, a [`fabric::RemoteShardEngine`]
 //!   scatters expert batches to replica-aware workers with
 //!   failover, and a [`fabric::FabricFront`] serves queries over TCP),
+//!   the observability plane ([`obs`]: sampled per-query stage spans
+//!   that follow a query across the fabric, structured JSONL events,
+//!   and the live scrape surface behind `dss top` / `dss trace`),
 //!   the PJRT runtime that executes the AOT
 //!   artifacts (`pjrt` feature), native fallback engines, all paper
 //!   baselines (full softmax, SVD-softmax, D-softmax), FLOPs
@@ -86,6 +89,7 @@ pub mod eval;
 pub mod fabric;
 pub mod flops;
 pub mod model;
+pub mod obs;
 pub mod query;
 pub mod runtime;
 pub mod shard;

@@ -8,6 +8,11 @@
 //!   shard-worker  host one shard's experts for a remote `serve`
 //!   client        drive queries against a `serve --listen` front
 //!   query         one-shot top-k query with a random or supplied context
+//!   top           live telemetry view of a serving front (or --once
+//!                 for the raw stats JSON, --prometheus for text
+//!                 exposition)
+//!   trace         pull recent sampled span trees from a front and
+//!                 print stage waterfalls
 //!   inspect       print an artifact set's structure (expert sizes,
 //!                 redundancy, theoretical speedup)
 //!   gen           generate a synthetic ExpertSet and report its stats
@@ -26,17 +31,19 @@ use ds_softmax::fabric::{
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::obs;
 use ds_softmax::query::{MatrixView, TopKBuf};
 use ds_softmax::runtime::reload::{ReplanPolicy, Replanner};
 use ds_softmax::shard::{ReplicaPlan, ShardPlan, ShardStrategy, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
 use ds_softmax::util::cli::Args;
+use ds_softmax::util::json::Json;
 use ds_softmax::util::rng::Rng;
 
 const USAGE: &str = "\
 dss — Doubly Sparse Softmax serving CLI
 
-USAGE: dss <serve|shard-worker|client|query|inspect|gen|bench> [options]
+USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|bench> [options]
 
   serve    --artifact <name> --queries N --k K --pjrt
            --shards S --shard-plan <contiguous|greedy|weighted|file.json>
@@ -54,13 +61,27 @@ USAGE: dss <serve|shard-worker|client|query|inspect|gen|bench> [options]
            --listen <addr>       serve fabric clients over TCP instead
             of driving a local workload [--deadline-ms MS]
            --checksum            print the FNV fold of all results
+           --trace-sample N      obs plane: sample every Nth query's
+            span tree (0 = off); scrape them with `dss trace`
+           --log-level <debug|info|warn|error|off> --log-file <path>
+            structured JSONL event log (defaults: $DSS_LOG / info,
+            $DSS_LOG_FILE / stderr)
+           --snapshot-interval S emit a metrics_snapshot event every S
+            seconds while serving
            (without an artifact set, serves a synthetic index:
             --n N --d D --experts K --redundancy M --gen-seed S)
   shard-worker  --listen <addr> --shard I --shards S
            [--shard-plan …] [--artifact <name> | --n/--d/--experts/…]
+           [--log-level L] [--log-file F]
            (must be given the same set + plan flags as the serve front)
   client   --connect <addr> --queries N --k K --d D [--seed S]
            [--window W] [--checksum] [--stats] [--shutdown]
+  top      --connect <addr> [--interval-ms MS] | [--once] | [--prometheus]
+           (live one-screen telemetry of a serve front; --once prints
+            the raw stats JSON once for scripting/CI, --prometheus the
+            text exposition)
+  trace    --connect <addr> [--sample N]
+           (pull up to N recent sampled span trees, print waterfalls)
   query    --artifact <name> --k K [--seed S]
   inspect  --artifact <name>
   gen      --n N --d D --experts K --redundancy M
@@ -76,6 +97,8 @@ fn main() -> anyhow::Result<()> {
         "shard-worker",
         "client",
         "query",
+        "top",
+        "trace",
         "inspect",
         "gen",
         "bench",
@@ -85,6 +108,8 @@ fn main() -> anyhow::Result<()> {
         Some("shard-worker") => shard_worker(&args),
         Some("client") => client(&args),
         Some("query") => query(&args),
+        Some("top") => top(&args),
+        Some("trace") => trace_cmd(&args),
         Some("inspect") => inspect(&args),
         Some("gen") => gen(&args),
         Some("bench") => bench(&args),
@@ -141,6 +166,7 @@ fn shard_plan_from(
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {
+    init_obs(args)?;
     let n_queries = args.usize_or("queries", 10_000);
     let k = args.usize_or("k", 10);
     // Shard-count resolution: a --shard-plan file (loaded exactly once)
@@ -322,6 +348,18 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     drive(args, engine, d, n_queries, k, shards, replan, None)
 }
 
+/// Arm the observability plane from the CLI: the structured event log
+/// (`--log-level`/`--log-file`, overriding `$DSS_LOG`/`$DSS_LOG_FILE`)
+/// and the span sampling rate (`--trace-sample`, 0 = off).
+fn init_obs(args: &Args) -> anyhow::Result<()> {
+    obs::event::init(
+        args.get("log-level"),
+        args.get("log-file").map(std::path::Path::new),
+    )?;
+    obs::trace::init(args.u64_or("trace-sample", 0));
+    Ok(())
+}
+
 /// Build the synthetic fallback set.  `serve` (without an artifact),
 /// `shard-worker`, and the CI fabric smoke all construct *identical*
 /// sets from the same flags — determinism here is what makes the
@@ -340,6 +378,7 @@ fn synthetic_set(args: &Args) -> anyhow::Result<(ExpertSet, Vec<f64>)> {
 /// `dss shard-worker` — host one shard's expert slice behind a TCP
 /// listener.  The set and plan flags must match the serving front's.
 fn shard_worker(args: &Args) -> anyhow::Result<()> {
+    init_obs(args)?;
     let listen = args
         .get("listen")
         .ok_or_else(|| anyhow::anyhow!("shard-worker needs --listen <addr>"))?;
@@ -439,6 +478,55 @@ fn client(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `dss top` — telemetry view of a serving front.  `--once` prints the
+/// raw stats JSON (one line, scriptable — what the CI fabric smoke
+/// greps); `--prometheus` prints the text exposition; otherwise
+/// redraws a one-screen live view every `--interval-ms` until killed.
+fn top(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("top needs --connect <addr>"))?;
+    let mut cl = FabricClient::connect(addr)?;
+    if args.flag("once") {
+        println!("{}", cl.stats()?);
+        return Ok(());
+    }
+    if args.flag("prometheus") {
+        print!("{}", cl.scrape()?);
+        return Ok(());
+    }
+    let interval = Duration::from_millis(args.u64_or("interval-ms", 1000).max(100));
+    loop {
+        let snap = cl.stats()?;
+        // ANSI clear + cursor home, then one rendered screen
+        print!("\x1b[2J\x1b[H{}", obs::export::render_top(&snap));
+        use std::io::Write;
+        std::io::stdout().flush()?;
+        std::thread::sleep(interval);
+    }
+}
+
+/// `dss trace` — pull up to `--sample` recent sampled span trees from
+/// a front and print one stage waterfall per trace.
+fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("trace needs --connect <addr>"))?;
+    let n = args.usize_or("sample", 5);
+    let mut cl = FabricClient::connect(addr)?;
+    let traces = cl.traces(n)?;
+    let trees = traces.as_arr()?;
+    if trees.is_empty() {
+        println!("no sampled traces yet (is the front serving with --trace-sample N?)");
+        return Ok(());
+    }
+    for t in trees {
+        let tree = obs::export::TraceTree::from_json(t)?;
+        print!("{}", obs::export::render_waterfall(&tree));
+    }
+    Ok(())
+}
+
 /// Live re-planning configuration carried from `serve` into the driver.
 struct ReplanSetup {
     set: ExpertSet,
@@ -462,12 +550,61 @@ fn drive(
     replan: Option<ReplanSetup>,
     fabric: Option<Arc<FabricMetrics>>,
 ) -> anyhow::Result<()> {
+    let engine_name = engine.name();
     let cfg = CoordinatorConfig { shards, ..Default::default() };
     let c = Arc::new(Coordinator::start(engine, cfg));
     if let Some(f) = fabric {
         // transport counters ride along in Metrics::snapshot()
         c.metrics.attach_fabric(f);
     }
+    // one structured event carrying the fully-resolved serving config
+    // (the scattered println!s above are for humans; this one is for
+    // the log pipeline)
+    obs::event::info(
+        "serve_config",
+        vec![
+            ("engine", engine_name.into()),
+            ("d", d.into()),
+            ("k", k.into()),
+            ("queries", n_queries.into()),
+            ("shards", shards.into()),
+            ("listen", args.get("listen").map(Json::from).unwrap_or(Json::Null)),
+            ("deadline_ms", Json::Num(args.u64_or("deadline-ms", 0) as f64)),
+            ("trace_sample", Json::Num(obs::trace::sample_every() as f64)),
+            ("snapshot_interval_s", Json::Num(args.u64_or("snapshot-interval", 0) as f64)),
+        ],
+    );
+    // periodic metrics_snapshot events: long `--listen` serves leave a
+    // telemetry trail instead of only a shutdown-time dump
+    let snap_secs = args.u64_or("snapshot-interval", 0);
+    let snap_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let snap_thread = (snap_secs > 0).then(|| {
+        let c = c.clone();
+        let stop = snap_stop.clone();
+        std::thread::Builder::new()
+            .name("dss-snapshot".into())
+            .spawn(move || {
+                let period = Duration::from_secs(snap_secs);
+                let mut next = std::time::Instant::now() + period;
+                while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                    std::thread::sleep(Duration::from_millis(50));
+                    if std::time::Instant::now() >= next {
+                        obs::event::info(
+                            "metrics_snapshot",
+                            vec![("snapshot", c.metrics.snapshot().to_json())],
+                        );
+                        next += period;
+                    }
+                }
+            })
+            .expect("spawn snapshot emitter")
+    });
+    let stop_snapshots = |t: Option<std::thread::JoinHandle<()>>| {
+        snap_stop.store(true, std::sync::atomic::Ordering::Release);
+        if let Some(t) = t {
+            let _ = t.join();
+        }
+    };
     let replanner = replan.map(|r| {
         println!(
             "replanner armed: skew >= {:.2}, every {} queries, hysteresis {:?}",
@@ -488,6 +625,7 @@ fn drive(
             None => println!("fabric front on {}", front.local_addr()),
         }
         front.wait();
+        stop_snapshots(snap_thread);
         if let Some(rp) = replanner {
             let swaps = rp.stop();
             println!("replans completed: {swaps} (engine epoch {})", c.engine_epoch());
@@ -527,6 +665,7 @@ fn drive(
     if want_checksum {
         println!("checksum: {cs:016x}");
     }
+    stop_snapshots(snap_thread);
     if let Some(rp) = replanner {
         // final policy evaluation runs inside stop(), so short
         // workloads still get their re-plan before the report

@@ -1,0 +1,212 @@
+//! Structured, leveled JSONL event log.
+//!
+//! One event = one JSON object on one line: `{"event":"swap",
+//! "level":"info","ts_ms":...,...}` plus event-specific fields.  Sinks
+//! are stderr (default) or an append-mode file; the level threshold is
+//! one relaxed atomic load, so suppressed events cost a branch.
+//!
+//! Configuration, in precedence order:
+//! 1. explicit [`init`] (the `--log-level` / `--log-file` CLI flags),
+//! 2. the `DSS_LOG` (level name or `off`) and `DSS_LOG_FILE`
+//!    environment variables,
+//! 3. default: `info` to stderr.
+//!
+//! This replaces the scattered `eprintln!` diagnostics of earlier PRs:
+//! machine problems (`swap`, `replan`, `failover`, `conn_poisoned`,
+//! `worker_panic`, ...) are now grep-able, parseable, and carry their
+//! context as fields instead of prose.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Event severity, in ascending order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+/// Threshold value above every level: nothing is emitted.
+const OFF: u8 = 4;
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// Parse a level threshold (`debug|info|warn|error|off`).
+fn parse_threshold(s: &str) -> Option<u8> {
+    match s {
+        "debug" => Some(Level::Debug as u8),
+        "info" => Some(Level::Info as u8),
+        "warn" => Some(Level::Warn as u8),
+        "error" => Some(Level::Error as u8),
+        "off" => Some(OFF),
+        _ => None,
+    }
+}
+
+enum Sink {
+    Stderr,
+    File(std::fs::File),
+}
+
+struct Log {
+    threshold: AtomicU8,
+    sink: Mutex<Sink>,
+}
+
+fn log() -> &'static Log {
+    static LOG: OnceLock<Log> = OnceLock::new();
+    LOG.get_or_init(|| {
+        let threshold = std::env::var("DSS_LOG")
+            .ok()
+            .and_then(|s| parse_threshold(&s))
+            .unwrap_or(Level::Info as u8);
+        let sink = std::env::var("DSS_LOG_FILE")
+            .ok()
+            .and_then(|p| open_sink(Path::new(&p)).ok())
+            .unwrap_or(Sink::Stderr);
+        Log { threshold: AtomicU8::new(threshold), sink: Mutex::new(sink) }
+    })
+}
+
+fn open_sink(path: &Path) -> std::io::Result<Sink> {
+    Ok(Sink::File(std::fs::OpenOptions::new().create(true).append(true).open(path)?))
+}
+
+/// Override the environment-derived configuration (CLI flags).  An
+/// unknown level name is an error; `None` leaves that axis untouched.
+pub fn init(level: Option<&str>, file: Option<&Path>) -> anyhow::Result<()> {
+    let l = log();
+    if let Some(s) = level {
+        let t = parse_threshold(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown log level {s:?} (debug|info|warn|error|off)"))?;
+        l.threshold.store(t, Ordering::Relaxed);
+    }
+    if let Some(p) = file {
+        let sink = open_sink(p)
+            .map_err(|e| anyhow::anyhow!("cannot open log file {}: {e}", p.display()))?;
+        *l.sink.lock().unwrap() = sink;
+    }
+    Ok(())
+}
+
+/// Would an event at `level` currently be emitted?
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= log().threshold.load(Ordering::Relaxed)
+}
+
+fn ts_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Emit one structured event.  `fields` are event-specific; `ts_ms`,
+/// `level` and `event` keys are added here.
+pub fn emit(level: Level, event: &str, fields: Vec<(&str, Json)>) {
+    let l = log();
+    if (level as u8) < l.threshold.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut pairs = vec![
+        ("ts_ms", Json::from(ts_ms() as f64)),
+        ("level", Json::from(level.name())),
+        ("event", Json::from(event)),
+    ];
+    pairs.extend(fields);
+    let line = Json::obj(pairs).to_string();
+    let mut sink = match l.sink.lock() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = match &mut *sink {
+        Sink::Stderr => writeln!(std::io::stderr().lock(), "{line}"),
+        Sink::File(f) => writeln!(f, "{line}"),
+    };
+}
+
+pub fn debug(event: &str, fields: Vec<(&str, Json)>) {
+    emit(Level::Debug, event, fields);
+}
+
+pub fn info(event: &str, fields: Vec<(&str, Json)>) {
+    emit(Level::Info, event, fields);
+}
+
+pub fn warn(event: &str, fields: Vec<(&str, Json)>) {
+    emit(Level::Warn, event, fields);
+}
+
+pub fn error(event: &str, fields: Vec<(&str, Json)>) {
+    emit(Level::Error, event, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_parse_and_order() {
+        assert!(parse_threshold("debug").unwrap() < parse_threshold("info").unwrap());
+        assert!(parse_threshold("warn").unwrap() < parse_threshold("error").unwrap());
+        assert!(parse_threshold("error").unwrap() < parse_threshold("off").unwrap());
+        assert!(parse_threshold("verbose").is_none());
+    }
+
+    #[test]
+    fn events_render_as_one_json_line() {
+        // render the line the way `emit` does, without touching the
+        // global sink (other tests may be logging concurrently)
+        let line = Json::obj(vec![
+            ("ts_ms", Json::from(1700000000000.0)),
+            ("level", Json::from(Level::Warn.name())),
+            ("event", Json::from("failover")),
+            ("shard", Json::from(0usize)),
+            ("from", Json::from("127.0.0.1:7601#0")),
+        ])
+        .to_string();
+        assert!(!line.contains('\n'));
+        let back = Json::parse(&line).expect("event line parses");
+        assert_eq!(back.get("event").unwrap().as_str().unwrap(), "failover");
+        assert_eq!(back.get("level").unwrap().as_str().unwrap(), "warn");
+        assert_eq!(back.get("shard").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn file_sink_appends_jsonl() {
+        let dir = std::env::temp_dir().join(format!("dss_obs_event_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        init(Some("debug"), Some(&path)).unwrap();
+        info("unit_test_marker", vec![("n", Json::from(3usize))]);
+        warn("unit_test_marker", vec![("n", Json::from(4usize))]);
+        // restore stderr for the rest of the test binary before asserting
+        init(Some("info"), None).unwrap();
+        *log().sink.lock().unwrap() = Sink::Stderr;
+        let text = std::fs::read_to_string(&path).unwrap();
+        let marked: Vec<&str> =
+            text.lines().filter(|l| l.contains("unit_test_marker")).collect();
+        assert!(marked.len() >= 2, "both events landed in the file");
+        for line in marked {
+            let j = Json::parse(line).expect("jsonl line parses");
+            assert!(j.get("ts_ms").unwrap().as_f64().unwrap() > 0.0);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

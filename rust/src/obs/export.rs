@@ -1,0 +1,483 @@
+//! Telemetry export: span-tree assembly, the waterfall renderer behind
+//! `dss trace`, the one-screen view behind `dss top`, a
+//! Prometheus-style text exposition of the metrics snapshot, and the
+//! per-stage histogram JSON the fabric front splices into `Stats` /
+//! `Scrape` replies.
+//!
+//! Everything here renders from plain [`Json`] snapshots rather than
+//! the concrete `coordinator::Metrics` types: the renderers run on the
+//! *client* side of the fabric (`dss top`, `dss trace`), where only
+//! the wire JSON exists.
+
+use std::fmt::Write as _;
+
+use crate::obs::trace::{self, Span, Stage};
+use crate::util::json::{Json, JsonError};
+use crate::util::stats::fmt_ns;
+
+// ---------------------------------------------------------------------
+// span trees
+// ---------------------------------------------------------------------
+
+/// One span with its nesting depth inside a [`TraceTree`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TreeNode {
+    pub span: Span,
+    pub depth: usize,
+}
+
+/// All spans of one sampled query, in start order, with containment
+/// depths ("child ⊆ parent" by time interval).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceTree {
+    pub trace: u64,
+    pub nodes: Vec<TreeNode>,
+}
+
+impl TraceTree {
+    /// Earliest span start (the tree's time origin).
+    pub fn start_ns(&self) -> u64 {
+        self.nodes.iter().map(|n| n.span.start_ns).min().unwrap_or(0)
+    }
+
+    /// Latest span end − earliest start.
+    pub fn total_ns(&self) -> u64 {
+        let t0 = self.start_ns();
+        self.nodes
+            .iter()
+            .map(|n| n.span.start_ns + n.span.dur_ns)
+            .max()
+            .unwrap_or(t0)
+            .saturating_sub(t0)
+    }
+
+    /// Wire/JSON form: span starts become offsets from the tree origin
+    /// (small numbers stay exact in f64, and the waterfall only needs
+    /// relative time anyway).
+    pub fn to_json(&self) -> Json {
+        let t0 = self.start_ns();
+        let spans: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("stage", Json::from(n.span.stage.name())),
+                    ("epoch", Json::from(n.span.epoch as f64)),
+                    ("off_ns", Json::from((n.span.start_ns - t0) as f64)),
+                    ("dur_ns", Json::from(n.span.dur_ns as f64)),
+                    ("depth", Json::from(n.depth)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("trace", Json::from(self.trace as f64)),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+
+    /// Inverse of [`to_json`] (used by `dss trace` on the client side).
+    pub fn from_json(j: &Json) -> Result<TraceTree, JsonError> {
+        let trace = j.get("trace")?.as_f64()? as u64;
+        let mut nodes = Vec::new();
+        for s in j.get("spans")?.as_arr()? {
+            let name = s.get("stage")?.as_str()?.to_string();
+            let stage = Stage::from_name(&name).ok_or(JsonError::Type("known stage name"))?;
+            nodes.push(TreeNode {
+                span: Span {
+                    trace,
+                    stage,
+                    epoch: s.get("epoch")?.as_f64()? as u64,
+                    start_ns: s.get("off_ns")?.as_f64()? as u64,
+                    dur_ns: s.get("dur_ns")?.as_f64()? as u64,
+                },
+                depth: s.get("depth")?.as_usize()?,
+            });
+        }
+        Ok(TraceTree { trace, nodes })
+    }
+}
+
+/// Group raw spans into per-trace trees with containment depths.
+/// Spans sort by (start asc, duration desc) so an enclosing span
+/// precedes the spans it contains even on equal starts; depth is then
+/// the number of still-open enclosing intervals.
+pub fn assemble(mut spans: Vec<Span>) -> Vec<TraceTree> {
+    spans.sort_by(|a, b| {
+        a.trace
+            .cmp(&b.trace)
+            .then(a.start_ns.cmp(&b.start_ns))
+            .then(b.dur_ns.cmp(&a.dur_ns))
+    });
+    let mut trees: Vec<TraceTree> = Vec::new();
+    for span in spans {
+        if trees.last().map(|t| t.trace) != Some(span.trace) {
+            trees.push(TraceTree { trace: span.trace, nodes: Vec::new() });
+        }
+        let tree = trees.last_mut().unwrap();
+        // nesting depth = 1 + depth of the innermost still-open span;
+        // scanning start-sorted nodes in reverse, the first node whose
+        // interval is still open at this span's start is exactly that
+        // (well-nested intervals; overlap degrades to approximate depth)
+        let mut depth = 0;
+        for n in tree.nodes.iter().rev() {
+            if n.span.start_ns + n.span.dur_ns > span.start_ns {
+                depth = n.depth + 1;
+                break;
+            }
+        }
+        tree.nodes.push(TreeNode { span, depth });
+    }
+    trees
+}
+
+/// The `n` most recent span trees from this process's rings, newest
+/// first.  Trees that include an `ingress` span (i.e. complete
+/// query-level traces rather than stray fragments) sort ahead.
+pub fn recent_traces(n: usize) -> Vec<TraceTree> {
+    let mut trees = assemble(trace::all_spans());
+    trees.sort_by_key(|t| {
+        let complete = t.nodes.iter().any(|n| n.span.stage == Stage::Ingress);
+        (std::cmp::Reverse(complete), std::cmp::Reverse(t.start_ns()))
+    });
+    trees.truncate(n);
+    trees
+}
+
+/// Render one tree as a stage waterfall:
+///
+/// ```text
+/// trace 42 · 6 spans · 184.2µs
+///   ingress       @0ns      +3.1µs   [#.............................]
+///     route       @0.4µs    +1.2µs   [#.............................]
+/// ```
+pub fn render_waterfall(tree: &TraceTree) -> String {
+    const BAR: usize = 30;
+    let t0 = tree.start_ns();
+    let total = tree.total_ns().max(1);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "trace {} · {} spans · {}",
+        tree.trace,
+        tree.nodes.len(),
+        fmt_ns(tree.total_ns())
+    );
+    for n in &tree.nodes {
+        let off = n.span.start_ns - t0;
+        let lo = ((off as u128 * BAR as u128) / total as u128) as usize;
+        let hi = (((off + n.span.dur_ns) as u128 * BAR as u128).div_ceil(total as u128))
+            as usize;
+        let (lo, hi) = (lo.min(BAR - 1), hi.clamp(lo + 1, BAR));
+        let mut bar = String::with_capacity(BAR);
+        for i in 0..BAR {
+            bar.push(if i >= lo && i < hi { '#' } else { '.' });
+        }
+        let label = format!("{}{}", "  ".repeat(n.depth + 1), n.span.stage.name());
+        let _ = writeln!(
+            out,
+            "{label:<18} @{:<9} +{:<9} [{bar}]",
+            fmt_ns(off),
+            fmt_ns(n.span.dur_ns)
+        );
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// stage histograms
+// ---------------------------------------------------------------------
+
+/// Per-stage latency summaries over sampled spans, as JSON:
+/// `{"kernel": {"count":…, "mean_ns":…, "p50_ns":…, …}, …}`.  Stages
+/// with no samples are omitted.
+pub fn stage_histos_json() -> Json {
+    let mut pairs = Vec::new();
+    trace::with_stage_histos(|stage, h| {
+        if h.count() == 0 {
+            return;
+        }
+        pairs.push((
+            stage.name(),
+            Json::obj(vec![
+                ("count", Json::from(h.count() as f64)),
+                ("mean_ns", Json::from(h.mean_ns())),
+                ("p50_ns", Json::from(h.percentile_ns(0.50) as f64)),
+                ("p95_ns", Json::from(h.percentile_ns(0.95) as f64)),
+                ("p99_ns", Json::from(h.percentile_ns(0.99) as f64)),
+                ("max_ns", Json::from(h.max_ns() as f64)),
+            ]),
+        ));
+    });
+    Json::obj(pairs)
+}
+
+// ---------------------------------------------------------------------
+// Prometheus-style exposition
+// ---------------------------------------------------------------------
+
+fn metric_name(s: &str) -> String {
+    s.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }).collect()
+}
+
+fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+fn flatten(prefix: &str, j: &Json, out: &mut String) {
+    match j {
+        Json::Num(x) => {
+            if x.is_finite() {
+                let _ = writeln!(out, "{prefix} {}", fmt_num(*x));
+            }
+        }
+        Json::Bool(b) => {
+            let _ = writeln!(out, "{prefix} {}", *b as u8);
+        }
+        Json::Null | Json::Str(_) => {}
+        Json::Arr(v) => {
+            if v.iter().all(|e| matches!(e, Json::Num(_))) {
+                for (i, e) in v.iter().enumerate() {
+                    if let Json::Num(x) = e {
+                        if x.is_finite() {
+                            let _ = writeln!(out, "{prefix}{{idx=\"{i}\"}} {}", fmt_num(*x));
+                        }
+                    }
+                }
+            } else {
+                for (i, e) in v.iter().enumerate() {
+                    flatten(&format!("{prefix}_{i}"), e, out);
+                }
+            }
+        }
+        Json::Obj(m) => {
+            for (k, v) in m {
+                flatten(&format!("{prefix}_{}", metric_name(k)), v, out);
+            }
+        }
+    }
+}
+
+/// Render a metrics-snapshot JSON object as Prometheus-style text
+/// exposition: one `dss_<flattened_key> <value>` sample per numeric
+/// leaf, numeric arrays labeled `{idx="i"}`.  Strings and non-finite
+/// numbers are dropped (exposition is numbers-only).  Key order is the
+/// snapshot's own (BTreeMap = sorted), so output is deterministic.
+pub fn prometheus_text(snap: &Json) -> String {
+    let mut out = String::new();
+    flatten("dss", snap, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------
+// `dss top` one-screen view
+// ---------------------------------------------------------------------
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+}
+
+fn histo_line(j: &Json, key: &str) -> Option<String> {
+    let h = j.opt(key)?;
+    let count = num(h, "count");
+    if count == 0.0 {
+        return None;
+    }
+    Some(format!(
+        "count {:<8} p50 {:<9} p95 {:<9} p99 {:<9} max {}",
+        fmt_num(count),
+        fmt_ns(num(h, "p50_ns") as u64),
+        fmt_ns(num(h, "p95_ns") as u64),
+        fmt_ns(num(h, "p99_ns") as u64),
+        fmt_ns(num(h, "max_ns") as u64),
+    ))
+}
+
+/// Render a scraped snapshot as the one-screen `dss top` view.
+/// Defensive against missing keys (older fronts): sections simply
+/// disappear rather than erroring.
+pub fn render_top(snap: &Json) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "dss · epoch {} · swaps {} · queue {} (hot {})",
+        fmt_num(num(snap, "engine_epoch")),
+        fmt_num(num(snap, "swaps")),
+        fmt_num(num(snap, "queue_depth")),
+        fmt_num(num(snap, "hot_queue_depth")),
+    );
+    let _ = writeln!(
+        out,
+        "queries   submitted {}  completed {}  rejected {}  timeouts {}",
+        fmt_num(num(snap, "submitted")),
+        fmt_num(num(snap, "completed")),
+        fmt_num(num(snap, "rejected")),
+        fmt_num(num(snap, "timeouts")),
+    );
+    let _ = writeln!(
+        out,
+        "batches   {}  mean size {:.1}",
+        fmt_num(num(snap, "batches")),
+        num(snap, "mean_batch"),
+    );
+    for key in ["queue_latency", "execute_latency", "total_latency"] {
+        if let Some(line) = histo_line(snap, key) {
+            let _ = writeln!(out, "{:<9} {line}", key.trim_end_matches("_latency"));
+        }
+    }
+    if let Some(Json::Obj(stages)) = snap.opt("stages") {
+        if !stages.is_empty() {
+            let _ = writeln!(out, "stages (sampled)");
+            // render in pipeline order, not key order
+            for stage in Stage::ALL {
+                if let Some(line) = histo_line(snap.opt("stages").unwrap(), stage.name()) {
+                    let _ = writeln!(out, "  {:<11} {line}", stage.name());
+                }
+            }
+        }
+    }
+    if let Some(Json::Arr(routed)) = snap.opt("per_expert") {
+        let counts: Vec<f64> = routed.iter().filter_map(|v| v.as_f64().ok()).collect();
+        let max = counts.iter().cloned().fold(0.0f64, f64::max).max(1.0);
+        let _ = writeln!(out, "experts (routed)");
+        for (e, c) in counts.iter().enumerate() {
+            let width = ((c / max) * 24.0).round() as usize;
+            let _ = writeln!(out, "  e{e:<3} {:<8} {}", fmt_num(*c), "#".repeat(width));
+        }
+    }
+    if let Some(fabric) = snap.opt("fabric") {
+        let _ = writeln!(out, "fabric");
+        if let Some(Json::Arr(replicas)) = fabric.opt("replicas") {
+            for r in replicas {
+                let label = r
+                    .opt("label")
+                    .and_then(|l| l.as_str().ok())
+                    .unwrap_or("?");
+                let _ = writeln!(
+                    out,
+                    "  {label:<22} queries {:<8} retries {:<4} failovers {}",
+                    fmt_num(num(r, "queries")),
+                    fmt_num(num(r, "retries")),
+                    fmt_num(num(r, "failovers")),
+                );
+            }
+        }
+        if let Some(line) = histo_line(fabric, "rtt") {
+            let _ = writeln!(out, "  rtt       {line}");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, stage: Stage, start: u64, dur: u64) -> Span {
+        Span { trace, stage, epoch: 1, start_ns: start, dur_ns: dur }
+    }
+
+    #[test]
+    fn assemble_nests_contained_spans() {
+        let spans = vec![
+            span(5, Stage::Kernel, 120, 40),
+            span(5, Stage::Ingress, 0, 30),
+            span(5, Stage::Route, 10, 10),
+            span(5, Stage::QueueWait, 40, 60),
+            span(5, Stage::RemoteExec, 125, 20),
+        ];
+        let trees = assemble(spans);
+        assert_eq!(trees.len(), 1);
+        let t = &trees[0];
+        assert_eq!(t.trace, 5);
+        let depth_of = |st: Stage| {
+            t.nodes.iter().find(|n| n.span.stage == st).map(|n| n.depth).unwrap()
+        };
+        assert_eq!(depth_of(Stage::Ingress), 0);
+        assert_eq!(depth_of(Stage::Route), 1, "route ⊆ ingress");
+        assert_eq!(depth_of(Stage::QueueWait), 0, "queue_wait after ingress ends");
+        assert_eq!(depth_of(Stage::Kernel), 0);
+        assert_eq!(depth_of(Stage::RemoteExec), 1, "remote_exec ⊆ kernel");
+        assert_eq!(t.total_ns(), 160);
+        // start-ordered
+        for w in t.nodes.windows(2) {
+            assert!(w[0].span.start_ns <= w[1].span.start_ns);
+        }
+    }
+
+    #[test]
+    fn trees_round_trip_through_json() {
+        let trees = assemble(vec![
+            span(9, Stage::Ingress, 1000, 500),
+            span(9, Stage::Route, 1100, 100),
+        ]);
+        let j = trees[0].to_json();
+        let text = j.to_string();
+        let back = TraceTree::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.trace, 9);
+        assert_eq!(back.nodes.len(), 2);
+        // offsets are origin-relative after the round trip
+        assert_eq!(back.nodes[0].span.start_ns, 0);
+        assert_eq!(back.nodes[1].span.start_ns, 100);
+        assert_eq!(back.nodes[1].depth, 1);
+        assert_eq!(back.nodes[1].span.stage, Stage::Route);
+    }
+
+    #[test]
+    fn waterfall_renders_every_stage_line() {
+        let trees = assemble(vec![
+            span(3, Stage::Ingress, 0, 100),
+            span(3, Stage::Kernel, 200, 300),
+        ]);
+        let text = render_waterfall(&trees[0]);
+        assert!(text.contains("trace 3 · 2 spans"));
+        assert!(text.contains("ingress"));
+        assert!(text.contains("kernel"));
+        assert!(text.contains('#'));
+        assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn exposition_is_golden() {
+        let snap = Json::parse(
+            r#"{"completed":400,"engine_epoch":2,"per_expert":[0,17,3],
+                "queue_latency":{"count":400,"p50_ns":1500},
+                "fabric":{"replicas":[{"label":"127.0.0.1:7601#0","queries":200}]},
+                "note":"strings are dropped"}"#,
+        )
+        .unwrap();
+        let text = prometheus_text(&snap);
+        let expected = "\
+dss_completed 400
+dss_engine_epoch 2
+dss_fabric_replicas_0_queries 200
+dss_per_expert{idx=\"0\"} 0
+dss_per_expert{idx=\"1\"} 17
+dss_per_expert{idx=\"2\"} 3
+dss_queue_latency_count 400
+dss_queue_latency_p50_ns 1500
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn top_view_survives_sparse_snapshots() {
+        let text = render_top(&Json::parse(r#"{"submitted":10}"#).unwrap());
+        assert!(text.contains("submitted 10"));
+        let full = Json::parse(
+            r#"{"submitted":4,"completed":4,"per_expert":[4,0],
+                "stages":{"kernel":{"count":4,"p50_ns":1000,"p95_ns":2000,
+                                     "p99_ns":2000,"max_ns":2500}},
+                "fabric":{"replicas":[{"label":"a#0","queries":4,"retries":0,
+                                        "failovers":1}]}}"#,
+        )
+        .unwrap();
+        let text = render_top(&full);
+        assert!(text.contains("kernel"));
+        assert!(text.contains("failovers 1"));
+        assert!(text.contains("e0"));
+    }
+}

@@ -1,0 +1,39 @@
+//! Observability plane: query-level tracing, structured events, and
+//! live telemetry export.
+//!
+//! The paper's claim is a *measured* one, and its adaptation story
+//! (mitosis, pruning, re-planning) runs on live utilization signals —
+//! so every layer of the serving stack reports into this module:
+//!
+//! ```text
+//!             ┌───────────────── obs ─────────────────┐
+//!             │ trace   per-query stage spans          │
+//!             │ event   leveled JSONL structured log   │
+//!             │ export  span trees · top view · prom   │
+//!             └───┬───────────┬───────────────┬────────┘
+//!   coordinator ──┘     fabric front/worker ──┘   CLI: dss top / trace
+//! ```
+//!
+//! - [`trace`] — sampled per-query spans over a fixed stage
+//!   vocabulary (`ingress → queue_wait → route → gather → kernel →
+//!   tail → merge → reply`, plus `wire_rtt`/`remote_exec` on the
+//!   fabric path).  Lock-free per-thread rings; zero allocation and
+//!   near-zero cost for unsampled queries.  Trace ids ride
+//!   `fabric::proto` frames so one tree spans front, coordinator and
+//!   remote workers.
+//! - [`event`] — typed, leveled JSONL events (`swap`, `replan`,
+//!   `failover`, `conn_poisoned`, `worker_connect`, ...) replacing
+//!   ad-hoc `eprintln!` diagnostics; `DSS_LOG`/`DSS_LOG_FILE` or
+//!   `--log-level`/`--log-file` configure threshold and sink.
+//! - [`export`] — span-tree assembly and the renderers: `dss trace`
+//!   waterfalls, the `dss top` one-screen view, Prometheus-style text
+//!   exposition, and the per-stage histogram JSON spliced into
+//!   `Stats`/`Scrape` replies by the fabric front.
+
+pub mod event;
+pub mod export;
+pub mod trace;
+
+pub use event::Level;
+pub use export::TraceTree;
+pub use trace::{Span, Stage};

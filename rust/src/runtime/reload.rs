@@ -51,8 +51,10 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::Coordinator;
 use crate::model::SoftmaxEngine;
+use crate::obs;
 use crate::shard::{ShardPlan, ShardedEngine};
 use crate::sparse::ExpertSet;
+use crate::util::json::Json;
 
 /// Monotonic engine-generation counter.  Generation 0 is the engine
 /// the cell was created with; every [`EngineCell::swap`] bumps it.
@@ -422,7 +424,8 @@ fn try_replan(
     if total < policy.min_queries.max(1) {
         return None;
     }
-    if shard_skew(cur, set, &routed) < policy.skew {
+    let skew = shard_skew(cur, set, &routed);
+    if skew < policy.skew {
         return None;
     }
     let next = ShardPlan::weighted(set, cur.shards, &routed);
@@ -436,22 +439,39 @@ fn try_replan(
     let engine = match ShardedEngine::new(set.clone(), next.clone()) {
         Ok(e) => e,
         Err(e) => {
-            eprintln!("replan: engine rebuild failed, keeping current plan: {e:#}");
+            obs::event::error(
+                "replan_rebuild_failed",
+                vec![("err", Json::Str(format!("{e:#}")))],
+            );
             return None;
         }
     };
     match coord.swap_engine(Arc::new(engine)) {
         Ok(epoch) => {
+            obs::event::info(
+                "replan",
+                vec![
+                    ("epoch", Json::Num(epoch as f64)),
+                    ("skew", Json::Num(skew)),
+                    ("queries", Json::Num(total as f64)),
+                ],
+            );
             let stamped = next.with_generation(epoch);
             if let Some(path) = plan_out {
                 if let Err(e) = stamped.save(path) {
-                    eprintln!("replan: plan artifact write failed: {e:#}");
+                    obs::event::warn(
+                        "plan_write_failed",
+                        vec![("err", Json::Str(format!("{e:#}")))],
+                    );
                 }
             }
             Some(stamped)
         }
         Err(e) => {
-            eprintln!("replan: swap rejected, keeping current plan: {e:#}");
+            obs::event::warn(
+                "swap_rejected",
+                vec![("err", Json::Str(format!("{e:#}")))],
+            );
             None
         }
     }

@@ -110,9 +110,12 @@ impl ShardPlan {
         assert!(shards >= 1, "shards must be >= 1");
         assert_eq!(routed.len(), set.k(), "routing counts vs expert count");
         if routed.iter().all(|&c| c == 0) {
-            eprintln!(
-                "shard plan: weighted requested with all-zero routing counts; \
-                 falling back to size-only greedy"
+            crate::obs::event::warn(
+                "weighted_plan_fallback",
+                vec![(
+                    "detail",
+                    "all-zero routing counts; falling back to size-only greedy".into(),
+                )],
             );
             return Self::greedy(set, shards);
         }

@@ -235,7 +235,10 @@ fn worker_loop(sh: Arc<Shared>) {
         // for scoped submitters).  Completion signalling is the job's
         // own responsibility (e.g. `DoneLatch` fires during unwind).
         if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
-            eprintln!("dss worker: job panicked; worker kept alive");
+            crate::obs::event::error(
+                "worker_panic",
+                vec![("detail", "job panicked; worker kept alive".into())],
+            );
         }
     }
 }

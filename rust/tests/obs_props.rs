@@ -1,0 +1,237 @@
+//! Observability-plane properties: sampled span trees must be
+//! *well-formed* (one trace id per tree, route nested inside ingress,
+//! queue_wait starting only after admission closes), trace ids must
+//! survive the fabric round-trip (the remote worker's spans come back
+//! in `BatchOk` and graft into the same tree, re-based inside the
+//! client's `wire_rtt` envelope), and the scrape surface (`Stats` /
+//! `Scrape` / `TraceFetch` frames) must serve live histograms,
+//! Prometheus text, and JSON trace trees a client can render.
+//!
+//! The tracer is process-global (per-thread rings + one sampling
+//! counter), so every test takes a file-local lock and asserts
+//! existentially ("some tree satisfies …") rather than over all rings,
+//! which may hold spans from earlier tests in this binary.
+
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
+use ds_softmax::fabric::{FabricClient, FabricFront, FabricOpts, RemoteShardEngine, ShardWorker};
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::obs::export::{self, TraceTree};
+use ds_softmax::obs::trace::{self, Stage};
+use ds_softmax::shard::{ReplicaPlan, ShardPlan};
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::util::rng::Rng;
+
+/// Serialize tests that touch the process-global tracer.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `[start, end)` interval of the first node with `stage`, if any.
+fn interval(tree: &TraceTree, stage: Stage) -> Option<(u64, u64)> {
+    tree.nodes
+        .iter()
+        .find(|n| n.span.stage == stage)
+        .map(|n| (n.span.start_ns, n.span.start_ns + n.span.dur_ns))
+}
+
+fn has_stages(tree: &TraceTree, stages: &[Stage]) -> bool {
+    stages.iter().all(|s| tree.nodes.iter().any(|n| n.span.stage == *s))
+}
+
+/// Drive a coordinator with sample-every-query tracing and return the
+/// assembled trees (callers filter down to the ones they produced).
+fn run_traced_coordinator(rng: &mut Rng, queries: usize) -> Vec<TraceTree> {
+    let set = ExpertSet::synthetic(256, 16, 4, 1.2, rng);
+    let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(set)));
+    let c = Coordinator::start(engine, CoordinatorConfig::default());
+    let pending: Vec<_> = (0..queries)
+        .map(|_| c.submit(rng.normal_vec(16, 1.0), 5).unwrap())
+        .collect();
+    for p in pending {
+        p.wait().unwrap();
+    }
+    c.shutdown();
+    export::assemble(trace::all_spans())
+}
+
+/// Every sampled query yields one tree; at least one (the batch's
+/// context query) carries the full in-process stage vocabulary, with
+/// the invariants the recorder promises: route ⊆ ingress, queue_wait
+/// disjoint from (and after) ingress, all spans sharing the trace id.
+#[test]
+fn coordinator_span_trees_are_well_formed() {
+    let _g = lock();
+    trace::init(1);
+    let mut rng = Rng::new(11);
+    let trees = run_traced_coordinator(&mut rng, 24);
+    trace::init(0);
+
+    const FULL: [Stage; 7] = [
+        Stage::Ingress,
+        Stage::QueueWait,
+        Stage::Route,
+        Stage::Gather,
+        Stage::Kernel,
+        Stage::Merge,
+        Stage::Reply,
+    ];
+    let full = trees
+        .iter()
+        .find(|t| has_stages(t, &FULL))
+        .expect("no tree carries the full in-process stage vocabulary");
+
+    // one trace id per tree, every span inside the tree envelope
+    let t0 = full.start_ns();
+    let t1 = t0 + full.total_ns();
+    for n in &full.nodes {
+        assert_eq!(n.span.trace, full.trace, "span leaked across trees");
+        assert!(
+            n.span.start_ns >= t0 && n.span.start_ns + n.span.dur_ns <= t1,
+            "{} outside the tree envelope",
+            n.span.stage.name()
+        );
+    }
+
+    // nesting: route is a child of ingress; queue_wait begins only
+    // after the admission span closes (the enqueue handoff)
+    let (in0, in1) = interval(full, Stage::Ingress).unwrap();
+    let (r0, r1) = interval(full, Stage::Route).unwrap();
+    let (q0, _) = interval(full, Stage::QueueWait).unwrap();
+    assert!(r0 >= in0 && r1 <= in1, "route [{r0},{r1}) ⊄ ingress [{in0},{in1})");
+    assert!(q0 >= in1, "queue_wait at {q0} overlaps ingress ending at {in1}");
+
+    // merge precedes reply for the same query
+    let (m0, m1) = interval(full, Stage::Merge).unwrap();
+    let (p0, _) = interval(full, Stage::Reply).unwrap();
+    assert!(m1 >= m0 && p0 >= m0, "merge/reply out of order");
+}
+
+/// A trace id attached to an `ExpertBatch` frame comes back with the
+/// worker's own spans, grafted into the *same* tree: `wire_rtt` spans
+/// the client-side round-trip and the worker's `remote_exec` /
+/// `kernel` spans are re-based strictly inside it.
+#[test]
+fn trace_ids_survive_the_fabric_round_trip() {
+    let _g = lock();
+    trace::init(1);
+    let mut rng = Rng::new(29);
+    let set = ExpertSet::synthetic(128, 8, 4, 1.2, &mut rng);
+    let plan = ShardPlan::greedy(&set, 2);
+    let rplan = ReplicaPlan::uniform(plan, 1);
+    let mut workers = Vec::new();
+    let mut addrs = Vec::new();
+    for shard in 0..2 {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let w = ShardWorker::spawn_for(set.clone(), &rplan.plan, shard, listener).unwrap();
+        addrs.push(w.local_addr().to_string());
+        workers.push(w);
+    }
+    let remote =
+        Arc::new(RemoteShardEngine::connect(&set, rplan, &addrs, FabricOpts::default()).unwrap());
+    let c = Coordinator::start(remote, CoordinatorConfig { shards: 2, ..Default::default() });
+    let pending: Vec<_> =
+        (0..16).map(|_| c.submit(rng.normal_vec(8, 1.0), 4).unwrap()).collect();
+    for p in pending {
+        p.wait().unwrap();
+    }
+    c.shutdown();
+    trace::init(0);
+    drop(workers);
+
+    let trees = export::assemble(trace::all_spans());
+    const CROSSED: [Stage; 4] =
+        [Stage::Ingress, Stage::WireRtt, Stage::RemoteExec, Stage::Kernel];
+    let tree = trees
+        .iter()
+        .find(|t| has_stages(t, &CROSSED))
+        .expect("no tree crossed the fabric intact");
+
+    // the grafted remote spans carry the coordinator's trace id …
+    for n in &tree.nodes {
+        assert_eq!(n.span.trace, tree.trace, "remote span lost its trace id");
+    }
+    // … use only the shared stage vocabulary (from_u8 round-trip) …
+    for n in &tree.nodes {
+        assert!(Stage::ALL.contains(&n.span.stage));
+    }
+    // … and sit inside the client-observed wire_rtt envelope
+    let (w0, w1) = interval(tree, Stage::WireRtt).unwrap();
+    let (e0, e1) = interval(tree, Stage::RemoteExec).unwrap();
+    assert!(e0 >= w0 && e1 <= w1, "remote_exec [{e0},{e1}) ⊄ wire_rtt [{w0},{w1})");
+}
+
+/// The scrape surface end-to-end: `Stats` answers with per-stage
+/// histograms spliced in, `Scrape` renders Prometheus text exposition,
+/// and `TraceFetch` returns JSON trace trees that parse and render —
+/// everything `dss top` / `dss trace` consume.
+#[test]
+fn front_serves_stats_scrape_and_traces() {
+    let _g = lock();
+    trace::init(1);
+    let mut rng = Rng::new(43);
+    let set = ExpertSet::synthetic(128, 10, 4, 1.2, &mut rng);
+    let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(set)));
+    let c = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let mut front = FabricFront::spawn(listener, c.clone(), None).unwrap();
+    let mut cl = FabricClient::connect(&front.local_addr().to_string()).unwrap();
+
+    for _ in 0..8 {
+        cl.query(&rng.normal_vec(10, 1.0), 4).unwrap();
+    }
+
+    // Stats: the snapshot carries the live per-stage histograms
+    let stats = cl.stats().unwrap();
+    let stages = stats.get("stages").unwrap().as_obj().unwrap();
+    let kernel = stages.get("kernel").expect("kernel histogram missing from stats");
+    assert!(kernel.get("count").unwrap().as_f64().unwrap() >= 1.0);
+
+    // Scrape: flattened text exposition with one sample per numeric leaf
+    let text = cl.scrape().unwrap();
+    assert!(text.contains("dss_submitted 8"), "exposition:\n{text}");
+    assert!(text.contains("dss_stages_kernel_count"), "exposition:\n{text}");
+    assert!(text.contains("dss_engine_epoch"), "exposition:\n{text}");
+
+    // TraceFetch: recent trees round-trip through JSON and render
+    let traces = cl.traces(4).unwrap();
+    let arr = traces.as_arr().unwrap();
+    assert!(!arr.is_empty(), "front returned no sampled traces");
+    let tree = TraceTree::from_json(&arr[0]).unwrap();
+    assert!(
+        tree.nodes.iter().any(|n| n.span.stage == Stage::Ingress),
+        "fetched tree has no ingress span"
+    );
+    let waterfall = export::render_waterfall(&tree);
+    assert!(waterfall.contains("ingress"), "waterfall:\n{waterfall}");
+    assert!(waterfall.contains(&format!("trace {}", tree.trace)), "waterfall:\n{waterfall}");
+
+    trace::init(0);
+    cl.shutdown_server().unwrap();
+    front.wait();
+    c.shutdown();
+}
+
+/// `TraceTree::to_json` / `from_json` is an exact round-trip.
+#[test]
+fn trace_tree_json_round_trip_is_exact() {
+    let _g = lock();
+    trace::init(1);
+    let mut rng = Rng::new(59);
+    let trees = run_traced_coordinator(&mut rng, 8);
+    trace::init(0);
+    let tree = trees
+        .iter()
+        .find(|t| t.nodes.iter().any(|n| n.span.stage == Stage::Ingress))
+        .expect("no complete tree to round-trip");
+    let back = TraceTree::from_json(&tree.to_json()).unwrap();
+    assert_eq!(back.trace, tree.trace);
+    assert_eq!(back.nodes.len(), tree.nodes.len());
+    for (a, b) in tree.nodes.iter().zip(&back.nodes) {
+        assert_eq!(a.span, b.span);
+        assert_eq!(a.depth, b.depth);
+    }
+}

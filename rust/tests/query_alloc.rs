@@ -12,6 +12,7 @@ use std::sync::Arc;
 use ds_softmax::coordinator::NativeBatchEngine;
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::SoftmaxEngine;
+use ds_softmax::obs::trace::{self, Stage};
 use ds_softmax::query::{MatrixView, Route, TopKBuf};
 use ds_softmax::runtime::reload::EngineCell;
 use ds_softmax::shard::{ShardPlan, ShardedEngine};
@@ -165,6 +166,30 @@ fn warm_query_batch_does_not_allocate() {
         std::hint::black_box(&out);
     });
     assert_eq!(n, 0, "post-swap warm query_batch allocated {n} times");
+
+    // an initialized-but-unsampled tracer adds nothing to the warm hot
+    // path: the per-query sampling decision is one relaxed load plus a
+    // counter bump, an untraced span guard never touches the clock or
+    // the ring, and none of it allocates.  The first decision after
+    // init() is the sampled one (counter starts at zero), so consume
+    // it outside the counted region; with an interval of 2^30 every
+    // later decision in this process is unsampled.
+    trace::init(1 << 30);
+    let first = trace::try_sample();
+    assert_ne!(first, 0, "first post-init decision should sample");
+    let n = count_allocs(|| {
+        for _ in 0..8 {
+            let t = trace::try_sample();
+            assert_eq!(t, 0, "interval 2^30 sampled again");
+            let _ctx = trace::set_ctx(t, 0);
+            let _kernel = trace::span(Stage::Kernel);
+            let g = handle.load();
+            g.query_batch(view, 10, &mut out);
+        }
+        std::hint::black_box(&out);
+    });
+    assert_eq!(n, 0, "unsampled tracing allocated {n} times on the warm path");
+    trace::init(0);
 
     // results are still correct after the counted runs
     for r in 0..bsz {
