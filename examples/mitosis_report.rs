@@ -5,6 +5,7 @@
 //!
 //!     cargo run --release --example mitosis_report
 
+use ds_softmax::benchlib::BenchReport;
 use ds_softmax::model::mitosis::MitosisSchedule;
 
 fn main() {
@@ -33,6 +34,18 @@ fn main() {
     println!("\npeak memory: {peak:.2}x one full softmax");
     println!("naive DS-64: {:.2}x  ({:.0}x saved)", s.naive_peak(), s.naive_peak() / peak);
     println!("paper Fig. 5a reports: <= 3.25x  -> {}", if peak <= 3.5 { "REPRODUCED" } else { "NOT reproduced" });
+
+    // machine-readable trail: the analytic model is deterministic, so
+    // this file matches the fig5a bench's headline metrics exactly
+    let mut report = BenchReport::new("fig5a");
+    report.metric("peak", peak);
+    report.metric("naive", s.naive_peak());
+    report.metric("saving", s.naive_peak() / peak);
+    report.metric("paper_bound", 3.25);
+    match report.save_trail() {
+        Ok(path) => println!("bench trail -> {path}"),
+        Err(e) => eprintln!("bench trail not written: {e}"),
+    }
 }
 
 fn bar(x: f64, max: f64) -> String {

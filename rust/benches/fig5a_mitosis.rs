@@ -10,12 +10,13 @@
 //!
 //!     cargo bench --bench fig5a_mitosis
 
-use ds_softmax::benchlib::Table;
+use ds_softmax::benchlib::{BenchReport, Table};
 use ds_softmax::model::mitosis::MitosisSchedule;
 
 fn main() {
     println!("Reproducing paper Fig. 5a (training memory vs epoch, cloning every 15 epochs)");
 
+    let mut report = BenchReport::new("fig5a");
     let mut table = Table::new(
         "Fig. 5a — peak training memory (full-softmax units)",
         &["schedule", "terminal sparsity", "peak", "naive", "saving", "paper"],
@@ -28,6 +29,8 @@ fn main() {
     ] {
         let s = MitosisSchedule::paper(k0, kf, floor);
         let (_traj, peak) = s.trajectory();
+        report.metric(&format!("peak_ds{k0}_{kf}"), peak);
+        report.metric(&format!("saving_ds{k0}_{kf}"), s.naive_peak() / peak);
         table.row(vec![
             format!("DS-{k0} -> DS-{kf}"),
             format!("{:.4}", floor),
@@ -55,6 +58,9 @@ fn main() {
     }
     println!("\npeak = {peak:.2}x  (paper: <= 3.25x) → {}",
         if peak <= 3.5 { "REPRODUCED" } else { "NOT REPRODUCED" });
+    report.metric("peak", peak);
+    report.metric("naive", s.naive_peak());
+    report.metric("paper_bound", 3.25);
 
     // ablation: pruning delay sweep — cloning before pruning converges
     // costs memory (the schedule's prune_delay knob)
@@ -68,7 +74,13 @@ fn main() {
             p.prune_delay = delay;
         }
         let (_t, peak) = s.trajectory();
+        report.metric(&format!("peak_prune_delay_{delay}"), peak);
         table.row(vec![format!("{delay}"), format!("{peak:.2}x")]);
     }
     table.print();
+
+    match report.save_trail() {
+        Ok(path) => println!("\nbench trail -> {path}"),
+        Err(e) => eprintln!("bench trail not written: {e}"),
+    }
 }

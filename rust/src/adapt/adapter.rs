@@ -1,0 +1,165 @@
+//! The background adaptation watcher: the structural twin of
+//! [`crate::runtime::reload::Replanner`], but mutating the *expert
+//! set* instead of the shard plan.  Policy evaluation and the engine
+//! rebuild both run off the serving threads; the only serving-visible
+//! moment is the epoch-versioned
+//! [`Coordinator::swap_engine`](crate::coordinator::Coordinator::swap_engine)
+//! install, which never pauses a batch or mixes generations.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{Coordinator, NativeBatchEngine};
+use crate::model::dssoftmax::DsSoftmax;
+use crate::model::SoftmaxEngine;
+use crate::obs;
+use crate::shard::{ShardPlan, ShardedEngine};
+use crate::sparse::ExpertSet;
+use crate::util::json::Json;
+
+use super::transform::{adapt_set, expert_skew};
+use super::AdaptPolicy;
+
+/// Background expert-adaptation watcher.  Evaluates [`AdaptPolicy`]
+/// against the coordinator's generation-rebased counters and, when
+/// triggered, applies one [`adapt_set`] step, rebuilds the engine
+/// off-thread and installs it live.  `stop()` runs one final
+/// evaluation (the skew and sample-size gates still apply; the poll
+/// cadence and wall-clock hysteresis do not) so short workloads still
+/// get their adaptation, then returns the number of swaps installed.
+///
+/// Exactly one expert-set mutator may watch a coordinator — see the
+/// module docs on the adapt/replan interaction contract.
+pub struct Adapter {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<u64>>,
+}
+
+impl Adapter {
+    /// Spawn the watcher.  `set` is the currently-installed expert set
+    /// (the transform baseline); `plan` selects the rebuild flavor —
+    /// `Some` rebuilds a [`ShardedEngine`] under the *same* plan
+    /// (adaptation is K-invariant, so the installed plan stays valid),
+    /// `None` rebuilds an unsharded [`NativeBatchEngine`].
+    pub fn spawn(
+        coord: Arc<Coordinator>,
+        set: ExpertSet,
+        plan: Option<ShardPlan>,
+        policy: AdaptPolicy,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("dss-adapter".into())
+            .spawn(move || {
+                let mut cur = set;
+                let mut last_swap = Instant::now();
+                let mut swaps = 0u64;
+                loop {
+                    let stopping = stop2.load(Ordering::Acquire);
+                    if !stopping {
+                        std::thread::sleep(policy.poll);
+                    }
+                    if last_swap.elapsed() >= policy.min_interval || stopping {
+                        if let Some(next) =
+                            try_adapt(&coord, &cur, plan.as_ref(), &policy, swaps)
+                        {
+                            cur = next;
+                            last_swap = Instant::now();
+                            swaps += 1;
+                        }
+                    }
+                    if stopping {
+                        break;
+                    }
+                }
+                swaps
+            })
+            .expect("spawn adapter");
+        Self { stop, thread: Some(thread) }
+    }
+
+    /// Stop the watcher after one final evaluation; returns the number
+    /// of adaptation swaps it installed over its lifetime.
+    pub fn stop(mut self) -> u64 {
+        self.stop.store(true, Ordering::Release);
+        self.thread.take().map(|t| t.join().unwrap_or(0)).unwrap_or(0)
+    }
+}
+
+impl Drop for Adapter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One policy evaluation + (maybe) swap.  Returns the installed set.
+fn try_adapt(
+    coord: &Coordinator,
+    cur: &ExpertSet,
+    plan: Option<&ShardPlan>,
+    policy: &AdaptPolicy,
+    swaps: u64,
+) -> Option<ExpertSet> {
+    let routed = coord.metrics.routed_counts_generation();
+    let total: u64 = routed.iter().sum();
+    if total < policy.min_queries.max(1) {
+        return None;
+    }
+    let skew = expert_skew(&routed);
+    if skew < policy.split_skew {
+        return None;
+    }
+    let class_hits = coord.metrics.class_hits_generation();
+    let (next, delta) = adapt_set(
+        cur,
+        &routed,
+        &class_hits,
+        policy,
+        policy.seed.wrapping_add(swaps),
+    )?;
+    // construct the replacement off the serving threads (this is the
+    // expensive part: re-padding and re-sharding every expert)
+    let engine: Arc<dyn SoftmaxEngine> = match plan {
+        Some(p) => match ShardedEngine::new(next.clone(), p.clone()) {
+            Ok(e) => Arc::new(e),
+            Err(e) => {
+                obs::event::error(
+                    "adapt_rebuild_failed",
+                    vec![("err", Json::Str(format!("{e:#}")))],
+                );
+                return None;
+            }
+        },
+        None => Arc::new(NativeBatchEngine::new(DsSoftmax::new(next.clone()))),
+    };
+    match coord.swap_engine(engine) {
+        Ok(epoch) => {
+            obs::event::info(
+                "adapt_swap",
+                vec![
+                    ("epoch", Json::Num(epoch as f64)),
+                    ("skew", Json::Num(skew)),
+                    ("split", Json::Num(delta.split as f64)),
+                    ("twin", Json::Num(delta.twin as f64)),
+                    ("merged", Json::Num(delta.merged.0 as f64)),
+                    ("shared", Json::Num(delta.shared as f64)),
+                    ("pruned", Json::Num(delta.pruned as f64)),
+                    ("queries", Json::Num(total as f64)),
+                ],
+            );
+            Some(next)
+        }
+        Err(e) => {
+            obs::event::warn(
+                "adapt_swap_rejected",
+                vec![("err", Json::Str(format!("{e:#}")))],
+            );
+            None
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Serve-time expert adaptation: online mitosis and pruning as live
+//! engine swaps.
+//!
+//! DS-Softmax is *learning-based* — the two-level hierarchy is trained
+//! with expert mitosis and class pruning so the partition tracks the
+//! output distribution (paper §2.3, Fig. 5a).  PR 5 made the shard
+//! *plan* adapt at serve time; this plane makes the **experts
+//! themselves** adapt.  A background [`Adapter`] thread (the structural
+//! twin of [`crate::runtime::reload::Replanner`]) watches the
+//! coordinator's generation-rebased per-expert routing counts and
+//! per-class served-hit counts, and when the expert-load skew crosses
+//! [`AdaptPolicy::split_skew`] it applies one adaptation step:
+//!
+//! * **online mitosis** — the hottest expert's class set is split into
+//!   two overlapping children ([`transform::adapt_set`]): the hottest
+//!   classes (per [`AdaptPolicy::retention`], mirroring
+//!   [`crate::model::mitosis::MitosisSchedule`]'s retention) go to
+//!   *both* children so hot traffic keeps hitting whichever twin the
+//!   gate routes to, and the cold remainder alternates between them —
+//!   the union of the children is exactly the parent, so no class loses
+//!   coverage;
+//! * **slot recycling** — expert count is a serving invariant (batcher
+//!   queues, metrics vectors and the shard plan are all keyed by
+//!   expert), so the twin takes the slot freed by merging the two
+//!   coldest experts;
+//! * **cold-class pruning** — class replicas whose observed hit share
+//!   is below [`AdaptPolicy::prune_floor`] of the uniform share are
+//!   dropped, never below one replica per class and never shrinking an
+//!   expert past the per-expert size floor
+//!   ([`AdaptPolicy::floor_frac`], the schedule's floor semantics);
+//! * **gate repair** — the twin's gate row is the parent's row
+//!   duplicated then perturbed with a deterministic seeded jitter
+//!   ([`AdaptPolicy::gate_sigma`]) so routing between the twins is
+//!   well-defined; the merged slot's row is the mean of the two retired
+//!   rows.
+//!
+//! The transformed set is rebuilt into a fresh engine **off** the
+//! serving threads and installed with
+//! [`Coordinator::swap_engine`](crate::coordinator::Coordinator::swap_engine)
+//! — exactly like a re-plan: no serving pause, no batch ever mixes
+//! generations, and the swap rebases both metrics baselines.
+//!
+//! ## Interaction with the re-planner
+//!
+//! An adapt swap rebases the per-generation counters
+//! ([`crate::coordinator::Metrics::on_swap`]), which **invalidates the
+//! re-planner's pending counts** — the reverse does not hold
+//! structurally: each watcher holds its own `ExpertSet` copy, so one
+//! watcher's swap would silently revert the other's.  Exactly one
+//! expert-set mutator may run per serve; `dss serve` enforces that
+//! `--adapt-*` and `--replan-*` are mutually exclusive.
+
+use std::time::Duration;
+
+pub mod adapter;
+pub mod transform;
+
+pub use adapter::Adapter;
+pub use transform::{adapt_set, expert_skew, size_floor, AdaptDelta};
+
+/// When and how an adaptation step fires.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptPolicy {
+    /// Trigger threshold on per-expert routing skew (`max / mean` of
+    /// the generation's routed counts).  `1.0` fires whenever the
+    /// other gates pass (smoke tests); production leaves headroom,
+    /// e.g. `1.5`.
+    pub split_skew: f64,
+    /// Prune floor, relative to the uniform hit share: a class replica
+    /// is prunable when `hits(c) · |V| < total_hits · prune_floor`.
+    /// `0.0` disables pruning (nothing is strictly below zero).
+    pub prune_floor: f64,
+    /// Fraction of the parent's classes each mitosis child keeps
+    /// (paper §2.3 keeps 75%); the `2·retention − 1` hottest fraction
+    /// is shared by both children.  Clamped to `[0.5, 1.0]`.
+    pub retention: f64,
+    /// Per-expert size floor as a fraction of `n_classes`
+    /// (`max(1, ceil(floor_frac · |V|))`) — pruning never shrinks an
+    /// expert below it, and a split whose children would land below it
+    /// is skipped.
+    pub floor_frac: f64,
+    /// Std-dev of the deterministic jitter added to the duplicated
+    /// gate row of a split expert's twin.
+    pub gate_sigma: f64,
+    /// Minimum queries routed *this generation* before a step may fire
+    /// — hysteresis and a sample-size floor for the hit counters.
+    pub min_queries: u64,
+    /// Minimum wall clock between swaps.
+    pub min_interval: Duration,
+    /// Evaluation cadence of the background thread.
+    pub poll: Duration,
+    /// Base seed for the gate jitter; step `i` perturbs with
+    /// `seed + i`, so a run's adaptation trajectory is reproducible.
+    pub seed: u64,
+}
+
+impl Default for AdaptPolicy {
+    fn default() -> Self {
+        Self {
+            split_skew: 1.5,
+            prune_floor: 0.1,
+            retention: 0.75,
+            floor_frac: 0.02,
+            gate_sigma: 0.01,
+            min_queries: 10_000,
+            min_interval: Duration::from_secs(2),
+            poll: Duration::from_millis(20),
+            seed: 0,
+        }
+    }
+}

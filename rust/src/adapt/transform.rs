@@ -1,0 +1,292 @@
+//! Pure expert-set transformations for one adaptation step: split the
+//! hottest expert, recycle a slot by merging the two coldest, prune
+//! cold class replicas, repair the gate — all deterministic given the
+//! counters and a seed, and all **K-invariant** (the expert count never
+//! changes, so batcher queues, metrics vectors and the installed shard
+//! plan stay valid across the swap).
+
+use crate::sparse::{ExpertSet, SparseExpert};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+use super::AdaptPolicy;
+
+/// What one [`adapt_set`] step did — the payload of the `adapt_swap`
+/// event and the unit the property tests assert over.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptDelta {
+    /// Parent expert that was split; its slot now holds child A.
+    pub split: usize,
+    /// Slot holding child B (freed by the merge below).
+    pub twin: usize,
+    /// The two coldest experts, merged into the first one's slot; the
+    /// second slot was handed to the twin.
+    pub merged: (usize, usize),
+    /// Number of hottest parent classes present in *both* children.
+    pub shared: usize,
+    /// Number of cold class replicas pruned.
+    pub pruned: usize,
+}
+
+/// Per-expert routing skew `max / mean`; `1.0` when empty or unloaded.
+pub fn expert_skew(routed: &[u64]) -> f64 {
+    if routed.is_empty() {
+        return 1.0;
+    }
+    let max = *routed.iter().max().unwrap() as f64;
+    let mean = routed.iter().sum::<u64>() as f64 / routed.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+/// The per-expert size floor pruning must respect:
+/// `max(1, ceil(floor_frac · n_classes))` — the same floor semantics
+/// [`crate::model::mitosis::MitosisSchedule`] enforces in training.
+pub fn size_floor(n_classes: usize, floor_frac: f64) -> usize {
+    ((n_classes as f64 * floor_frac).ceil() as usize).max(1)
+}
+
+/// One adaptation step over `set`, driven by the generation's
+/// per-expert routing counts and per-class hit counts.
+///
+/// Returns the transformed set (uniform padded width, passing
+/// [`ExpertSet::validate`]) plus the [`AdaptDelta`], or `None` when no
+/// well-formed step exists (fewer than three experts, a parent too
+/// small to split, or a child that would land under the size floor).
+/// Deterministic: identical inputs and `seed` produce a bit-identical
+/// set.
+pub fn adapt_set(
+    set: &ExpertSet,
+    routed: &[u64],
+    class_hits: &[u32],
+    policy: &AdaptPolicy,
+    seed: u64,
+) -> Option<(ExpertSet, AdaptDelta)> {
+    let k = set.k();
+    // need a hottest expert to split plus two distinct coldest experts
+    // to merge into one freed slot
+    if k < 3 || routed.len() != k {
+        return None;
+    }
+    let hits = |c: i32| class_hits.get(c as usize).copied().unwrap_or(0) as u64;
+
+    // hottest by routed count (ties → lowest index, for determinism)
+    let split = (0..k)
+        .max_by_key(|&e| (routed[e], std::cmp::Reverse(e)))
+        .unwrap();
+    // two coldest, excluding the parent
+    let mut cold: Vec<usize> = (0..k).filter(|&e| e != split).collect();
+    cold.sort_by_key(|&e| (routed[e], e));
+    let (m1, m2) = (cold[0], cold[1]);
+
+    // ---- mitosis: split the parent into two overlapping children ----
+    let parent: Vec<i32> = set.experts[split].classes().to_vec();
+    let n = parent.len();
+    if n < 2 {
+        return None;
+    }
+    let retention = policy.retention.clamp(0.5, 1.0);
+    let keep = ((n as f64 * retention).ceil() as usize).clamp(1, n);
+    let floor = size_floor(set.n_classes, policy.floor_frac);
+    if keep < floor {
+        return None;
+    }
+    // each child keeps exactly `keep` classes: the `2·keep − n`
+    // hottest go to both (so hot traffic hits whichever twin the gate
+    // picks), the cold remainder alternates — union == parent
+    let shared = (2 * keep).saturating_sub(n);
+    let mut order = parent;
+    order.sort_by_key(|&c| (std::cmp::Reverse(hits(c)), c));
+    // membership as (class, source expert) so the rebuild below can
+    // copy each class's weight row from the old set
+    let mut child_a: Vec<(i32, usize)> = order[..shared].iter().map(|&c| (c, split)).collect();
+    let mut child_b = child_a.clone();
+    for (i, &c) in order[shared..].iter().enumerate() {
+        if i % 2 == 0 {
+            child_a.push((c, split));
+        } else {
+            child_b.push((c, split));
+        }
+    }
+
+    // ---- slot recycling: merge the two coldest into m1's slot ----
+    let mut merged: Vec<(i32, usize)> =
+        set.experts[m1].classes().iter().map(|&c| (c, m1)).collect();
+    for &c in set.experts[m2].classes() {
+        if !set.experts[m1].contains(c as u32) {
+            merged.push((c, m2));
+        }
+    }
+    if merged.is_empty() {
+        return None;
+    }
+
+    let mut members: Vec<Vec<(i32, usize)>> = (0..k)
+        .map(|e| {
+            if e == split {
+                child_a.clone()
+            } else if e == m2 {
+                child_b.clone()
+            } else if e == m1 {
+                merged.clone()
+            } else {
+                set.experts[e].classes().iter().map(|&c| (c, e)).collect()
+            }
+        })
+        .collect();
+
+    // ---- cold-class pruning ----
+    // a replica is prunable when the class's observed hit share is
+    // below `prune_floor` of the uniform share, another replica
+    // survives elsewhere, and the expert stays at or above the floor.
+    // Fresh mitosis children are exempt for this step (their coverage
+    // contract — union == parent — must survive the swap they ride on).
+    let total: u64 = class_hits.iter().map(|&c| c as u64).sum();
+    let is_cold =
+        |c: i32| (hits(c) as f64) * set.n_classes as f64 < total as f64 * policy.prune_floor;
+    let mut coverage = vec![0u32; set.n_classes];
+    for m in &members {
+        for &(c, _) in m {
+            coverage[c as usize] += 1;
+        }
+    }
+    let mut candidates: Vec<(u64, i32, usize)> = Vec::new();
+    for (e, m) in members.iter().enumerate() {
+        if e == split || e == m2 {
+            continue;
+        }
+        for &(c, _) in m {
+            if is_cold(c) {
+                candidates.push((hits(c), c, e));
+            }
+        }
+    }
+    candidates.sort_unstable(); // coldest replicas first, then (class, expert)
+    let mut pruned = 0usize;
+    for (_, c, e) in candidates {
+        if coverage[c as usize] <= 1 || members[e].len() <= floor {
+            continue;
+        }
+        let pos = members[e].iter().position(|&(mc, _)| mc == c).unwrap();
+        members[e].remove(pos);
+        coverage[c as usize] -= 1;
+        pruned += 1;
+    }
+
+    // ---- rebuild at a uniform padded width ----
+    let d = set.dim();
+    let p = members
+        .iter()
+        .map(|m| m.len())
+        .max()
+        .unwrap()
+        .next_multiple_of(8);
+    let experts: Vec<SparseExpert> = members
+        .iter()
+        .map(|m| {
+            let valid = m.len();
+            let mut w = Matrix::zeros(p, d);
+            let mut ids = Vec::with_capacity(p);
+            for (r, &(c, src)) in m.iter().enumerate() {
+                let sr = set.experts[src]
+                    .classes()
+                    .iter()
+                    .position(|&x| x == c)
+                    .expect("source expert holds the class it contributed");
+                w.row_mut(r).copy_from_slice(set.experts[src].weights.row(sr));
+                ids.push(c);
+            }
+            ids.resize(p, -1);
+            SparseExpert::new(w, ids, valid)
+        })
+        .collect();
+
+    // ---- gate repair ----
+    // child A keeps the parent's row; child B duplicates it plus a
+    // deterministic seeded jitter (routing between the twins stays
+    // well-defined); the merged slot takes the mean of the retired rows
+    let mut gate = Matrix::zeros(k, d);
+    for e in 0..k {
+        gate.row_mut(e).copy_from_slice(set.gate.row(e));
+    }
+    let mut rng = Rng::new(seed);
+    let noise = rng.normal_vec(d, policy.gate_sigma as f32);
+    for (i, v) in gate.row_mut(m2).iter_mut().enumerate() {
+        *v = set.gate.row(split)[i] + noise[i];
+    }
+    for (i, v) in gate.row_mut(m1).iter_mut().enumerate() {
+        *v = 0.5 * (set.gate.row(m1)[i] + set.gate.row(m2)[i]);
+    }
+
+    let next = ExpertSet { gate, experts, n_classes: set.n_classes };
+    if next.validate().is_err() {
+        // a bug upstream, not a policy outcome — refuse to install
+        return None;
+    }
+    Some((
+        next,
+        AdaptDelta { split, twin: m2, merged: (m1, m2), shared, pruned },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counters(set: &ExpertSet, hot_expert: usize) -> (Vec<u64>, Vec<u32>) {
+        let k = set.k();
+        let mut routed = vec![10u64; k];
+        routed[hot_expert] = 10_000;
+        // every class of the hot expert is hot; everything else cold
+        let mut hits = vec![0u32; set.n_classes];
+        for &c in set.experts[hot_expert].classes() {
+            hits[c as usize] = 100;
+        }
+        (routed, hits)
+    }
+
+    #[test]
+    fn step_is_k_invariant_and_valid() {
+        let mut rng = Rng::new(11);
+        let set = ExpertSet::synthetic(256, 16, 4, 1.3, &mut rng);
+        let (routed, hits) = counters(&set, 1);
+        let policy = AdaptPolicy::default();
+        let (next, delta) = adapt_set(&set, &routed, &hits, &policy, 7).expect("step");
+        assert_eq!(next.k(), set.k());
+        assert_eq!(next.dim(), set.dim());
+        assert_eq!(next.n_classes, set.n_classes);
+        next.validate().expect("transformed set validates");
+        assert_eq!(delta.split, 1);
+        assert_ne!(delta.twin, delta.split);
+        assert_ne!(delta.merged.0, delta.split);
+    }
+
+    #[test]
+    fn step_is_deterministic_per_seed() {
+        let mut rng = Rng::new(12);
+        let set = ExpertSet::synthetic(128, 8, 4, 1.2, &mut rng);
+        let (routed, hits) = counters(&set, 0);
+        let policy = AdaptPolicy::default();
+        let (a, _) = adapt_set(&set, &routed, &hits, &policy, 3).unwrap();
+        let (b, _) = adapt_set(&set, &routed, &hits, &policy, 3).unwrap();
+        for e in 0..a.k() {
+            assert_eq!(a.experts[e].classes(), b.experts[e].classes());
+            assert_eq!(a.gate.row(e), b.gate.row(e), "gate row {e}");
+        }
+        // a different seed jitters the twin's gate row differently
+        let (c, d) = adapt_set(&set, &routed, &hits, &policy, 4).unwrap();
+        assert_ne!(a.gate.row(d.twin), c.gate.row(d.twin));
+    }
+
+    #[test]
+    fn too_few_experts_refuses() {
+        let mut rng = Rng::new(13);
+        let set = ExpertSet::synthetic(64, 8, 2, 1.0, &mut rng);
+        let routed = vec![100u64, 1];
+        let hits = vec![1u32; 64];
+        assert!(adapt_set(&set, &routed, &hits, &AdaptPolicy::default(), 0).is_none());
+    }
+}

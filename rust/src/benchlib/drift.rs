@@ -1,0 +1,221 @@
+//! Drift workload scenarios: deterministic generators of *shifting*
+//! class popularity, used to exercise the serve-time adaptation plane
+//! (`dss bench --drift <scenario>` and the adaptation e2e tests).
+//!
+//! A [`DriftGen`] replays a Zipf-shaped class popularity whose
+//! rank→class mapping changes over the run:
+//!
+//! * [`DriftScenario::Shift`] — at the halfway mark the head of the
+//!   distribution rotates onto formerly-cold classes (a step change);
+//! * [`DriftScenario::FlashCrowd`] — after the halfway mark most
+//!   traffic collapses onto a small crowd of previously-tail classes;
+//! * [`DriftScenario::Diurnal`] — popularity blends smoothly from one
+//!   ordering into its reverse and back (one full "day" per run).
+//!
+//! Everything is driven by one seeded [`Rng`], so a scenario replay is
+//! bit-identical per `(scenario, n_classes, total, seed)` — the
+//! property the drift bench and tests key on.  Queries are synthesized
+//! *anchored on the target class's weight row* ([`class_query`]), so
+//! ground truth is known and top-k recall is measurable without
+//! labels.
+
+use std::str::FromStr;
+
+use crate::sparse::ExpertSet;
+use crate::util::rng::{Rng, ZipfSampler};
+
+/// Which popularity-shift shape to replay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftScenario {
+    Shift,
+    FlashCrowd,
+    Diurnal,
+}
+
+impl FromStr for DriftScenario {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "shift" => Ok(Self::Shift),
+            "flash-crowd" => Ok(Self::FlashCrowd),
+            "diurnal" => Ok(Self::Diurnal),
+            other => Err(format!(
+                "unknown drift scenario '{other}' (expected shift | flash-crowd | diurnal)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for DriftScenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Shift => "shift",
+            Self::FlashCrowd => "flash-crowd",
+            Self::Diurnal => "diurnal",
+        })
+    }
+}
+
+/// Deterministic shifting-popularity class stream.
+pub struct DriftGen {
+    scenario: DriftScenario,
+    zipf: ZipfSampler,
+    /// phase-A rank→class mapping (a seeded permutation)
+    perm_a: Vec<u32>,
+    /// phase-B rank→class mapping (scenario-dependent)
+    perm_b: Vec<u32>,
+    /// flash-crowd target classes (tail classes under phase A)
+    crowd: Vec<u32>,
+    total: usize,
+    issued: usize,
+    rng: Rng,
+}
+
+impl DriftGen {
+    /// A generator for `total` queries over `n_classes` classes.
+    /// Identical arguments produce an identical class sequence.
+    pub fn new(scenario: DriftScenario, n_classes: usize, total: usize, seed: u64) -> Self {
+        assert!(n_classes > 0 && total > 0);
+        let mut rng = Rng::new(seed);
+        let mut perm_a: Vec<u32> = (0..n_classes as u32).collect();
+        rng.shuffle(&mut perm_a);
+        let half = n_classes / 2;
+        let perm_b: Vec<u32> = match scenario {
+            // step change: the head ranks land on what phase A kept cold
+            DriftScenario::Shift => perm_a[half..]
+                .iter()
+                .chain(perm_a[..half].iter())
+                .copied()
+                .collect(),
+            DriftScenario::FlashCrowd => perm_a.clone(),
+            DriftScenario::Diurnal => perm_a.iter().rev().copied().collect(),
+        };
+        let crowd_n = (n_classes / 64).max(4).min(n_classes);
+        let crowd = perm_a[n_classes - crowd_n..].to_vec();
+        Self {
+            scenario,
+            zipf: ZipfSampler::new(n_classes, 1.1),
+            perm_a,
+            perm_b,
+            crowd,
+            total,
+            issued: 0,
+            rng,
+        }
+    }
+
+    /// Total queries this generator was sized for.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Queries issued so far.
+    pub fn issued(&self) -> usize {
+        self.issued
+    }
+
+    /// The next target class of the drifting workload.
+    pub fn next_class(&mut self) -> u32 {
+        let t = self.issued as f64 / self.total as f64;
+        self.issued += 1;
+        let rank = self.zipf.sample(&mut self.rng);
+        match self.scenario {
+            DriftScenario::Shift => {
+                if t < 0.5 {
+                    self.perm_a[rank]
+                } else {
+                    self.perm_b[rank]
+                }
+            }
+            DriftScenario::FlashCrowd => {
+                if t >= 0.5 && self.rng.f64() < 0.8 {
+                    self.crowd[rank % self.crowd.len()]
+                } else {
+                    self.perm_a[rank]
+                }
+            }
+            DriftScenario::Diurnal => {
+                // phase-B weight traces one full cosine "day": 0 → 1 → 0
+                let w = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * t).cos());
+                if self.rng.f64() < w {
+                    self.perm_b[rank]
+                } else {
+                    self.perm_a[rank]
+                }
+            }
+        }
+    }
+}
+
+/// Synthesize a query anchored on `class`: its first replica's weight
+/// row, amplified, plus seeded noise.  The anchor makes `class` the
+/// ground-truth answer (it maximizes its own logit by construction),
+/// so top-k recall against the returned ids is measurable directly.
+pub fn class_query(set: &ExpertSet, class: u32, noise: f32, rng: &mut Rng) -> Vec<f32> {
+    let d = set.dim();
+    let mut h = vec![0f32; d];
+    for e in &set.experts {
+        if let Some(r) = e.classes().iter().position(|&c| c == class as i32) {
+            let w = e.weights.row(r);
+            for i in 0..d {
+                h[i] = w[i] * 4.0;
+            }
+            break;
+        }
+    }
+    let n = rng.normal_vec(d, noise);
+    for i in 0..d {
+        h[i] += n[i];
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn classes(scenario: DriftScenario, seed: u64) -> Vec<u32> {
+        let mut g = DriftGen::new(scenario, 128, 400, seed);
+        (0..400).map(|_| g.next_class()).collect()
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        for s in [DriftScenario::Shift, DriftScenario::FlashCrowd, DriftScenario::Diurnal] {
+            assert_eq!(classes(s, 9), classes(s, 9), "{s} not deterministic");
+            assert_ne!(classes(s, 9), classes(s, 10), "{s} ignores its seed");
+        }
+    }
+
+    #[test]
+    fn shift_changes_the_head() {
+        let cs = classes(DriftScenario::Shift, 3);
+        let count = |half: &[u32], c: u32| half.iter().filter(|&&x| x == c).count();
+        let (a, b) = cs.split_at(200);
+        // the phase-A top class loses its dominance after the shift
+        let top_a = *a.iter().max_by_key(|&&c| count(a, c)).unwrap();
+        assert!(count(a, top_a) > count(b, top_a), "head did not shift");
+    }
+
+    #[test]
+    fn flash_crowd_concentrates() {
+        let mut g = DriftGen::new(DriftScenario::FlashCrowd, 128, 400, 4);
+        let crowd = g.crowd.clone();
+        let cs: Vec<u32> = (0..400).map(|_| g.next_class()).collect();
+        let in_crowd =
+            |half: &[u32]| half.iter().filter(|c| crowd.contains(c)).count() as f64 / 200.0;
+        let (a, b) = cs.split_at(200);
+        let (pre, post) = (in_crowd(a), in_crowd(b));
+        assert!(post > pre + 0.3, "no flash crowd: {pre} vs {post}");
+    }
+
+    #[test]
+    fn scenario_parses_and_prints() {
+        for s in ["shift", "flash-crowd", "diurnal"] {
+            let d: DriftScenario = s.parse().unwrap();
+            assert_eq!(d.to_string(), s);
+        }
+        assert!("weekly".parse::<DriftScenario>().is_err());
+    }
+}

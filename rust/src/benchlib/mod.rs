@@ -8,6 +8,8 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
+pub mod drift;
+
 /// One measured series.
 #[derive(Clone, Debug)]
 pub struct Measurement {
@@ -147,11 +149,25 @@ pub struct BenchRow {
 pub struct BenchReport {
     pub name: String,
     pub rows: Vec<BenchRow>,
+    /// Named scalar metrics riding alongside the timing rows (drift
+    /// recall/skew, mitosis memory ratios, …); serialized as a
+    /// `"metrics"` object when non-empty, so existing trail consumers
+    /// are unaffected.
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl BenchReport {
     pub fn new(name: &str) -> Self {
-        Self { name: name.to_string(), rows: Vec::new() }
+        Self { name: name.to_string(), rows: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Attach (or overwrite) a named scalar metric.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        if let Some(m) = self.metrics.iter_mut().find(|(n, _)| n == name) {
+            m.1 = value;
+        } else {
+            self.metrics.push((name.to_string(), value));
+        }
     }
 
     pub fn push(&mut self, engine: &str, shape: &str, batch: usize, shards: usize, median_ns: f64) {
@@ -165,7 +181,7 @@ impl BenchReport {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("bench", Json::from(self.name.as_str())),
             (
                 "rows",
@@ -185,7 +201,19 @@ impl BenchReport {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if !self.metrics.is_empty() {
+            fields.push((
+                "metrics",
+                Json::obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), Json::from(*v)))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Write `BENCH_<name>.json`-style output to `path`.
@@ -298,6 +326,22 @@ mod tests {
         assert_eq!(rows[0].get("shards").unwrap().as_usize().unwrap(), 4);
         let q = rows[0].get("qps").unwrap().as_f64().unwrap();
         assert!((q - qps(1500.0)).abs() < 1e-6);
+        // no metrics attached → no "metrics" key (trail stays diffable
+        // against pre-metrics runs)
+        assert!(parsed.get("metrics").is_none());
+    }
+
+    #[test]
+    fn bench_report_metrics_serialize() {
+        let mut r = BenchReport::new("drift");
+        r.metric("recall_pre", 0.5);
+        r.metric("recall_post", 0.75);
+        r.metric("recall_pre", 0.625); // overwrite, not duplicate
+        let parsed = crate::util::json::Json::parse(&r.to_json().to_string()).unwrap();
+        let m = parsed.get("metrics").unwrap();
+        assert_eq!(m.get("recall_pre").unwrap().as_f64().unwrap(), 0.625);
+        assert_eq!(m.get("recall_post").unwrap().as_f64().unwrap(), 0.75);
+        assert_eq!(r.metrics.len(), 2);
     }
 
     #[test]

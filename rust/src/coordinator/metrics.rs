@@ -18,7 +18,7 @@
 //! mixes generations), and re-binds the per-shard counters when the
 //! swap changed the shard topology.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -59,6 +59,17 @@ pub struct Metrics {
     /// per-expert routing counts at the last swap — the baseline that
     /// makes [`Metrics::routed_counts_generation`] generation-local
     gen_base: Mutex<Vec<u64>>,
+    /// per-class served-hit counts (one `u32` per vocabulary class,
+    /// fixed at construction — `n_classes` is pinned across engine
+    /// generations by `Coordinator::swap_engine`, exactly like the
+    /// expert count).  Updated with relaxed adds from `TopKBuf` rows on
+    /// the flush path; empty when the plane was built without a class
+    /// topology (`with_shards`), in which case recording is a no-op.
+    class_hits: Vec<AtomicU32>,
+    /// per-class counts at the last swap — the baseline that makes
+    /// [`Metrics::class_hits_generation`] (the adapt-plane input)
+    /// generation-local, mirroring `gen_base`
+    gen_base_classes: Mutex<Vec<u32>>,
     /// per-shard query/batch counters (len = shard count; 1 when
     /// unsharded; re-bound by [`Metrics::on_swap`] when the topology
     /// changes).  One mutex over both vectors: a record's bounds check
@@ -78,12 +89,24 @@ impl Metrics {
         Self::with_shards(k, 1)
     }
 
-    /// Metrics plane for `k` experts executing across `shards` shards.
+    /// Metrics plane for `k` experts executing across `shards` shards,
+    /// without per-class accounting (`record_class_hits` is a no-op).
     pub fn with_shards(k: usize, shards: usize) -> Self {
+        Self::with_topology(k, shards, 0)
+    }
+
+    /// Metrics plane for the full model topology: `k` experts across
+    /// `shards` shards over an `n_classes` vocabulary.  Per-class hit
+    /// accounting needs the class width up front — the counter vector
+    /// is sized once and never reallocated, so the flush path can
+    /// record into it with relaxed atomics and no locks.
+    pub fn with_topology(k: usize, shards: usize, n_classes: usize) -> Self {
         let shards = shards.max(1);
         Self {
             per_expert: (0..k).map(|_| AtomicU64::new(0)).collect(),
             gen_base: Mutex::new(vec![0; k]),
+            class_hits: (0..n_classes).map(|_| AtomicU32::new(0)).collect(),
+            gen_base_classes: Mutex::new(vec![0; n_classes]),
             shard_counters: Mutex::new(ShardCounters {
                 queries: vec![0; shards],
                 batches: vec![0; shards],
@@ -99,6 +122,24 @@ impl Metrics {
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Record one query's served top-k class ids (one `TopKBuf` row,
+    /// truncated to the query's own `k`).  Relaxed adds into the fixed
+    /// counter vector — no locks, no allocation, so the warm batched
+    /// flush path stays zero-allocation with accounting enabled
+    /// (proven in `tests/query_alloc.rs`).  No-op when the plane was
+    /// built without a class topology; out-of-range ids (an engine
+    /// wider than the topology the plane was bound to) are dropped.
+    pub fn record_class_hits(&self, ids: &[u32]) {
+        if self.class_hits.is_empty() {
+            return;
+        }
+        for &id in ids {
+            if let Some(c) = self.class_hits.get(id as usize) {
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     /// One flushed batch of `size` queries on `shard`.
@@ -132,6 +173,7 @@ impl Metrics {
         self.swaps.fetch_add(1, Ordering::Relaxed);
         self.engine_epoch.store(epoch, Ordering::Relaxed);
         *self.gen_base.lock().unwrap() = self.routed_counts();
+        *self.gen_base_classes.lock().unwrap() = self.class_hits();
         let mut sc = self.shard_counters.lock().unwrap();
         if sc.queries.len() != n_shards {
             sc.queries.clear();
@@ -188,6 +230,29 @@ impl Metrics {
             .collect()
     }
 
+    /// Raw per-class served-hit counts, cumulative across generations.
+    /// Empty when the plane was built without a class topology.
+    pub fn class_hits(&self) -> Vec<u32> {
+        self.class_hits
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Per-class served-hit counts observed *this engine generation*
+    /// (since the last [`on_swap`](Self::on_swap)) — the input to
+    /// serve-time expert adaptation (`adapt::Adapter`): mitosis and
+    /// pruning decisions based on these never mix pre- and post-swap
+    /// traffic, and an adapt swap rebases them for every consumer.
+    pub fn class_hits_generation(&self) -> Vec<u32> {
+        let base = self.gen_base_classes.lock().unwrap();
+        self.class_hits
+            .iter()
+            .zip(base.iter())
+            .map(|(c, &b)| c.load(Ordering::Relaxed).saturating_sub(b))
+            .collect()
+    }
+
     /// Empirical utilization u_k (paper §2.3) from routing counts.
     pub fn utilization(&self) -> Vec<f64> {
         let counts = self.routed_counts();
@@ -206,6 +271,16 @@ impl Metrics {
             let sc = self.shard_counters.lock().unwrap();
             (sc.queries.clone(), sc.batches.clone())
         };
+        // the raw class vector can be vocabulary-sized (10k+): export
+        // aggregates here; the adapt plane reads the full vector
+        // through `class_hits_generation()` directly
+        let (class_hits_total, classes_hit) = {
+            let gen = self.class_hits_generation();
+            (
+                gen.iter().map(|&c| c as u64).sum(),
+                gen.iter().filter(|&&c| c > 0).count(),
+            )
+        };
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -220,6 +295,8 @@ impl Metrics {
             engine_epoch: self.engine_epoch.load(Ordering::Relaxed),
             per_expert: self.routed_counts(),
             per_expert_generation: self.routed_counts_generation(),
+            class_hits_total,
+            classes_hit,
             per_shard,
             per_shard_batches,
             queue: HistoSnapshot::of(&self.queue_latency.lock().unwrap()),
@@ -425,6 +502,12 @@ pub struct MetricsSnapshot {
     pub per_expert: Vec<u64>,
     /// routing counts since the last swap (the re-plan input)
     pub per_expert_generation: Vec<u64>,
+    /// total served top-k class hits this generation (aggregate of the
+    /// adapt-plane counters; the raw vector is vocabulary-sized and
+    /// stays behind `Metrics::class_hits_generation`)
+    pub class_hits_total: u64,
+    /// distinct classes served at least once this generation
+    pub classes_hit: usize,
     pub per_shard: Vec<u64>,
     pub per_shard_batches: Vec<u64>,
     pub queue: HistoSnapshot,
@@ -454,6 +537,8 @@ impl MetricsSnapshot {
             ("engine_epoch", Json::Num(self.engine_epoch as f64)),
             ("per_expert", arr_u64(&self.per_expert)),
             ("per_expert_generation", arr_u64(&self.per_expert_generation)),
+            ("class_hits_total", Json::Num(self.class_hits_total as f64)),
+            ("classes_hit", Json::Num(self.classes_hit as f64)),
             ("per_shard", arr_u64(&self.per_shard)),
             ("per_shard_batches", arr_u64(&self.per_shard_batches)),
             ("queue_latency", self.queue.to_json()),
@@ -592,6 +677,36 @@ mod tests {
         assert_eq!(reps[0].get("label").unwrap().as_str().unwrap(), "s0r0@a");
         assert_eq!(reps[0].get("queries").unwrap().as_usize().unwrap(), 10);
         assert_eq!(jf.get("rtt").unwrap().get("count").unwrap().as_usize().unwrap(), 2);
+    }
+
+    /// Class-hit accounting: counts accumulate per served id, rebase on
+    /// swap exactly like the per-expert counters, drop out-of-range
+    /// ids, and no-op on a plane built without a class topology.
+    #[test]
+    fn class_hit_accounting_rebases_on_swap() {
+        let m = Metrics::with_topology(2, 1, 4);
+        m.record_class_hits(&[0, 2, 2]);
+        m.record_class_hits(&[3]);
+        m.record_class_hits(&[9]); // out of range: dropped, not panicked
+        assert_eq!(m.class_hits(), vec![1, 0, 2, 1]);
+        assert_eq!(m.class_hits_generation(), vec![1, 0, 2, 1]);
+        let s = m.snapshot();
+        assert_eq!(s.class_hits_total, 4);
+        assert_eq!(s.classes_hit, 3);
+        // swap: cumulative survives, the generation view rebases
+        m.on_swap(1, 1);
+        assert_eq!(m.class_hits(), vec![1, 0, 2, 1]);
+        assert_eq!(m.class_hits_generation(), vec![0, 0, 0, 0]);
+        m.record_class_hits(&[1, 1]);
+        assert_eq!(m.class_hits_generation(), vec![0, 2, 0, 0]);
+        let j = Json::parse(&m.snapshot().render()).unwrap();
+        assert_eq!(j.get("class_hits_total").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("classes_hit").unwrap().as_usize().unwrap(), 1);
+        // a class-less plane ignores records entirely
+        let m = Metrics::with_shards(2, 1);
+        m.record_class_hits(&[0, 1]);
+        assert!(m.class_hits().is_empty());
+        assert_eq!(m.snapshot().class_hits_total, 0);
     }
 
     #[test]

@@ -125,7 +125,13 @@ impl Coordinator {
             engine.name()
         );
         let ingress = Arc::new(BoundedQueue::new(cfg.queue_capacity));
-        let metrics = Arc::new(Metrics::with_shards(engine.k_experts(), n_shards));
+        // full topology (incl. n_classes) so the flush path can do
+        // per-class hit accounting — the adapt plane's input
+        let metrics = Arc::new(Metrics::with_topology(
+            engine.k_experts(),
+            n_shards,
+            engine.n_classes(),
+        ));
         let stop = Arc::new(AtomicBool::new(false));
         let cfg_shards = cfg.shards;
         let cell = EngineCell::new(engine);
@@ -429,6 +435,12 @@ fn dispatch_loop(
                     for (i, q) in batch.into_iter().enumerate() {
                         let traced = q.trace != 0;
                         let t_m = if traced { obs::trace::now_ns() } else { 0 };
+                        // per-class hit accounting on exactly what this
+                        // query is served (its own k, not the batch
+                        // kmax) — a borrowed slice of the arena row, so
+                        // the warm path stays zero-allocation
+                        let (ids, _) = s.out.row(i);
+                        metrics.record_class_hits(&ids[..q.k.min(ids.len())]);
                         let mut r = s.out.row_vec(i);
                         r.truncate(q.k);
                         if traced {

@@ -31,6 +31,15 @@
 //! never loses or duplicates work.  With no sibling left the error
 //! surfaces as a typed [`QueryError`] (`Timeout` or `Transport`)
 //! through the engine's `anyhow` path.
+//!
+//! **Reconnect with backoff.**  A poisoned connection is re-dialed
+//! under capped exponential backoff with deterministic jitter
+//! ([`FabricOpts::redial_base`] / [`FabricOpts::redial_cap`]): while a
+//! replica is inside its backoff window, requests fail fast *without
+//! dialing* — a dead worker costs one timed-out dial per window, not
+//! per request, and the fast failure lets `exec_shard` move to a
+//! sibling immediately.  A dial that lands after failures emits a
+//! typed `worker_reconnect` event and resets the window.
 
 use std::io;
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
@@ -60,6 +69,11 @@ pub struct FabricOpts {
     /// treated as a replica failure (poison + failover), because a
     /// partially-read frame desynchronizes the connection.
     pub io_timeout: Duration,
+    /// First-retry delay after a failed re-dial of a poisoned
+    /// connection; doubles per consecutive failure.
+    pub redial_base: Duration,
+    /// Ceiling on the backoff delay (jitter rides on top, up to 25%).
+    pub redial_cap: Duration,
 }
 
 impl Default for FabricOpts {
@@ -67,8 +81,38 @@ impl Default for FabricOpts {
         Self {
             connect_timeout: Duration::from_secs(1),
             io_timeout: Duration::from_secs(10),
+            redial_base: Duration::from_millis(50),
+            redial_cap: Duration::from_secs(2),
         }
     }
+}
+
+/// Backoff bookkeeping of one replica connection.  Locked only while
+/// the owning connection's stream mutex is already held (fixed order),
+/// so it never contends with the hot path.
+#[derive(Default)]
+struct RedialState {
+    /// consecutive failed dials since the last success
+    failures: u32,
+    /// no dial may be attempted before this instant
+    next_attempt: Option<Instant>,
+}
+
+/// Capped exponential backoff with deterministic jitter: `base ·
+/// 2^(n−1)` capped at `redial_cap`, plus up to 25% jitter from an FNV
+/// fold of `(label, n)` — stable per (replica, attempt) so tests and
+/// replays reproduce, yet decorrelated across replicas so a fleet-wide
+/// restart doesn't thundering-herd one instant.
+fn redial_delay(opts: &FabricOpts, label: &str, failures: u32) -> Duration {
+    let base = opts.redial_base.max(Duration::from_millis(1));
+    let exp = failures.saturating_sub(1).min(6);
+    let d = base.saturating_mul(1 << exp).min(opts.redial_cap.max(base));
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in label.bytes().chain(failures.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    d + Duration::from_nanos(h % (d.as_nanos() as u64 / 4).max(1))
 }
 
 /// Marker error: the worker refused our offered protocol version
@@ -86,8 +130,9 @@ impl std::fmt::Display for ProtoRefused {
 
 impl std::error::Error for ProtoRefused {}
 
-/// One worker connection: lazily re-dialed after poisoning, serialized
-/// per round-trip by the stream mutex (which is also what makes the
+/// One worker connection: re-dialed after poisoning under capped
+/// exponential backoff (see [`RedialState`]), serialized per
+/// round-trip by the stream mutex (which is also what makes the
 /// `outstanding` gauge a meaningful backpressure signal).
 struct ReplicaConn {
     addr: String,
@@ -101,6 +146,8 @@ struct ReplicaConn {
     /// protocol version negotiated at the last successful handshake
     /// (0 before the first one)
     proto: AtomicU64,
+    /// reconnect backoff (locked after `stream`, never alone)
+    redial: Mutex<RedialState>,
 }
 
 /// Pick the replica with the fewest in-flight round-trips, excluding
@@ -180,6 +227,7 @@ impl RemoteShardEngine {
                     stream: Mutex::new(None),
                     outstanding: AtomicUsize::new(0),
                     proto: AtomicU64::new(0),
+                    redial: Mutex::new(RedialState::default()),
                 });
             }
             conns.push(replicas);
@@ -314,18 +362,47 @@ impl RemoteShardEngine {
 
     /// One pipelined round-trip on one replica connection: write every
     /// request, read the responses in order, validate correlation ids.
-    /// Any failure poisons the connection (dropped; re-dialed lazily on
-    /// next use) — a partial exchange cannot be resumed mid-frame.
+    /// Any failure poisons the connection (dropped; re-dialed on next
+    /// use under the backoff in [`RedialState`]) — a partial exchange
+    /// cannot be resumed mid-frame.
     fn exec_on(&self, conn: &ReplicaConn, reqs: &[Frame]) -> anyhow::Result<Vec<Frame>> {
         let mut guard = conn.stream.lock().unwrap();
         if guard.is_none() {
+            let mut redial = conn.redial.lock().unwrap();
+            if let Some(at) = redial.next_attempt {
+                if Instant::now() < at {
+                    // fail fast without dialing: exec_shard moves to a
+                    // sibling immediately instead of blocking a worker
+                    // thread on a connect timeout per request
+                    return Err(anyhow::Error::new(QueryError::Transport(format!(
+                        "{}: in redial backoff ({} failures)",
+                        conn.label, redial.failures
+                    ))));
+                }
+            }
             match self.dial(conn) {
-                Ok(s) => *guard = Some(s),
+                Ok(s) => {
+                    if redial.failures > 0 {
+                        obs::event::info(
+                            "worker_reconnect",
+                            vec![
+                                ("label", conn.label.as_str().into()),
+                                ("shard", conn.shard.into()),
+                                ("attempts", Json::Num((redial.failures + 1) as f64)),
+                            ],
+                        );
+                    }
+                    *redial = RedialState::default();
+                    *guard = Some(s);
+                }
                 Err(e) => {
+                    redial.failures = redial.failures.saturating_add(1);
+                    let delay = redial_delay(&self.opts, &conn.label, redial.failures);
+                    redial.next_attempt = Some(Instant::now() + delay);
                     return Err(e.context(QueryError::Transport(format!(
-                        "{}: redial failed",
-                        conn.label
-                    ))))
+                        "{}: redial failed (attempt {}, next in {:?})",
+                        conn.label, redial.failures, delay
+                    ))));
                 }
             }
         }
@@ -649,6 +726,9 @@ impl SoftmaxEngine for RemoteShardEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fabric::worker::ShardWorker;
+    use crate::shard::ShardPlan;
+    use crate::util::rng::Rng;
 
     fn conn(slot: usize, outstanding: usize) -> ReplicaConn {
         ReplicaConn {
@@ -659,6 +739,7 @@ mod tests {
             stream: Mutex::new(None),
             outstanding: AtomicUsize::new(outstanding),
             proto: AtomicU64::new(PROTO_VERSION),
+            redial: Mutex::new(RedialState::default()),
         }
     }
 
@@ -672,6 +753,103 @@ mod tests {
         // everything else loaded: the failed one is still excluded
         let replicas = vec![conn(0, 0), conn(1, 5)];
         assert_eq!(least_loaded(&replicas, Some(0)), 1);
+    }
+
+    #[test]
+    fn redial_delay_grows_caps_and_reproduces() {
+        let opts = FabricOpts {
+            redial_base: Duration::from_millis(50),
+            redial_cap: Duration::from_millis(400),
+            ..Default::default()
+        };
+        let d1 = redial_delay(&opts, "s0r0@x", 1);
+        let d3 = redial_delay(&opts, "s0r0@x", 3);
+        // base·2^(n−1) with ≤25% jitter on top
+        assert!(d1 >= Duration::from_millis(50) && d1 < Duration::from_micros(62_500));
+        assert!(d3 >= Duration::from_millis(200) && d3 < Duration::from_micros(250_000));
+        // capped: attempt 30 stays within cap + 25%
+        let d30 = redial_delay(&opts, "s0r0@x", 30);
+        assert!(d30 <= Duration::from_millis(500));
+        // deterministic per (label, attempt), decorrelated across labels
+        assert_eq!(d3, redial_delay(&opts, "s0r0@x", 3));
+        assert_ne!(redial_delay(&opts, "s0r0@x", 1), redial_delay(&opts, "s0r1@y", 1));
+    }
+
+    /// End-to-end backoff behaviour against a worker that drops the
+    /// first two dials: attempt 1 dials and fails, attempt 2 inside
+    /// the window fails fast *without* dialing (it must not consume
+    /// the listener's second doomed accept — if it dialed, attempt 3
+    /// would land on the live worker early and the error texts below
+    /// would not line up), attempt 3 dials and fails, attempt 4 after
+    /// the window reconnects and resets the failure counter.
+    #[test]
+    fn redial_backs_off_then_reconnects() {
+        let mut rng = Rng::new(5);
+        let set = ExpertSet::synthetic(64, 8, 2, 1.2, &mut rng);
+        let plan = ShardPlan::greedy(&set, 1);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let set2 = set.clone();
+        let plan2 = plan.clone();
+        let accept = std::thread::spawn(move || {
+            // accept-then-drop twice: the client's handshake read sees
+            // EOF, so each of its first two dials fails cleanly
+            for _ in 0..2 {
+                drop(listener.accept().unwrap());
+            }
+            ShardWorker::spawn_for(set2, &plan2, 0, listener).unwrap()
+        });
+        let label = format!("s0r0@{addr}");
+        let engine = RemoteShardEngine {
+            rplan: ReplicaPlan::uniform(plan.clone(), 1),
+            gate: set.gate.clone(),
+            expected: vec![plan.experts_on(0)],
+            conns: vec![vec![ReplicaConn {
+                addr,
+                shard: 0,
+                slot: 0,
+                label: label.clone(),
+                stream: Mutex::new(None),
+                outstanding: AtomicUsize::new(0),
+                proto: AtomicU64::new(0),
+                redial: Mutex::new(RedialState::default()),
+            }]],
+            metrics: Arc::new(FabricMetrics::new(vec![label])),
+            next_id: AtomicU64::new(1),
+            opts: FabricOpts {
+                io_timeout: Duration::from_secs(2),
+                redial_base: Duration::from_millis(150),
+                redial_cap: Duration::from_secs(1),
+                ..Default::default()
+            },
+            n_classes: 64,
+            dim: 8,
+            k_experts: 2,
+            flops: 0,
+        };
+        let h = rng.normal_vec(8, 1.0);
+        let mut out = TopKBuf::new();
+        let attempt = |out: &mut TopKBuf| {
+            engine.run_expert_batch(0, MatrixView::new(&h, 1, 8), &[1.0], 5, out)
+        };
+        // 1: dial consumed the first doomed accept
+        let e1 = attempt(&mut out).unwrap_err();
+        assert!(format!("{e1:#}").contains("redial failed"), "{e1:#}");
+        // 2: immediately inside the 150ms (+jitter ≤37.5ms) window —
+        //    fails fast, no dial
+        let e2 = attempt(&mut out).unwrap_err();
+        assert!(format!("{e2:#}").contains("backoff"), "{e2:#}");
+        // 3: past window 1 — dial consumed the second doomed accept
+        std::thread::sleep(Duration::from_millis(250));
+        let e3 = attempt(&mut out).unwrap_err();
+        assert!(format!("{e3:#}").contains("redial failed"), "{e3:#}");
+        // 4: past window 2 (≤300ms +jitter) — the worker is live now
+        std::thread::sleep(Duration::from_millis(450));
+        attempt(&mut out).expect("reconnect to live worker");
+        assert_eq!(out.rows(), 1);
+        assert_eq!(engine.conns[0][0].redial.lock().unwrap().failures, 0);
+        let mut worker = accept.join().unwrap();
+        worker.stop();
     }
 
     #[test]

@@ -25,6 +25,10 @@
 //!   the observability plane ([`obs`]: sampled per-query stage spans
 //!   that follow a query across the fabric, structured JSONL events,
 //!   and the live scrape surface behind `dss top` / `dss trace`),
+//!   the serve-time adaptation plane ([`adapt`]: an [`adapt::Adapter`]
+//!   watches per-class hit counters and applies online expert mitosis
+//!   and cold-class pruning as live engine swaps, with drift scenarios
+//!   in [`benchlib::drift`] to measure it),
 //!   the PJRT runtime that executes the AOT
 //!   artifacts (`pjrt` feature), native fallback engines, all paper
 //!   baselines (full softmax, SVD-softmax, D-softmax), FLOPs
@@ -81,6 +85,7 @@
 //! re-balanced engine live, without pausing serving or mixing
 //! generations inside a batch.
 
+pub mod adapt;
 pub mod artifacts;
 pub mod benchlib;
 pub mod coordinator;

@@ -22,8 +22,10 @@ use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::Duration;
 
+use ds_softmax::adapt::{expert_skew, AdaptPolicy, Adapter};
 use ds_softmax::artifacts::{artifacts_root, Manifest};
 use ds_softmax::benchlib;
+use ds_softmax::benchlib::drift::{self, DriftGen, DriftScenario};
 use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, FabricMetrics, NativeBatchEngine};
 use ds_softmax::fabric::{
     checksum_topk, FabricClient, FabricFront, FabricOpts, RemoteShardEngine, ShardWorker,
@@ -54,6 +56,15 @@ USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|bench> [option
             weighted plan from observed counts and hot-swap the
             engine; each installed plan is written generation-stamped
             to --shard-plan-out)
+           --adapt-split-skew R --adapt-interval N [--adapt-min-ms MS]
+           [--adapt-prune-floor F] [--adapt-retention F]
+           [--adapt-floor-frac F] [--adapt-seed S]
+           (serve-time expert adaptation: when per-expert routing skew
+            max/mean >= R after N routed queries this generation, split
+            the hottest expert into two overlapping children, merge the
+            two coldest, prune cold class replicas, and hot-swap the
+            engine; mutually exclusive with --replan-* — one expert-set
+            mutator per serve)
            --workers a:p,b:p,…   scatter experts to shard-worker
             processes (one address per replica slot, shard-major);
             --replicas r0,r1,… pins per-shard replica counts, default
@@ -87,6 +98,12 @@ USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|bench> [option
   gen      --n N --d D --experts K --redundancy M
   bench    --n N --d D --experts K [--iters I] [--batch B] [--shards S]
            [--json <path>]   (machine-readable BENCH_*.json trail)
+           --drift <shift|flash-crowd|diurnal>  replay a shifting class
+            popularity through the coordinator with the adaptation
+            plane armed; reports pre/post top-k recall and per-expert
+            load skew into BENCH_drift_<scenario>.json
+            [--queries N] [--adapt-split-skew R] [--adapt-interval N]
+            [--seed S] [--window W]
 
 Common: --artifacts-dir <path> (default ./artifacts or $DSS_ARTIFACTS)
 ";
@@ -226,6 +243,30 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         );
     }
 
+    // serve-time expert adaptation (works sharded or not — the engine
+    // rebuild follows the serving flavor).  Exactly one expert-set
+    // mutator may run per serve: the adapter and the replanner each
+    // hold their own set/plan baseline, so one's swap would silently
+    // revert the other's.
+    let adapt_requested = args.get("adapt-split-skew").is_some()
+        || args.get("adapt-interval").is_some()
+        || args.get("adapt-min-ms").is_some()
+        || args.get("adapt-prune-floor").is_some()
+        || args.get("adapt-retention").is_some()
+        || args.get("adapt-floor-frac").is_some();
+    if adapt_requested {
+        anyhow::ensure!(
+            !replan_requested,
+            "--adapt-* and --replan-* are mutually exclusive (one expert-set \
+             mutator per serve; an adapt swap rebases the counters the \
+             replanner reads and each holds its own baseline set)"
+        );
+        anyhow::ensure!(
+            !args.flag("pjrt"),
+            "--adapt-* rebuilds native engines; not supported with --pjrt"
+        );
+    }
+
     // artifact set when available; otherwise a synthetic index so the
     // serving path (including --shards) runs without the Python export
     let (set, util, label) = match manifest_from(args) {
@@ -242,7 +283,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             );
             if args.flag("pjrt") {
                 let engine = pjrt_engine(&m)?;
-                return drive(args, engine, set.dim(), n_queries, k, shards, None, None);
+                return drive(args, engine, set.dim(), n_queries, k, shards, None, None, None);
             }
             (set, m.utilization.clone(), m.name.clone())
         }
@@ -271,6 +312,11 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             !replan_requested,
             "--replan-* re-plans the in-process sharded engine; it does not \
              apply to --workers (restart the fabric with a new plan instead)"
+        );
+        anyhow::ensure!(
+            !adapt_requested,
+            "--adapt-* adapts the in-process engine; it does not apply to \
+             --workers (the expert plane lives in worker processes)"
         );
         let addrs: Vec<String> = spec
             .split(',')
@@ -307,10 +353,14 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         );
         let engine = RemoteShardEngine::connect(&set, rplan, &addrs, FabricOpts::default())?;
         let fabric = engine.metrics();
-        return drive(args, Arc::new(engine), d, n_queries, k, shards, None, Some(fabric));
+        return drive(args, Arc::new(engine), d, n_queries, k, shards, None, None, Some(fabric));
     }
 
-    let (engine, replan): (Arc<dyn SoftmaxEngine>, Option<ReplanSetup>) = if shards > 1 {
+    let (engine, replan, adapt): (
+        Arc<dyn SoftmaxEngine>,
+        Option<ReplanSetup>,
+        Option<AdaptSetup>,
+    ) = if shards > 1 {
         let plan = shard_plan_from(args, &set, shards, &util, plan_file)?;
         println!(
             "shard plan [{}] for '{label}': {} experts over {shards} shards, expert counts {:?}, loads {:?}",
@@ -334,18 +384,29 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             },
             out: args.get("shard-plan-out").map(std::path::PathBuf::from),
         });
+        let adapt = adapt_requested.then(|| AdaptSetup {
+            set: set.clone(),
+            plan: Some(plan.clone()),
+            policy: adapt_policy(args),
+        });
         // serial dispatch: the coordinator's worker pool is the
         // parallelism at this layer (its per-expert flushes call
         // `run_expert_batch`, which is inline and shard-local); per-
         // shard pools only serve the direct `query_batch` path
-        (Arc::new(ShardedEngine::new(set, plan)?), replan)
+        (Arc::new(ShardedEngine::new(set, plan)?), replan, adapt)
     } else {
+        let adapt = adapt_requested.then(|| AdaptSetup {
+            set: set.clone(),
+            plan: None,
+            policy: adapt_policy(args),
+        });
         (
             Arc::new(NativeBatchEngine::new(DsSoftmax::with_utilization(set, util))),
             None,
+            adapt,
         )
     };
-    drive(args, engine, d, n_queries, k, shards, replan, None)
+    drive(args, engine, d, n_queries, k, shards, replan, adapt, None)
 }
 
 /// Arm the observability plane from the CLI: the structured event log
@@ -535,6 +596,29 @@ struct ReplanSetup {
     out: Option<std::path::PathBuf>,
 }
 
+/// Serve-time expert-adaptation configuration carried from `serve`
+/// into the driver.  `plan: Some` rebuilds a sharded engine under the
+/// same (K-invariant) plan; `None` rebuilds the unsharded native path.
+struct AdaptSetup {
+    set: ExpertSet,
+    plan: Option<ShardPlan>,
+    policy: AdaptPolicy,
+}
+
+fn adapt_policy(args: &Args) -> AdaptPolicy {
+    AdaptPolicy {
+        split_skew: args.f64_or("adapt-split-skew", 1.5),
+        prune_floor: args.f64_or("adapt-prune-floor", 0.1),
+        retention: args.f64_or("adapt-retention", 0.75),
+        floor_frac: args.f64_or("adapt-floor-frac", 0.02),
+        min_queries: args.u64_or("adapt-interval", 1000),
+        min_interval: Duration::from_millis(args.u64_or("adapt-min-ms", 500)),
+        poll: Duration::from_millis(10),
+        seed: args.u64_or("adapt-seed", 0),
+        ..Default::default()
+    }
+}
+
 /// Shared serve driver: start the coordinator (plus the drift
 /// re-planner when configured), then either serve remote clients
 /// (`--listen`) or push the local workload, wait, report, and print
@@ -548,6 +632,7 @@ fn drive(
     k: usize,
     shards: usize,
     replan: Option<ReplanSetup>,
+    adapt: Option<AdaptSetup>,
     fabric: Option<Arc<FabricMetrics>>,
 ) -> anyhow::Result<()> {
     let engine_name = engine.name();
@@ -612,6 +697,13 @@ fn drive(
         );
         Replanner::spawn(c.clone(), r.set, r.plan, r.policy, r.out)
     });
+    let adapter = adapt.map(|a| {
+        println!(
+            "adapter armed: expert skew >= {:.2}, every {} queries, hysteresis {:?}",
+            a.policy.split_skew, a.policy.min_queries, a.policy.min_interval
+        );
+        Adapter::spawn(c.clone(), a.set, a.plan, a.policy)
+    });
 
     // --listen: serve fabric clients instead of a local workload; runs
     // until a client sends Shutdown (or the process is killed)
@@ -629,6 +721,10 @@ fn drive(
         if let Some(rp) = replanner {
             let swaps = rp.stop();
             println!("replans completed: {swaps} (engine epoch {})", c.engine_epoch());
+        }
+        if let Some(ad) = adapter {
+            let swaps = ad.stop();
+            println!("adaptations completed: {swaps} (engine epoch {})", c.engine_epoch());
         }
         println!("{}", c.metrics.report());
         c.shutdown();
@@ -671,6 +767,11 @@ fn drive(
         // workloads still get their re-plan before the report
         let swaps = rp.stop();
         println!("replans completed: {swaps} (engine epoch {})", c.engine_epoch());
+    }
+    if let Some(ad) = adapter {
+        // same final-evaluation contract as the replanner
+        let swaps = ad.stop();
+        println!("adaptations completed: {swaps} (engine epoch {})", c.engine_epoch());
     }
     println!("{}", c.metrics.report());
     c.shutdown();
@@ -738,6 +839,10 @@ fn gen(args: &Args) -> anyhow::Result<()> {
 }
 
 fn bench(args: &Args) -> anyhow::Result<()> {
+    if let Some(spec) = args.get("drift") {
+        let scenario: DriftScenario = spec.parse().map_err(anyhow::Error::msg)?;
+        return bench_drift(args, scenario);
+    }
     let n = args.usize_or("n", 10_000);
     let d = args.usize_or("d", 200);
     let k = args.usize_or("experts", 64);
@@ -820,6 +925,114 @@ fn bench(args: &Args) -> anyhow::Result<()> {
     } else if args.flag("json") {
         let path = report.save_trail()?;
         println!("bench json written to {path}");
+    }
+    Ok(())
+}
+
+/// `dss bench --drift <scenario>` — replay a shifting class popularity
+/// through a live coordinator with the adaptation plane armed, and
+/// measure what adaptation buys: top-k recall (each query is anchored
+/// on its target class, so ground truth is known) and per-expert load
+/// skew, for the pre-drift and post-drift halves of the run.  The
+/// numbers land as `metrics` in `BENCH_drift_<scenario>.json`.
+fn bench_drift(args: &Args, scenario: DriftScenario) -> anyhow::Result<()> {
+    init_obs(args)?;
+    let n = args.usize_or("n", 2_000);
+    let d = args.usize_or("d", 64);
+    let kx = args.usize_or("experts", 8);
+    let k = args.usize_or("k", 10);
+    let total = args.usize_or("queries", 4_000).max(2);
+    let seed = args.u64_or("seed", 1);
+    let mut rng = Rng::new(args.u64_or("gen-seed", 42));
+    let set = ExpertSet::synthetic(n, d, kx, args.f64_or("redundancy", 1.2), &mut rng);
+    set.validate().map_err(anyhow::Error::msg)?;
+    let engine = Arc::new(NativeBatchEngine::new(DsSoftmax::new(set.clone())));
+    let c = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
+    let policy = AdaptPolicy {
+        split_skew: args.f64_or("adapt-split-skew", 1.2),
+        prune_floor: args.f64_or("adapt-prune-floor", 0.1),
+        min_queries: args.u64_or("adapt-interval", total as u64 / 4),
+        min_interval: Duration::from_millis(args.u64_or("adapt-min-ms", 0)),
+        poll: Duration::from_millis(1),
+        seed: args.u64_or("adapt-seed", 0),
+        ..Default::default()
+    };
+    println!(
+        "drift bench '{scenario}': N={n} d={d} K={kx} queries={total} \
+         (adapt: skew >= {:.2}, every {} queries)",
+        policy.split_skew, policy.min_queries
+    );
+    let adapter = Adapter::spawn(c.clone(), set.clone(), None, policy);
+
+    let mut gen = DriftGen::new(scenario, n, total, seed);
+    let mut qrng = Rng::new(seed ^ 0x6472_6966_74); // workload noise stream
+    let window = args.usize_or("window", 64).max(1);
+    let base = c.metrics.routed_counts();
+    let mut mid: Option<Vec<u64>> = None;
+    let mut hits = [0usize; 2];
+    let mut counts = [0usize; 2];
+    let t0 = std::time::Instant::now();
+    let mut issued = 0usize;
+    while issued < total {
+        let batch = window.min(total - issued);
+        let mut pend = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let class = gen.next_class();
+            let half = usize::from(issued * 2 >= total);
+            let h = drift::class_query(&set, class, 0.02, &mut qrng);
+            if let Ok(p) = c.submit(h, k) {
+                pend.push((half, class, p));
+            }
+            issued += 1;
+        }
+        for (half, class, p) in pend {
+            counts[half] += 1;
+            if let Ok(top) = p.wait() {
+                if top.iter().any(|&(id, _)| id == class) {
+                    hits[half] += 1;
+                }
+            }
+        }
+        // per-expert load of the pre-drift half: snapshot once, after
+        // the midpoint window has fully drained
+        if mid.is_none() && issued * 2 >= total {
+            mid = Some(c.metrics.routed_counts());
+        }
+    }
+    let elapsed = t0.elapsed();
+    let swaps = adapter.stop();
+    let epoch = c.engine_epoch();
+    let end = c.metrics.routed_counts();
+    c.shutdown();
+
+    let mid = mid.unwrap_or_else(|| end.clone());
+    let delta = |a: &[u64], b: &[u64]| -> Vec<u64> {
+        a.iter().zip(b).map(|(x, y)| x.saturating_sub(*y)).collect()
+    };
+    let skew_pre = expert_skew(&delta(&mid, &base));
+    let skew_post = expert_skew(&delta(&end, &mid));
+    let recall = |h: usize, m: usize| if m == 0 { 0.0 } else { h as f64 / m as f64 };
+    let (r_pre, r_post) = (recall(hits[0], counts[0]), recall(hits[1], counts[1]));
+    println!(
+        "recall@{k}: pre {r_pre:.3} → post {r_post:.3}   expert skew: pre {skew_pre:.2} → \
+         post {skew_post:.2}   adaptations: {swaps} (engine epoch {epoch})"
+    );
+
+    let mut report = benchlib::BenchReport::new(&format!("drift_{scenario}"));
+    let shape = format!("N={n} d={d} K={kx}");
+    report.push("ds-adapt", &shape, window, 1, elapsed.as_nanos() as f64 / total as f64);
+    report.metric("recall_pre", r_pre);
+    report.metric("recall_post", r_post);
+    report.metric("skew_pre", skew_pre);
+    report.metric("skew_post", skew_post);
+    report.metric("adapt_swaps", swaps as f64);
+    report.metric("engine_epoch", epoch as f64);
+    if let Some(path) = args.get("json") {
+        report.save(path)?;
+        println!("drift bench json written to {path}");
+    } else {
+        let path = report.save_trail()?;
+        println!("drift bench json written to {path}");
     }
     Ok(())
 }

@@ -14,6 +14,11 @@
 //! the inner engine's expert-grouped tiled-kernel batch path and fused
 //! select-then-normalize top-k (`tensor::kernel`), which the
 //! delegating `query_batch`/`run_expert_batch` below inherit verbatim.
+//!
+//! This module models mitosis as it happens *in training*; the serve-time
+//! counterpart — splitting/pruning a live `ExpertSet` from observed
+//! traffic and swapping the rebuilt engine in without pausing — lives in
+//! [`crate::adapt`].
 
 use crate::model::dssoftmax::DsSoftmax;
 use crate::model::SoftmaxEngine;

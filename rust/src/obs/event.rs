@@ -12,9 +12,10 @@
 //! 3. default: `info` to stderr.
 //!
 //! This replaces the scattered `eprintln!` diagnostics of earlier PRs:
-//! machine problems (`swap`, `replan`, `failover`, `conn_poisoned`,
-//! `worker_panic`, ...) are now grep-able, parseable, and carry their
-//! context as fields instead of prose.
+//! machine problems (`swap`, `replan`, `adapt_swap`, `failover`,
+//! `conn_poisoned`, `worker_reconnect`, `worker_panic`, ...) are now
+//! grep-able, parseable, and carry their context as fields instead of
+//! prose.
 
 use std::io::Write;
 use std::path::Path;

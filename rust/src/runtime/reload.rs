@@ -346,6 +346,13 @@ pub fn shard_skew(plan: &ShardPlan, set: &ExpertSet, routed: &[u64]) -> f64 {
 /// (skew and sample-size gates still apply; the poll cadence and
 /// wall-clock hysteresis do not) so short workloads still get their
 /// re-plan, then returns the number of swaps installed.
+///
+/// Do not pair with an [`adapt::Adapter`](crate::adapt::Adapter) on
+/// the same coordinator: an adapt swap rebases the per-generation
+/// counters this watcher reads and obsoletes the `set` baseline it
+/// re-plans over, while a re-plan swap is set-preserving — the hazard
+/// runs one way, so exactly one expert-set mutator may watch a serve
+/// (the CLI enforces this; see the `adapt` module docs).
 pub struct Replanner {
     stop: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<u64>>,

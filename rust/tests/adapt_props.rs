@@ -1,0 +1,199 @@
+//! Properties of the serve-time adaptation plane (`adapt`): mitosis
+//! keeps exact class coverage, pruning respects the hit floor and the
+//! per-expert size floor, the background [`Adapter`] installs its swap
+//! live with recall on the shifted distribution preserved, and the
+//! drift workload generator replays bit-identically per seed.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ds_softmax::adapt::{adapt_set, size_floor, AdaptPolicy, Adapter};
+use ds_softmax::benchlib::drift::{class_query, DriftGen, DriftScenario};
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine, SoftmaxEngine};
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::util::rng::Rng;
+
+/// Counters that make `hot` the split target with every one of its
+/// classes warm (distinct counts, so the hot ordering is strict).
+fn hot_counters(set: &ExpertSet, hot: usize) -> (Vec<u64>, Vec<u32>) {
+    let mut routed = vec![25u64; set.k()];
+    routed[hot] = 50_000;
+    let mut hits = vec![0u32; set.n_classes];
+    for (i, &c) in set.experts[hot].classes().iter().enumerate() {
+        hits[c as usize] = 1_000 + i as u32;
+    }
+    (routed, hits)
+}
+
+/// Mitosis coverage contract: the two children partition-with-overlap
+/// exactly the parent's class set — union equal to the parent, the
+/// `delta.shared` hottest classes in both, each child holding exactly
+/// `ceil(retention · n)` classes.
+#[test]
+fn split_preserves_exact_class_coverage() {
+    let mut rng = Rng::new(21);
+    let set = ExpertSet::synthetic(256, 16, 4, 1.3, &mut rng);
+    let (routed, hits) = hot_counters(&set, 2);
+    let policy = AdaptPolicy::default();
+    let (next, delta) = adapt_set(&set, &routed, &hits, &policy, 1).expect("adapt step");
+    assert_eq!(delta.split, 2);
+    let parent: BTreeSet<i32> = set.experts[2].classes().iter().copied().collect();
+    let a: BTreeSet<i32> = next.experts[delta.split].classes().iter().copied().collect();
+    let b: BTreeSet<i32> = next.experts[delta.twin].classes().iter().copied().collect();
+    let union: BTreeSet<i32> = a.union(&b).copied().collect();
+    assert_eq!(union, parent, "children must cover exactly the parent's classes");
+    assert_eq!(a.intersection(&b).count(), delta.shared, "overlap disagrees with the delta");
+    let n = parent.len();
+    let keep = ((n as f64 * policy.retention).ceil() as usize).clamp(1, n);
+    assert_eq!(a.len(), keep, "child A retention");
+    assert_eq!(b.len(), keep, "child B retention");
+    assert_eq!(delta.shared, (2 * keep).saturating_sub(n));
+}
+
+/// Pruning contract: a class at or above the hit floor never loses a
+/// replica, no class loses coverage entirely, and no expert shrinks
+/// below the size floor.  Compared against a `prune_floor: 0.0` run of
+/// the same step (same seed → identical split/merge/gate), so replica
+/// deltas are attributable to pruning alone.
+#[test]
+fn prune_never_removes_classes_above_the_hit_floor() {
+    let mut rng = Rng::new(22);
+    let set = ExpertSet::synthetic(256, 16, 4, 1.6, &mut rng);
+    let mut routed = vec![30u64; 4];
+    routed[0] = 40_000;
+    // 8 clearly-hot classes; every other class is stone cold
+    let mut hits = vec![0u32; 256];
+    for c in 0..8 {
+        hits[c * 31] = 1_000;
+    }
+    let pruning = AdaptPolicy { prune_floor: 0.5, ..Default::default() };
+    let keep_all = AdaptPolicy { prune_floor: 0.0, ..pruning };
+    let (pruned, delta) = adapt_set(&set, &routed, &hits, &pruning, 3).expect("pruning step");
+    let (full, delta0) = adapt_set(&set, &routed, &hits, &keep_all, 3).expect("no-prune step");
+    assert_eq!(delta0.pruned, 0, "prune_floor 0.0 must prune nothing");
+    assert!(delta.pruned > 0, "the scenario never exercised pruning");
+    let coverage = |s: &ExpertSet| {
+        let mut cov = vec![0u32; s.n_classes];
+        for e in &s.experts {
+            for &c in e.classes() {
+                cov[c as usize] += 1;
+            }
+        }
+        cov
+    };
+    let (cp, cf) = (coverage(&pruned), coverage(&full));
+    let total: u64 = hits.iter().map(|&h| h as u64).sum();
+    for c in 0..256usize {
+        assert!(cp[c] >= 1, "class {c} lost coverage entirely");
+        let above_floor = hits[c] as f64 * 256.0 >= total as f64 * pruning.prune_floor;
+        if above_floor {
+            assert_eq!(cp[c], cf[c], "class {c} is above the hit floor but lost a replica");
+        }
+    }
+    let floor = size_floor(256, pruning.floor_frac);
+    for (e, x) in pruned.experts.iter().enumerate() {
+        let before = full.experts[e].classes().len();
+        if before >= floor {
+            assert!(x.classes().len() >= floor, "expert {e} shrank below the size floor");
+        } else {
+            assert_eq!(x.classes().len(), before, "under-floor expert {e} must not be pruned");
+        }
+    }
+}
+
+/// The adaptation plane end-to-end: replay a flash-crowd-shaped shift
+/// (broad popularity, then traffic collapsing onto one class) through
+/// a live coordinator with an [`Adapter`] watching.  The swap must
+/// install exactly once, bump the epoch and metrics, and recall on the
+/// shifted distribution must not regress — the crowd's class is among
+/// the shared-hot classes, so both mitosis children carry it.
+#[test]
+fn flash_crowd_adaptation_preserves_recall_and_advances_epoch() {
+    let mut rng = Rng::new(23);
+    let set = ExpertSet::synthetic(64, 16, 4, 1.3, &mut rng);
+    let reference = DsSoftmax::new(set.clone());
+    // crowd target: an anchored query that provably resolves (the
+    // routed expert holds the class and ranks it into the top-5)
+    let target = (0..64u32)
+        .find(|&c| {
+            let h = class_query(&set, c, 0.0, &mut Rng::new(0));
+            reference.query(&h, 5).iter().any(|&(id, _)| id == c)
+        })
+        .expect("no resolvable anchor class in the synthetic set");
+    let anchor = class_query(&set, target, 0.0, &mut Rng::new(0));
+
+    let engine: Arc<dyn SoftmaxEngine> =
+        Arc::new(NativeBatchEngine::new(DsSoftmax::new(set.clone())));
+    let c = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
+    // the wall-clock hysteresis parks the watcher for the whole replay;
+    // `stop()` bypasses it (but not the sample-size and skew gates), so
+    // exactly one swap installs, after the drifted traffic
+    let policy = AdaptPolicy {
+        split_skew: 1.5,
+        prune_floor: 0.0,
+        min_queries: 100,
+        min_interval: Duration::from_secs(3600),
+        poll: Duration::from_millis(1),
+        seed: 9,
+        ..Default::default()
+    };
+    let adapter = Adapter::spawn(c.clone(), set.clone(), None, policy);
+
+    // phase A: broad pre-shift popularity — one sweep over every class
+    for cls in 0..64u32 {
+        let h = class_query(&set, cls, 0.05, &mut rng);
+        c.query(h, 5).expect("phase A query");
+    }
+    // phase B: the flash crowd collapses onto the target class; this
+    // is also the pre-adaptation recall on the shifted distribution
+    let mut hit_pre = 0usize;
+    for _ in 0..300 {
+        let got = c.query(anchor.clone(), 5).expect("phase B query");
+        hit_pre += usize::from(got.iter().any(|&(id, _)| id == target));
+    }
+    let recall_pre = hit_pre as f64 / 300.0;
+    assert!(recall_pre > 0.99, "anchor stopped resolving pre-swap: {recall_pre}");
+
+    let swaps = adapter.stop();
+    assert_eq!(swaps, 1, "the final evaluation did not install the adaptation");
+    assert_eq!(c.engine_epoch(), 1, "swap did not advance the engine epoch");
+
+    let mut hit_post = 0usize;
+    for _ in 0..100 {
+        let got = c.query(anchor.clone(), 5).expect("post-swap query");
+        hit_post += usize::from(got.iter().any(|&(id, _)| id == target));
+    }
+    let recall_post = hit_post as f64 / 100.0;
+    assert!(
+        recall_post >= recall_pre,
+        "adaptation regressed shifted-distribution recall: {recall_pre} -> {recall_post}"
+    );
+
+    c.shutdown();
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.swaps, 1);
+    assert_eq!(snap.engine_epoch, 1);
+    assert_eq!(snap.completed, snap.submitted, "queries lost across the adapt swap");
+}
+
+/// The drift generator is part of the measurement contract: identical
+/// `(scenario, n_classes, total, seed)` must replay bit-identically,
+/// and the anchored query synthesis must be deterministic too.
+#[test]
+fn drift_generator_replays_bit_identically_per_seed() {
+    for s in [DriftScenario::Shift, DriftScenario::FlashCrowd, DriftScenario::Diurnal] {
+        let run = |seed: u64| {
+            let mut g = DriftGen::new(s, 512, 300, seed);
+            (0..300).map(|_| g.next_class()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5), "{s}: same seed diverged");
+        assert_ne!(run(5), run(6), "{s}: seed ignored");
+    }
+    let mut rng = Rng::new(3);
+    let set = ExpertSet::synthetic(64, 8, 2, 1.2, &mut rng);
+    let q1 = class_query(&set, 7, 0.1, &mut Rng::new(4));
+    let q2 = class_query(&set, 7, 0.1, &mut Rng::new(4));
+    assert_eq!(q1, q2, "query synthesis is not deterministic");
+}

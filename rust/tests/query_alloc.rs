@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use std::sync::Arc;
 
-use ds_softmax::coordinator::NativeBatchEngine;
+use ds_softmax::coordinator::{Metrics, NativeBatchEngine};
 use ds_softmax::model::dssoftmax::DsSoftmax;
 use ds_softmax::model::SoftmaxEngine;
 use ds_softmax::obs::trace::{self, Stage};
@@ -190,6 +190,23 @@ fn warm_query_batch_does_not_allocate() {
     });
     assert_eq!(n, 0, "unsampled tracing allocated {n} times on the warm path");
     trace::init(0);
+
+    // per-class hit accounting (the adaptation plane's input) rides the
+    // same flush: the counter plane is preallocated at construction and
+    // each recorded row is a borrowed slice of the arena, so a warm
+    // batch with accounting enabled still allocates nothing
+    let metrics = Metrics::with_topology(8, 1, 512);
+    ds.query_batch(view, 10, &mut out);
+    let n = count_allocs(|| {
+        for r in 0..bsz {
+            let (ids, _) = out.row(r);
+            metrics.record_class_hits(&ids[..10.min(ids.len())]);
+        }
+        std::hint::black_box(&metrics);
+    });
+    assert_eq!(n, 0, "class-hit accounting allocated {n} times on the warm path");
+    let recorded: u64 = metrics.class_hits().iter().map(|&h| h as u64).sum();
+    assert_eq!(recorded, (bsz * 10) as u64, "class-hit accounting dropped hits");
 
     // results are still correct after the counted runs
     for r in 0..bsz {
