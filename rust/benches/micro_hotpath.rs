@@ -26,7 +26,7 @@ use std::sync::Arc;
 
 use ds_softmax::benchlib::{bench, bench_batched, fmt_qps, BenchReport, Table};
 use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine};
-use ds_softmax::fabric::{FabricOpts, RemoteShardEngine, ShardWorker};
+use ds_softmax::fabric::{proto, FabricOpts, RemoteShardEngine, ShardWorker};
 use ds_softmax::model::dssoftmax::{DsScratch, DsSoftmax};
 use ds_softmax::model::full::FullSoftmax;
 use ds_softmax::model::SoftmaxEngine;
@@ -371,6 +371,35 @@ fn main() {
             ),
         ]);
         worker.stop();
+    }
+
+    // wire bytes per expert batch: proto v2 (f32 bit patterns as JSON
+    // u32 text, ~12 bytes/value) vs v3 (raw little-endian trailer, 4
+    // bytes/value) — same bits on both wires, so the size ratio is the
+    // whole story
+    {
+        let (rows, dim) = (bsz, 200usize);
+        let f = proto::Frame::ExpertBatch {
+            id: 1,
+            expert: 0,
+            rows,
+            dim,
+            data: (0..rows * dim).map(|i| ((i as f32) * 0.31).sin()).collect(),
+            gates: (0..rows).map(|i| 1.0 / (1 + i) as f32).collect(),
+            k: 10,
+            trace: 0,
+        };
+        let (mut v2, mut v3) = (Vec::new(), Vec::new());
+        proto::write_frame_v(&mut v2, &f, 2).expect("v2 encode");
+        proto::write_frame_v(&mut v3, &f, 3).expect("v3 encode");
+        table.row(vec![
+            "wire bytes v2 vs v3".into(),
+            format!("batch {rows}x{dim}"),
+            format!("{} → {} B", v2.len(), v3.len()),
+            format!("({:.2}x smaller)", v2.len() as f64 / v3.len() as f64),
+        ]);
+        report.metric("wire_bytes_v2", v2.len() as f64);
+        report.metric("wire_bytes_v3", v3.len() as f64);
     }
 
     // coordinator round-trip: batching + channel + threadpool overhead

@@ -154,11 +154,28 @@ pub struct BenchReport {
     /// `"metrics"` object when non-empty, so existing trail consumers
     /// are unaffected.
     pub metrics: Vec<(String, f64)>,
+    /// Kernel mode the process measured under (`"exact"`/`"fast"`),
+    /// snapshotted from `kernel::selected()` at report construction so
+    /// every trail entry states what arithmetic produced it.
+    pub kernel_mode: String,
+    /// Dispatched ISA (`"avx2+fma"`/`"portable"`).
+    pub isa: String,
+    /// Tile shape `(rows, cols)` — the compile-time constants in exact
+    /// mode, the autotune winner (or `DSS_TILE` pin) in fast mode.
+    pub tile: (usize, usize),
 }
 
 impl BenchReport {
     pub fn new(name: &str) -> Self {
-        Self { name: name.to_string(), rows: Vec::new(), metrics: Vec::new() }
+        let sel = crate::tensor::kernel::selected();
+        Self {
+            name: name.to_string(),
+            rows: Vec::new(),
+            metrics: Vec::new(),
+            kernel_mode: sel.mode_name().to_string(),
+            isa: sel.isa_name().to_string(),
+            tile: sel.tile,
+        }
     }
 
     /// Attach (or overwrite) a named scalar metric.
@@ -183,6 +200,9 @@ impl BenchReport {
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("bench", Json::from(self.name.as_str())),
+            ("kernel_mode", Json::from(self.kernel_mode.as_str())),
+            ("isa", Json::from(self.isa.as_str())),
+            ("tile", Json::Arr(vec![Json::from(self.tile.0), Json::from(self.tile.1)])),
             (
                 "rows",
                 Json::Arr(
@@ -328,7 +348,15 @@ mod tests {
         assert!((q - qps(1500.0)).abs() < 1e-6);
         // no metrics attached → no "metrics" key (trail stays diffable
         // against pre-metrics runs)
-        assert!(parsed.get("metrics").is_none());
+        assert!(parsed.opt("metrics").is_none());
+        // every trail entry states the kernel it measured under; don't
+        // pin the values — a parallel test in this binary could have
+        // installed fast mode first
+        assert!(!parsed.get("kernel_mode").unwrap().as_str().unwrap().is_empty());
+        assert!(!parsed.get("isa").unwrap().as_str().unwrap().is_empty());
+        let tile = parsed.get("tile").unwrap().usize_vec().unwrap();
+        assert_eq!(tile.len(), 2);
+        assert!(tile[0] >= 1 && tile[1] >= 1);
     }
 
     #[test]

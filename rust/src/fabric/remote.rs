@@ -50,7 +50,8 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::FabricMetrics;
 use crate::coordinator::QueryError;
 use crate::fabric::proto::{
-    read_frame, write_frame, Frame, MIN_PROTO_VERSION, PROBLEM_PROTO, PROTO_VERSION,
+    read_frame, write_frame, write_frame_v, Frame, MIN_PROTO_VERSION, PROBLEM_PROTO,
+    PROTO_VERSION,
 };
 use crate::model::SoftmaxEngine;
 use crate::obs;
@@ -74,6 +75,11 @@ pub struct FabricOpts {
     pub redial_base: Duration,
     /// Ceiling on the backoff delay (jitter rides on top, up to 25%).
     pub redial_cap: Duration,
+    /// Highest protocol version to offer at handshake (clamped to
+    /// `MIN..=PROTO_VERSION`).  Defaults to [`PROTO_VERSION`]; pin it
+    /// lower (`dss serve --proto 2`) to exercise interop against the
+    /// JSON-payload wire shape — results are bit-identical either way.
+    pub max_proto: u64,
 }
 
 impl Default for FabricOpts {
@@ -83,6 +89,7 @@ impl Default for FabricOpts {
             io_timeout: Duration::from_secs(10),
             redial_base: Duration::from_millis(50),
             redial_cap: Duration::from_secs(2),
+            max_proto: PROTO_VERSION,
         }
     }
 }
@@ -272,9 +279,10 @@ impl RemoteShardEngine {
     /// so a typed `PROBLEM_PROTO` refusal triggers exactly one re-dial
     /// offering the floor.
     fn dial(&self, conn: &ReplicaConn) -> anyhow::Result<TcpStream> {
-        match self.dial_offering(conn, PROTO_VERSION) {
+        let offer = self.opts.max_proto.clamp(MIN_PROTO_VERSION, PROTO_VERSION);
+        match self.dial_offering(conn, offer) {
             Err(e)
-                if PROTO_VERSION > MIN_PROTO_VERSION
+                if offer > MIN_PROTO_VERSION
                     && e.downcast_ref::<ProtoRefused>().is_some() =>
             {
                 self.dial_offering(conn, MIN_PROTO_VERSION)
@@ -409,11 +417,14 @@ impl RemoteShardEngine {
         let t0 = Instant::now();
         let traced = obs::trace::current() != 0;
         let w0 = if traced { obs::trace::now_ns() } else { 0 };
+        // requests go out at the version this connection negotiated —
+        // binary ExpertBatch payloads at >=3, pure JSON below
+        let proto = conn.proto.load(Ordering::Relaxed);
         let res = (|| -> io::Result<Vec<Frame>> {
             let stream = guard.as_ref().unwrap();
             let mut w = stream;
             for f in reqs {
-                write_frame(&mut w, f)?;
+                write_frame_v(&mut w, f, proto)?;
             }
             let mut r = stream;
             let mut out = Vec::with_capacity(reqs.len());
@@ -849,6 +860,51 @@ mod tests {
         assert_eq!(out.rows(), 1);
         assert_eq!(engine.conns[0][0].redial.lock().unwrap().failures, 0);
         let mut worker = accept.join().unwrap();
+        worker.stop();
+    }
+
+    /// Protocol interop: a client pinned to `max_proto: 2` negotiates
+    /// the JSON wire shape against a v3 worker, and its results are
+    /// bit-identical to a v3 (binary-payload) client of the same
+    /// worker — the trailer changes bytes on the wire, never values.
+    #[test]
+    fn forced_v2_negotiates_down_and_stays_bit_identical() {
+        let mut rng = Rng::new(11);
+        let set = ExpertSet::synthetic(96, 8, 2, 1.2, &mut rng);
+        let plan = ShardPlan::greedy(&set, 1);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut worker = ShardWorker::spawn_for(set.clone(), &plan, 0, listener).unwrap();
+        let v3 = RemoteShardEngine::connect(
+            &set,
+            ReplicaPlan::uniform(plan.clone(), 1),
+            &[addr.clone()],
+            FabricOpts::default(),
+        )
+        .unwrap();
+        let v2 = RemoteShardEngine::connect(
+            &set,
+            ReplicaPlan::uniform(plan.clone(), 1),
+            &[addr],
+            FabricOpts { max_proto: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(v3.conns[0][0].proto.load(Ordering::Relaxed), PROTO_VERSION);
+        assert_eq!(v2.conns[0][0].proto.load(Ordering::Relaxed), 2);
+        let rows = 4;
+        let h: Vec<f32> = (0..rows).flat_map(|_| rng.normal_vec(8, 1.0)).collect();
+        let (mut a, mut b) = (TopKBuf::new(), TopKBuf::new());
+        v3.query_batch(MatrixView::new(&h, rows, 8), 5, &mut a);
+        v2.query_batch(MatrixView::new(&h, rows, 8), 5, &mut b);
+        for i in 0..rows {
+            let (ia, pa) = a.row(i);
+            let (ib, pb) = b.row(i);
+            assert_eq!(ia, ib);
+            assert_eq!(
+                pa.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+                pb.iter().map(|p| p.to_bits()).collect::<Vec<_>>()
+            );
+        }
         worker.stop();
     }
 

@@ -28,7 +28,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::fabric::proto::{
-    read_frame, write_frame, Frame, Problem, WireSpan, MIN_PROTO_VERSION, PROTO_VERSION,
+    read_frame, write_frame_v, Frame, Problem, WireSpan, MIN_PROTO_VERSION, PROTO_VERSION,
 };
 use crate::model::dssoftmax::DsSoftmax;
 use crate::model::SoftmaxEngine;
@@ -278,8 +278,10 @@ fn serve_conn(
     let mut w = &stream;
     let mut out = TopKBuf::new();
     // protocol version agreed at Hello time: min(peer, ours).  A v1
-    // peer never sees the v2 trace fields in replies.
-    let mut negotiated: u64 = PROTO_VERSION;
+    // peer never sees the v2 trace fields in replies.  Until the Hello
+    // arrives this stays at the floor, so a handshake-skipping peer is
+    // never shown a v3 binary trailer it didn't negotiate.
+    let mut negotiated: u64 = MIN_PROTO_VERSION;
     loop {
         let frame = match read_frame(&mut r) {
             Ok(Some(f)) => f,
@@ -364,7 +366,7 @@ fn serve_conn(
                 snapshot: stats.to_json(shard, handle.epoch()),
             },
             Frame::Shutdown { id } => {
-                let _ = write_frame(&mut w, &Frame::ShutdownOk { id });
+                let _ = write_frame_v(&mut w, &Frame::ShutdownOk { id }, negotiated);
                 stop.store(true, Ordering::Release);
                 for s in conns.lock().unwrap().iter() {
                     let _ = s.shutdown(Shutdown::Both);
@@ -378,7 +380,9 @@ fn serve_conn(
                 )),
             },
         };
-        if write_frame(&mut w, &reply).is_err() {
+        // replies honor the negotiated version: a v3 peer gets binary
+        // BatchOk payloads, a v2/v1 peer gets the pure-JSON shape
+        if write_frame_v(&mut w, &reply, negotiated).is_err() {
             break;
         }
     }
@@ -453,7 +457,7 @@ fn wire_spans(spans: &[obs::trace::Span]) -> Vec<WireSpan> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fabric::proto::bits_arr;
+    use crate::fabric::proto::{bits_arr, write_frame};
     use crate::util::rng::Rng;
 
     fn loopback() -> TcpListener {

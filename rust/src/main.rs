@@ -38,6 +38,7 @@ use ds_softmax::query::{MatrixView, TopKBuf};
 use ds_softmax::runtime::reload::{ReplanPolicy, Replanner};
 use ds_softmax::shard::{ReplicaPlan, ShardPlan, ShardStrategy, ShardedEngine};
 use ds_softmax::sparse::ExpertSet;
+use ds_softmax::tensor::kernel;
 use ds_softmax::util::cli::Args;
 use ds_softmax::util::json::Json;
 use ds_softmax::util::rng::Rng;
@@ -65,10 +66,17 @@ USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|bench> [option
             two coldest, prune cold class replicas, and hot-swap the
             engine; mutually exclusive with --replan-* — one expert-set
             mutator per serve)
+           --fast                opt into the fast FMA kernel mode:
+            runtime ISA dispatch (AVX2+FMA when detected) + startup
+            tile autotune; deterministic but a different reduction
+            order than the bit-exact default ($DSS_TILE=RxC pins the
+            tile)
            --workers a:p,b:p,…   scatter experts to shard-worker
             processes (one address per replica slot, shard-major);
             --replicas r0,r1,… pins per-shard replica counts, default
             load-aware from utilization
+           --proto N             cap the wire protocol offered to
+            workers (interop testing: 2 = JSON payloads, 3 = binary)
            --listen <addr>       serve fabric clients over TCP instead
             of driving a local workload [--deadline-ms MS]
            --checksum            print the FNV fold of all results
@@ -83,8 +91,9 @@ USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|bench> [option
             --n N --d D --experts K --redundancy M --gen-seed S)
   shard-worker  --listen <addr> --shard I --shards S
            [--shard-plan …] [--artifact <name> | --n/--d/--experts/…]
-           [--log-level L] [--log-file F]
-           (must be given the same set + plan flags as the serve front)
+           [--fast] [--log-level L] [--log-file F]
+           (must be given the same set + plan flags as the serve front;
+            --fast must match the front's so results stay comparable)
   client   --connect <addr> --queries N --k K --d D [--seed S]
            [--window W] [--checksum] [--stats] [--shutdown]
   top      --connect <addr> [--interval-ms MS] | [--once] | [--prometheus]
@@ -97,7 +106,8 @@ USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|bench> [option
   inspect  --artifact <name>
   gen      --n N --d D --experts K --redundancy M
   bench    --n N --d D --experts K [--iters I] [--batch B] [--shards S]
-           [--json <path>]   (machine-readable BENCH_*.json trail)
+           [--fast] [--json <path>]   (machine-readable BENCH_*.json
+            trail; every entry records kernel_mode/isa/tile)
            --drift <shift|flash-crowd|diurnal>  replay a shifting class
             popularity through the coordinator with the adaptation
             plane armed; reports pre/post top-k recall and per-expert
@@ -302,6 +312,11 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         }
     };
 
+    // fast mode installs before any engine is built — the sharded
+    // engine, the remote engine's gate path, and the native engines
+    // all snapshot the selection at construction
+    arm_fast(args, &set);
+
     let d = set.dim();
 
     // --workers: the expert plane lives in shard-worker processes and
@@ -351,7 +366,11 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             rplan.replicas,
             addrs.len()
         );
-        let engine = RemoteShardEngine::connect(&set, rplan, &addrs, FabricOpts::default())?;
+        let opts = FabricOpts {
+            max_proto: args.u64_or("proto", ds_softmax::fabric::proto::PROTO_VERSION),
+            ..Default::default()
+        };
+        let engine = RemoteShardEngine::connect(&set, rplan, &addrs, opts)?;
         let fabric = engine.metrics();
         return drive(args, Arc::new(engine), d, n_queries, k, shards, None, None, Some(fabric));
     }
@@ -421,6 +440,28 @@ fn init_obs(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Arm the opt-in fast kernel mode (`--fast`): one process-wide
+/// install of runtime ISA dispatch + startup tile autotune, done
+/// *before any engine is constructed* so every engine's
+/// construction-time `KernelSel` snapshot picks it up.  The autotune
+/// sweep is seeded on the serve shape (dim × the largest expert);
+/// `$DSS_TILE=RxC` pins the tile instead (CI determinism).  Without
+/// the flag the process stays in the bit-exact default mode.
+fn arm_fast(args: &Args, set: &ExpertSet) {
+    if !args.flag("fast") {
+        return;
+    }
+    let rows = set.expert_sizes().into_iter().max().unwrap_or(0);
+    let sel = kernel::install_fast(set.dim(), rows);
+    println!(
+        "fast kernel armed: mode={} isa={} tile={}x{}",
+        sel.mode_name(),
+        sel.isa_name(),
+        sel.tile.0,
+        sel.tile.1
+    );
+}
+
 /// Build the synthetic fallback set.  `serve` (without an artifact),
 /// `shard-worker`, and the CI fabric smoke all construct *identical*
 /// sets from the same flags — determinism here is what makes the
@@ -465,6 +506,10 @@ fn shard_worker(args: &Args) -> anyhow::Result<()> {
         }
     };
     let plan = shard_plan_from(args, &set, shards, &util, plan_file)?;
+    // must match the front's --fast: each worker process autotunes its
+    // own tile, which is safe because the fast kernel's bits depend on
+    // the dispatched ISA, never the tile shape
+    arm_fast(args, &set);
     let listener = TcpListener::bind(listen)?;
     let mut w = ShardWorker::spawn_for(set, &plan, shard, listener)?;
     println!(
@@ -849,6 +894,7 @@ fn bench(args: &Args) -> anyhow::Result<()> {
     let iters = args.usize_or("iters", 200);
     let mut rng = Rng::new(0);
     let set = ExpertSet::synthetic(n, d, k, 1.2, &mut rng);
+    arm_fast(args, &set);
     let ds = DsSoftmax::new(set);
     let full = FullSoftmax::new(ds_softmax::tensor::Matrix::random(n, d, &mut rng, 0.05));
     let h = rng.normal_vec(d, 1.0);

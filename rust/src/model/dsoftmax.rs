@@ -29,6 +29,9 @@ pub struct DSoftmax {
     pub buckets: Vec<DSoftmaxBucket>,
     n: usize,
     d_full: usize,
+    /// Construction-time kernel selection (see `DsSoftmax::sel`): sets
+    /// the row-tile height and dispatches the per-bucket matmuls.
+    pub sel: kernel::KernelSel,
 }
 
 impl DSoftmax {
@@ -48,7 +51,7 @@ impl DSoftmax {
             buckets.push(DSoftmaxBucket { weights: m, dim, start });
             start += count;
         }
-        Self { buckets, n: w.rows, d_full: w.cols }
+        Self { buckets, n: w.rows, d_full: w.cols, sel: kernel::selected() }
     }
 
     /// The paper's §3.5 recipe: quarters at full and half width, tail at
@@ -71,11 +74,13 @@ impl SoftmaxEngine for DSoftmax {
         with_scratch(|s| {
             let crate::query::QueryScratch { heap, tile, .. } = s;
             heap.set_k(k);
-            tile.resize(kernel::TILE_ROWS * self.n, 0.0);
-            for t0 in (0..hs.rows).step_by(kernel::TILE_ROWS) {
-                let th = kernel::TILE_ROWS.min(hs.rows - t0);
+            let tr = self.sel.tile_rows();
+            tile.resize(tr * self.n, 0.0);
+            for t0 in (0..hs.rows).step_by(tr) {
+                let th = tr.min(hs.rows - t0);
                 for b in &self.buckets {
-                    kernel::matmul_nt_strided_into(
+                    kernel::matmul_nt_strided_into_sel(
+                        self.sel,
                         &hs.data()[t0 * self.d_full..],
                         self.d_full,
                         &b.weights.data,

@@ -24,6 +24,15 @@ pub struct DsSoftmax {
     /// Expected FLOPs under the utilization profile measured at export
     /// (updated by `set_utilization`; defaults to uniform).
     utilization: Vec<f64>,
+    /// Kernel selection snapshotted at construction
+    /// (`kernel::selected()`): exact by default, the fast FMA kernel +
+    /// autotuned tile after `kernel::install_fast` (`dss … --fast`).
+    /// Public so the fast-mode test harness can pin selections
+    /// explicitly without racing on the process-wide OnceLock.  Only
+    /// the *expert/class* matmuls dispatch on it — gate routing stays
+    /// exact in every mode so fast mode can never flip a near-tie
+    /// argmax and route a row to a different expert.
+    pub sel: kernel::KernelSel,
 }
 
 /// The m = 1 sparse-gate routing (Eq. 1): softmax over the K gate
@@ -96,12 +105,12 @@ impl DsScratch {
 impl DsSoftmax {
     pub fn new(set: ExpertSet) -> Self {
         let k = set.k();
-        Self { set, utilization: vec![1.0 / k as f64; k] }
+        Self { set, utilization: vec![1.0 / k as f64; k], sel: kernel::selected() }
     }
 
     pub fn with_utilization(set: ExpertSet, utilization: Vec<f64>) -> Self {
         assert_eq!(utilization.len(), set.k());
-        Self { set, utilization }
+        Self { set, utilization, sel: kernel::selected() }
     }
 
     pub fn set_utilization(&mut self, u: Vec<f64>) {
@@ -270,7 +279,8 @@ impl SoftmaxEngine for DsSoftmax {
                     }
                     pack.view().data()
                 };
-                kernel::tiled_fused_topk(
+                kernel::tiled_fused_topk_sel(
+                    self.sel,
                     rows_data,
                     hs.cols,
                     group,
@@ -322,7 +332,8 @@ impl SoftmaxEngine for DsSoftmax {
             let ex = &self.set.experts[expert];
             // all rows share one expert: stream its packed weights in
             // row tiles, fused top-k per row
-            kernel::tiled_fused_topk(
+            kernel::tiled_fused_topk_sel(
+                self.sel,
                 hs.data(),
                 hs.cols,
                 hs.rows,

@@ -9,11 +9,15 @@ use crate::util::topk::TopK;
 
 pub struct FullSoftmax {
     pub w: Matrix,
+    /// Construction-time kernel selection (see `DsSoftmax::sel`): the
+    /// batched logits matmul dispatches on it; `query_into` stays the
+    /// exact two-pass reference in every mode.
+    pub sel: kernel::KernelSel,
 }
 
 impl FullSoftmax {
     pub fn new(w: Matrix) -> Self {
-        Self { w }
+        Self { w, sel: kernel::selected() }
     }
 
     /// Exact probabilities over all N classes (allocates; eval use only).
@@ -45,7 +49,8 @@ impl SoftmaxEngine for FullSoftmax {
         with_scratch(|s| {
             let crate::query::QueryScratch { heap, tile, .. } = s;
             heap.set_k(k);
-            kernel::tiled_fused_topk(
+            kernel::tiled_fused_topk_sel(
+                self.sel,
                 hs.data(),
                 hs.cols,
                 hs.rows,

@@ -14,6 +14,10 @@
 //! the inner engine's expert-grouped tiled-kernel batch path and fused
 //! select-then-normalize top-k (`tensor::kernel`), which the
 //! delegating `query_batch`/`run_expert_batch` below inherit verbatim.
+//! That includes the kernel selection: the inner [`DsSoftmax`]
+//! snapshots `kernel::selected()` at construction, so a `MitosisEngine`
+//! built after `kernel::install_fast` serves through the fast FMA
+//! kernel like every other engine, with no plumbing here.
 //!
 //! This module models mitosis as it happens *in training*; the serve-time
 //! counterpart — splitting/pruning a live `ExpertSet` from observed

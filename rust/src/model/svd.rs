@@ -25,6 +25,10 @@ pub struct SvdSoftmax {
     pub window: usize,
     pub refine_frac: f64,
     pub singular_values: Vec<f32>,
+    /// Construction-time kernel selection (see `DsSoftmax::sel`): only
+    /// the preview matmul dispatches on it — the rotation and the
+    /// full-width refine `dot`s keep their exact summation orders.
+    pub sel: kernel::KernelSel,
 }
 
 impl SvdSoftmax {
@@ -44,7 +48,7 @@ impl SvdSoftmax {
         singular_values: Vec<f32>,
     ) -> Self {
         let window = window.min(b.cols);
-        Self { b, v, window, refine_frac, singular_values }
+        Self { b, v, window, refine_frac, singular_values, sel: kernel::selected() }
     }
 
     fn n_refine(&self) -> usize {
@@ -90,12 +94,13 @@ impl SoftmaxEngine for SvdSoftmax {
             let crate::query::QueryScratch { heap, heap2, tile, rot, cand, .. } = s;
             heap.set_k(k);
             heap2.set_k(nr);
-            tile.resize(kernel::TILE_ROWS * n, 0.0);
+            let tr = self.sel.tile_rows();
+            tile.resize(tr * n, 0.0);
             // per-tile rotation keeps scratch model-bounded (O(tile·d),
             // not O(batch·d)) like every other engine
-            rot.resize(kernel::TILE_ROWS * d, 0.0);
-            for t0 in (0..hs.rows).step_by(kernel::TILE_ROWS) {
-                let th = kernel::TILE_ROWS.min(hs.rows - t0);
+            rot.resize(tr * d, 0.0);
+            for t0 in (0..hs.rows).step_by(tr) {
+                let th = tr.min(hs.rows - t0);
                 // stage 1: h̃ = Vᵀ·h per row (bit-exact scalar rotation,
                 // see `rotate_into`)
                 for i in 0..th {
@@ -103,7 +108,8 @@ impl SoftmaxEngine for SvdSoftmax {
                 }
                 // stage 2: preview logits over the top-w singular
                 // directions (reduce over the h̃ prefix: d = w < stride)
-                kernel::matmul_nt_strided_into(
+                kernel::matmul_nt_strided_into_sel(
+                    self.sel,
                     rot,
                     d,
                     &self.b.data,

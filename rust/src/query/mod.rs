@@ -282,8 +282,12 @@ impl RowPack {
 pub struct QueryScratch {
     pub gate: Vec<f32>,
     pub heap: TopK,
-    /// kernel tile output: `TILE_ROWS` rows of logits at the engine's
-    /// class-row stride
+    /// kernel tile output: one row-tile of logits at the engine's
+    /// class-row stride.  The tile height comes from the engine's
+    /// construction-time `KernelSel` (the compile-time `TILE_ROWS` in
+    /// exact mode, the autotuned shape in fast mode) — the buffer is
+    /// grow-only, so engines with different selections can share one
+    /// thread's scratch safely.
     pub tile: Vec<f32>,
     /// rotated batch for the SVD two-stage projection (rows × d)
     pub rot: Vec<f32>,

@@ -22,6 +22,11 @@
 //! kernel (each expert's packed weights streamed once per row tile, see
 //! `tensor::kernel`) and fused select-then-normalize top-k that the
 //! unsharded batched path runs, on the same rows in the same order.
+//! This holds in fast mode too: the shard-local [`DsSoftmax`] engines
+//! snapshot `kernel::selected()` at construction exactly like an
+//! unsharded engine would, and gate routing is exact in every mode, so
+//! sharded fast == unsharded fast bit-for-bit (pinned by
+//! `rust/tests/fast_props.rs`).
 //!
 //! Allocation discipline: all scatter/merge state (routes, counting-sort
 //! workspace, row packs, result arenas) lives in pooled

@@ -1,0 +1,393 @@
+//! Fast-mode FMA micro-kernel (opt-in; ROADMAP direction 3).
+//!
+//! The exact kernel (`tensor::kernel`) reduces every (row, class) cell
+//! through the scalar 8-lane `dot` to stay bit-identical to the row
+//! loop.  This module trades that bit-contract for FLOP throughput: an
+//! interleaved-lane kernel that walks four class-row accumulator chains
+//! down `d` together (one context load feeds four FMA chains), compiled
+//! twice —
+//!
+//! * [`tiles_fma`]: `#[target_feature(enable = "avx2,fma")]`, where the
+//!   `mul_add` chains lower to hardware `vfmadd` and the 8-lane
+//!   accumulator arrays to ymm registers (~2× the exact kernel's FLOP
+//!   rate: half the uop count per element, and the 4-way interleave
+//!   hides the 4-cycle FMA latency);
+//! * [`tiles_portable`]: plain `+`/`*` (never `f32::mul_add` without
+//!   hardware FMA — that lowers to libm `fmaf`, ~20× slower), so the
+//!   fallback is an unrolled-scalar kernel that autovectorizes where
+//!   the ISA allows.
+//!
+//! Determinism contract: for a fixed ISA the reduction order is fully
+//! determined — 8 lanes accumulate down `d`, a sequential horizontal
+//! sum, then a scalar tail — and the per-cell chain is *identical*
+//! between the 1-column and 4-column bodies, so the **tile shape never
+//! changes fast-mode bits**; only the ISA (fused vs unfused multiply-
+//! add) does.  Fast mode therefore differs from exact mode only in
+//! reduction order / rounding, which is what the tolerance harness in
+//! `rust/tests/fast_props.rs` pins.
+//!
+//! Dispatch happens once at startup (`kernel::install_fast` →
+//! [`detect_isa`]); the hot path receives the resolved [`Isa`] inside a
+//! `KernelSel` and pays one `match` per *matmul call*, never per cell.
+
+/// Accumulator width of the reduction chains (mirrors `tensor::dot`).
+pub const LANES: usize = 8;
+
+/// Instruction set the fast kernel was dispatched to.  `Avx2Fma` is
+/// only ever constructed after `is_x86_feature_detected!` confirms both
+/// features — that runtime check is what makes calling the
+/// `#[target_feature]` body sound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// x86-64 with AVX2 + FMA: hardware fused multiply-add chains.
+    Avx2Fma,
+    /// Unrolled-scalar fallback (any arch, or x86-64 without FMA).
+    Portable,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2Fma => "avx2+fma",
+            Isa::Portable => "portable",
+        }
+    }
+}
+
+/// Runtime ISA detection.  `std::arch` caches the cpuid probe, and the
+/// result is stored once in the process-wide `KernelSel` anyway, so
+/// this never touches the hot path.
+pub fn detect_isa() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Isa::Avx2Fma;
+        }
+    }
+    Isa::Portable
+}
+
+/// One multiply-add step: fused on the FMA instantiation, separate
+/// multiply + add on the portable one.  `FUSED` is a const generic so
+/// each instantiation monomorphizes branch-free.
+#[inline(always)]
+fn fmla<const FUSED: bool>(a: f32, b: f32, acc: f32) -> f32 {
+    if FUSED {
+        a.mul_add(b, acc)
+    } else {
+        acc + a * b
+    }
+}
+
+/// Sequential horizontal sum — fixed order, shared by every body, so
+/// the per-cell reduction chain is the same everywhere.
+#[inline(always)]
+fn hsum(acc: &[f32; LANES]) -> f32 {
+    let mut s = 0.0f32;
+    for &x in acc {
+        s += x;
+    }
+    s
+}
+
+/// One output cell: 8 accumulator lanes down `d`, horizontal sum,
+/// scalar multiply-add tail.
+#[inline(always)]
+fn dot1_body<const FUSED: bool>(a: &[f32], b: &[f32], d: usize) -> f32 {
+    let split = d - d % LANES;
+    let mut acc = [0.0f32; LANES];
+    let mut l = 0;
+    while l < split {
+        for i in 0..LANES {
+            acc[i] = fmla::<FUSED>(a[l + i], b[l + i], acc[i]);
+        }
+        l += LANES;
+    }
+    let mut s = hsum(&acc);
+    for l in split..d {
+        s = fmla::<FUSED>(a[l], b[l], s);
+    }
+    s
+}
+
+/// Four output cells sharing one walk over the context row: each loaded
+/// `a` chunk feeds four independent FMA chains (the interleaved-lane
+/// core — 4 chains hide the FMA latency).  Each cell's chain is
+/// bit-identical to [`dot1_body`] on the same inputs, which is what
+/// makes the column blocking a pure-speed choice.
+#[inline(always)]
+fn dot4_body<const FUSED: bool>(
+    a: &[f32],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    b3: &[f32],
+    d: usize,
+) -> [f32; 4] {
+    let split = d - d % LANES;
+    let mut acc = [[0.0f32; LANES]; 4];
+    let mut l = 0;
+    while l < split {
+        for i in 0..LANES {
+            let x = a[l + i];
+            acc[0][i] = fmla::<FUSED>(x, b0[l + i], acc[0][i]);
+            acc[1][i] = fmla::<FUSED>(x, b1[l + i], acc[1][i]);
+            acc[2][i] = fmla::<FUSED>(x, b2[l + i], acc[2][i]);
+            acc[3][i] = fmla::<FUSED>(x, b3[l + i], acc[3][i]);
+        }
+        l += LANES;
+    }
+    let mut out = [hsum(&acc[0]), hsum(&acc[1]), hsum(&acc[2]), hsum(&acc[3])];
+    for l in split..d {
+        let x = a[l];
+        out[0] = fmla::<FUSED>(x, b0[l], out[0]);
+        out[1] = fmla::<FUSED>(x, b1[l], out[1]);
+        out[2] = fmla::<FUSED>(x, b2[l], out[2]);
+        out[3] = fmla::<FUSED>(x, b3[l], out[3]);
+    }
+    out
+}
+
+/// The tiled A·Bᵀ walk with runtime tile shape `(tr, tc)` — same
+/// traversal as the exact kernel's compile-time tiles, but the inner
+/// columns are blocked by 4 through [`dot4_body`] with a [`dot1_body`]
+/// remainder.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tiles_body<const FUSED: bool>(
+    a: &[f32],
+    a_stride: usize,
+    b: &[f32],
+    b_stride: usize,
+    m: usize,
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    tr: usize,
+    tc: usize,
+) {
+    for i0 in (0..m).step_by(tr) {
+        let ih = (i0 + tr).min(m);
+        for j0 in (0..n).step_by(tc) {
+            let jh = (j0 + tc).min(n);
+            for i in i0..ih {
+                let ar = &a[i * a_stride..i * a_stride + d];
+                let orow = i * out_stride;
+                let mut j = j0;
+                while j + 4 <= jh {
+                    let cells = dot4_body::<FUSED>(
+                        ar,
+                        &b[j * b_stride..j * b_stride + d],
+                        &b[(j + 1) * b_stride..(j + 1) * b_stride + d],
+                        &b[(j + 2) * b_stride..(j + 2) * b_stride + d],
+                        &b[(j + 3) * b_stride..(j + 3) * b_stride + d],
+                        d,
+                    );
+                    out[orow + j..orow + j + 4].copy_from_slice(&cells);
+                    j += 4;
+                }
+                while j < jh {
+                    out[orow + j] =
+                        dot1_body::<FUSED>(ar, &b[j * b_stride..j * b_stride + d], d);
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+/// AVX2+FMA instantiation.  `#[target_feature]` on a safe fn needs
+/// Rust 1.86 and the crate pins 1.75, hence the `unsafe fn` form.
+///
+/// # Safety
+/// The caller must have verified AVX2 and FMA support; the only
+/// constructor of [`Isa::Avx2Fma`] is [`detect_isa`], which does.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tiles_fma(
+    a: &[f32],
+    a_stride: usize,
+    b: &[f32],
+    b_stride: usize,
+    m: usize,
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    tr: usize,
+    tc: usize,
+) {
+    tiles_body::<true>(a, a_stride, b, b_stride, m, n, d, out, out_stride, tr, tc);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn tiles_portable(
+    a: &[f32],
+    a_stride: usize,
+    b: &[f32],
+    b_stride: usize,
+    m: usize,
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    tr: usize,
+    tc: usize,
+) {
+    tiles_body::<false>(a, a_stride, b, b_stride, m, n, d, out, out_stride, tr, tc);
+}
+
+/// Fast-mode `out[i*out_stride + j] = a_row_i · b_row_j` — the drop-in
+/// counterpart of `kernel::matmul_nt_strided_into` with runtime tile
+/// shape and one ISA dispatch per call.  Shape contract is identical to
+/// the exact kernel's.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_fast(
+    isa: Isa,
+    a: &[f32],
+    a_stride: usize,
+    b: &[f32],
+    b_stride: usize,
+    m: usize,
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    tr: usize,
+    tc: usize,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    assert!(tr >= 1 && tc >= 1, "degenerate tile {tr}x{tc}");
+    assert!(
+        (m - 1) * a_stride + d <= a.len(),
+        "a too short: m={m} stride={a_stride} d={d} len={}",
+        a.len()
+    );
+    assert!(
+        (n - 1) * b_stride + d <= b.len(),
+        "b too short: n={n} stride={b_stride} d={d} len={}",
+        b.len()
+    );
+    assert!(
+        (m - 1) * out_stride + n <= out.len(),
+        "out too short: m={m} stride={out_stride} n={n} len={}",
+        out.len()
+    );
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only constructed by `detect_isa` after the
+        // runtime feature check succeeded.
+        Isa::Avx2Fma => unsafe {
+            tiles_fma(a, a_stride, b, b_stride, m, n, d, out, out_stride, tr, tc)
+        },
+        _ => tiles_portable(a, a_stride, b, b_stride, m, n, d, out, out_stride, tr, tc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, n: usize, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for l in 0..d {
+                    s += a[i * d + l] as f64 * b[j * d + l] as f64;
+                }
+                out[i * n + j] = s as f32;
+            }
+        }
+        out
+    }
+
+    fn close(x: f32, y: f32, d: usize) -> bool {
+        let tol = 1e-5f32 * (d.max(1) as f32).sqrt() * x.abs().max(y.abs()).max(1.0);
+        (x - y).abs() <= tol
+    }
+
+    #[test]
+    fn portable_matches_naive_over_shapes() {
+        let mut rng = Rng::new(41);
+        for &(m, n, d) in
+            &[(1, 1, 1), (3, 5, 7), (4, 8, 16), (5, 13, 9), (2, 3, 200), (7, 31, 33)]
+        {
+            let a = rng.normal_vec(m * d, 1.0);
+            let b = rng.normal_vec(n * d, 0.1);
+            let want = naive(&a, &b, m, n, d);
+            let mut got = vec![0.0f32; m * n];
+            matmul_nt_fast(Isa::Portable, &a, d, &b, d, m, n, d, &mut got, n, 4, 8);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(close(*g, *w, d), "{g} vs {w} at m={m} n={n} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn detected_isa_matches_naive() {
+        // whatever the host dispatches to must agree with the f64
+        // reference within tolerance — this is the cheap in-crate
+        // version of the fast_props harness
+        let isa = detect_isa();
+        let mut rng = Rng::new(42);
+        let (m, n, d) = (6, 17, 50);
+        let a = rng.normal_vec(m * d, 1.0);
+        let b = rng.normal_vec(n * d, 0.1);
+        let want = naive(&a, &b, m, n, d);
+        let mut got = vec![0.0f32; m * n];
+        matmul_nt_fast(isa, &a, d, &b, d, m, n, d, &mut got, n, 4, 8);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(close(*g, *w, d), "{g} vs {w} under {}", isa.name());
+        }
+    }
+
+    #[test]
+    fn tile_shape_never_changes_bits() {
+        // the per-cell chain is identical in dot1/dot4, so any tile
+        // shape must produce the same bit pattern for a fixed ISA
+        let mut rng = Rng::new(43);
+        let (m, n, d) = (5, 11, 37);
+        let a = rng.normal_vec(m * d, 1.0);
+        let b = rng.normal_vec(n * d, 0.1);
+        let mut base = vec![0.0f32; m * n];
+        matmul_nt_fast(Isa::Portable, &a, d, &b, d, m, n, d, &mut base, n, 1, 1);
+        for &(tr, tc) in &[(2, 4), (4, 8), (8, 16), (3, 5), (16, 32)] {
+            let mut got = vec![0.0f32; m * n];
+            matmul_nt_fast(Isa::Portable, &a, d, &b, d, m, n, d, &mut got, n, tr, tc);
+            for (g, w) in got.iter().zip(&base) {
+                assert_eq!(g.to_bits(), w.to_bits(), "tile {tr}x{tc} changed bits");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let mut out = [9.0f32; 4];
+        matmul_nt_fast(Isa::Portable, &a, 2, &b, 2, 0, 2, 2, &mut out, 2, 4, 8);
+        matmul_nt_fast(Isa::Portable, &a, 2, &b, 2, 1, 0, 2, &mut out, 2, 4, 8);
+        assert_eq!(out, [9.0f32; 4]); // m==0 / n==0 touch nothing
+        matmul_nt_fast(Isa::Portable, &a, 2, &b, 2, 1, 1, 0, &mut out, 2, 4, 8);
+        assert_eq!(out[0], 0.0); // d==0 writes the empty dot
+    }
+
+    #[test]
+    fn strided_output_rows() {
+        let a = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [2.0f32, 3.0, 4.0, 5.0];
+        let mut out = [7.0f32; 6]; // out_stride 3 > n 2
+        matmul_nt_fast(Isa::Portable, &a, 2, &b, 2, 2, 2, 2, &mut out, 3, 4, 8);
+        assert_eq!(&out[..2], &[2.0, 4.0]);
+        assert_eq!(&out[3..5], &[3.0, 5.0]);
+        assert_eq!(out[2], 7.0); // stride gap untouched
+    }
+}

@@ -33,8 +33,23 @@
 //! ≤1-ulp boundary event that additionally has to straddle the top-k
 //! threshold to be observable.  The fused path then keeps the
 //! strictly-larger logit, i.e. the mathematically correct winner.
+//!
+//! **Fast mode** (opt-in, ROADMAP direction 3): [`install_fast`]
+//! swaps the per-cell reduction for the interleaved-lane FMA kernel in
+//! [`fast`] and the compile-time tile constants for the startup
+//! autotune in [`tune`], recorded process-wide in a [`KernelSel`].
+//! Engines snapshot the selection at construction (`selected()`), so
+//! the hot path dispatches on a plain enum field — zero per-call
+//! branches beyond one `match` per matmul.  Exact mode stays the
+//! default and is bit-identical to the seed row loop; fast mode's
+//! tolerance contract lives in `rust/tests/fast_props.rs`.
+
+use std::sync::OnceLock;
 
 use crate::query::MatrixView;
+// re-exported so the fast plane reads as part of the kernel namespace
+// (`kernel::fast::Isa`, `kernel::tune::autotune`)
+pub use crate::tensor::{fast, tune};
 use crate::tensor::{dot, Matrix};
 use crate::util::topk::TopK;
 
@@ -44,6 +59,82 @@ use crate::util::topk::TopK;
 pub const TILE_ROWS: usize = 4;
 /// Class rows per output tile.
 pub const TILE_COLS: usize = 8;
+
+/// Which arithmetic contract the batched matmuls run under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Bit-identical to the seed row loop (the default): every cell
+    /// reduced by the 8-lane [`dot`], compile-time tiles.
+    Exact,
+    /// Interleaved-lane FMA kernel ([`fast`]) with the autotuned tile:
+    /// deterministic per ISA, but a different reduction order — results
+    /// agree with exact mode to tolerance, not bit-for-bit.
+    Fast,
+}
+
+/// The resolved kernel selection: mode + dispatched ISA + tile shape.
+/// Resolved once per process ([`install_fast`]) and snapshotted into
+/// every engine at construction, so hot paths never consult globals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelSel {
+    pub mode: KernelMode,
+    pub isa: fast::Isa,
+    /// `(rows, cols)` — compile-time constants in exact mode, the
+    /// autotune winner (or `DSS_TILE`) in fast mode.
+    pub tile: (usize, usize),
+}
+
+impl KernelSel {
+    /// The default exact selection (what `selected()` reports before
+    /// any `install_fast`).
+    pub fn exact() -> Self {
+        Self {
+            mode: KernelMode::Exact,
+            isa: fast::Isa::Portable,
+            tile: (TILE_ROWS, TILE_COLS),
+        }
+    }
+
+    pub fn mode_name(&self) -> &'static str {
+        match self.mode {
+            KernelMode::Exact => "exact",
+            KernelMode::Fast => "fast",
+        }
+    }
+
+    pub fn isa_name(&self) -> &'static str {
+        self.isa.name()
+    }
+
+    #[inline]
+    pub fn tile_rows(&self) -> usize {
+        self.tile.0
+    }
+}
+
+static SEL: OnceLock<KernelSel> = OnceLock::new();
+
+/// Arm fast mode for this process: detect the ISA, autotune the tile
+/// on the serve shape (`dim`, typical packed expert rows — pinnable
+/// via `DSS_TILE`), and record the selection for every engine built
+/// afterwards.  Idempotent: the first install wins (the coordinator,
+/// workers, and benches may all race to call this), and engines built
+/// *before* the install keep serving exact — construction order is the
+/// arming point, which is why `dss … --fast` installs before building
+/// any engine.
+pub fn install_fast(dim: usize, expert_rows: usize) -> KernelSel {
+    *SEL.get_or_init(|| {
+        let isa = fast::detect_isa();
+        let tile = tune::autotune(isa, dim, expert_rows);
+        KernelSel { mode: KernelMode::Fast, isa, tile }
+    })
+}
+
+/// The process-wide selection: [`KernelSel::exact`] unless
+/// [`install_fast`] ran first.
+pub fn selected() -> KernelSel {
+    SEL.get().copied().unwrap_or_else(KernelSel::exact)
+}
 
 /// C = A·Bᵀ into caller scratch, tiled.  `a` holds `m` rows of `d`
 /// values each, laid out `a_stride` apart (rows may be wider than the
@@ -98,6 +189,34 @@ pub fn matmul_nt_strided_into(
 pub fn matmul_nt_into(a: MatrixView<'_>, b: &Matrix, out: &mut [f32]) {
     assert_eq!(a.cols, b.cols, "matmul_nt_into width mismatch");
     matmul_nt_strided_into(a.data(), a.cols, &b.data, b.cols, a.rows, b.rows, a.cols, out, b.rows);
+}
+
+/// Selection-aware [`matmul_nt_strided_into`]: exact mode runs the
+/// bit-identical tiled path above, fast mode the interleaved-lane FMA
+/// kernel with the autotuned tile.  Engines call this with their
+/// construction-time [`KernelSel`] snapshot — one `match` per matmul
+/// call, nothing per cell.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_strided_into_sel(
+    sel: KernelSel,
+    a: &[f32],
+    a_stride: usize,
+    b: &[f32],
+    b_stride: usize,
+    m: usize,
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    match sel.mode {
+        KernelMode::Exact => {
+            matmul_nt_strided_into(a, a_stride, b, b_stride, m, n, d, out, out_stride)
+        }
+        KernelMode::Fast => fast::matmul_nt_fast(
+            sel.isa, a, a_stride, b, b_stride, m, n, d, out, out_stride, sel.tile.0, sel.tile.1,
+        ),
+    }
 }
 
 /// Fused select-then-normalize, stage 1+2: select the top-k **scaled
@@ -173,13 +292,61 @@ pub fn tiled_fused_topk(
     d: usize,
     tile: &mut Vec<f32>,
     heap: &mut TopK,
+    scale_of: impl FnMut(usize) -> f32,
+    emit: impl FnMut(usize, u32, f32),
+) {
+    tiled_fused_topk_sel(
+        KernelSel::exact(),
+        a,
+        a_stride,
+        rows,
+        b,
+        b_stride,
+        n,
+        d,
+        tile,
+        heap,
+        scale_of,
+        emit,
+    );
+}
+
+/// Selection-aware [`tiled_fused_topk`]: the row-tile height and the
+/// matmul come from `sel`; the fused select-then-normalize tail is the
+/// same exact code in both modes (selection order and the exp-sum only
+/// see the logits the matmul produced).  With `KernelSel::exact()` this
+/// is the original function, bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn tiled_fused_topk_sel(
+    sel: KernelSel,
+    a: &[f32],
+    a_stride: usize,
+    rows: usize,
+    b: &[f32],
+    b_stride: usize,
+    n: usize,
+    d: usize,
+    tile: &mut Vec<f32>,
+    heap: &mut TopK,
     mut scale_of: impl FnMut(usize) -> f32,
     mut emit: impl FnMut(usize, u32, f32),
 ) {
-    tile.resize(TILE_ROWS * n, 0.0);
-    for t0 in (0..rows).step_by(TILE_ROWS) {
-        let th = TILE_ROWS.min(rows - t0);
-        matmul_nt_strided_into(&a[t0 * a_stride..], a_stride, b, b_stride, th, n, d, tile, n);
+    let tr = sel.tile_rows();
+    tile.resize(tr * n, 0.0);
+    for t0 in (0..rows).step_by(tr) {
+        let th = tr.min(rows - t0);
+        matmul_nt_strided_into_sel(
+            sel,
+            &a[t0 * a_stride..],
+            a_stride,
+            b,
+            b_stride,
+            th,
+            n,
+            d,
+            tile,
+            n,
+        );
         for i in 0..th {
             let row_logits = &tile[i * n..(i + 1) * n];
             let (m, inv) = select_scaled_topk(row_logits, scale_of(t0 + i), heap);
@@ -270,6 +437,55 @@ mod tests {
         let mut sum = 0.0;
         emit_normalized(&mut heap, m, inv, |_, p| sum += p);
         assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn default_selection_is_exact() {
+        // NOTE: no unit test in this binary may call `install_fast` —
+        // the OnceLock is process-wide and tests run in parallel.  The
+        // fast-mode install path is exercised by the dedicated
+        // integration binary `rust/tests/fast_props.rs`.
+        let sel = KernelSel::exact();
+        assert_eq!(sel.mode_name(), "exact");
+        assert_eq!(sel.tile, (TILE_ROWS, TILE_COLS));
+        assert_eq!(sel.isa_name(), "portable");
+    }
+
+    #[test]
+    fn sel_exact_matches_legacy_bit_for_bit() {
+        let mut rng = Rng::new(7);
+        let (m, n, d) = (5usize, 11usize, 37usize);
+        let a = Matrix::random(m, d, &mut rng, 1.0);
+        let b = Matrix::random(n, d, &mut rng, 1.0);
+        let mut legacy = vec![0.0f32; m * n];
+        let mut via_sel = vec![0.0f32; m * n];
+        matmul_nt_strided_into(&a.data, d, &b.data, d, m, n, d, &mut legacy, n);
+        matmul_nt_strided_into_sel(KernelSel::exact(), &a.data, d, &b.data, d, m, n, d, &mut via_sel, n);
+        for (x, y) in via_sel.iter().zip(&legacy) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn sel_fast_agrees_with_exact_to_tolerance() {
+        // an explicitly-constructed fast sel (no global install): the
+        // portable fast kernel vs the exact kernel on one shape
+        let sel = KernelSel {
+            mode: KernelMode::Fast,
+            isa: fast::Isa::Portable,
+            tile: (3, 5),
+        };
+        let mut rng = Rng::new(8);
+        let (m, n, d) = (4usize, 13usize, 50usize);
+        let a = Matrix::random(m, d, &mut rng, 1.0);
+        let b = Matrix::random(n, d, &mut rng, 0.1);
+        let mut exact = vec![0.0f32; m * n];
+        let mut fast_out = vec![0.0f32; m * n];
+        matmul_nt_strided_into(&a.data, d, &b.data, d, m, n, d, &mut exact, n);
+        matmul_nt_strided_into_sel(sel, &a.data, d, &b.data, d, m, n, d, &mut fast_out, n);
+        for (x, y) in fast_out.iter().zip(&exact) {
+            assert!((x - y).abs() <= 1e-4 * x.abs().max(y.abs()).max(1.0), "{x} vs {y}");
+        }
     }
 
     #[test]

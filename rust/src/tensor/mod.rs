@@ -10,7 +10,9 @@
 //! register-blocked, cache-tiled A·Bᵀ micro-kernel and the fused
 //! select-then-normalize top-k.
 
+pub mod fast;
 pub mod kernel;
+pub mod tune;
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -93,17 +95,19 @@ impl Matrix {
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    // remainder split hoisted once up front: everything below `split`
+    // reduces through the 8-lane chunks, everything at or above it
+    // through the scalar tail — same operation order as the
+    // chunks/remainder formulation, so results stay bit-identical
+    let split = a.len() - a.len() % 8;
     let mut acc = [0.0f32; 8];
-    let ca = a.chunks_exact(8);
-    let cb = b.chunks_exact(8);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (x, y) in ca.zip(cb) {
+    for (x, y) in a[..split].chunks_exact(8).zip(b[..split].chunks_exact(8)) {
         for i in 0..8 {
             acc[i] += x[i] * y[i];
         }
     }
     let mut s: f32 = acc.iter().sum();
-    for (x, y) in ra.iter().zip(rb) {
+    for (x, y) in a[split..].iter().zip(&b[split..]) {
         s += x * y;
     }
     s
@@ -162,7 +166,7 @@ mod tests {
     #[test]
     fn dot_matches_naive() {
         let mut rng = Rng::new(1);
-        for n in [0, 1, 3, 4, 7, 64, 129] {
+        for n in [0, 1, 3, 4, 7, 8, 9, 63, 64, 65, 129] {
             let a = rng.normal_vec(n, 1.0);
             let b = rng.normal_vec(n, 1.0);
             let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
