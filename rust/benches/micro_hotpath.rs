@@ -546,6 +546,64 @@ fn main() {
     report.push("trace-unsampled-guard", "span()+drop", 1, 1, m_guard.median_ns);
     report.push("trace-sampled-span", "record to ring", 1, 1, m_span.median_ns);
 
+    // artifact plane: raw SHA-256 throughput bounds the verify cost of
+    // every rollout, then the end-to-end delta of loading a blob
+    // through the verifying streaming reader vs a plain read — the
+    // number EXPERIMENTS.md §Artifacts cites for "verification is not
+    // a rollout tax"
+    {
+        use ds_softmax::artifact::{hash, stamp};
+        use ds_softmax::artifacts::write_artifact_dir;
+        let data: Vec<u8> = (0..8usize * 1024 * 1024)
+            .map(|i| (i as u32).wrapping_mul(2654435761) as u8)
+            .collect();
+        let m_sha = bench("sha256", 3, 20, || {
+            std::hint::black_box(hash::sha256(&data));
+        });
+        let mbps = data.len() as f64 * 1e3 / m_sha.median_ns;
+        table.row(vec![
+            "sha256".into(),
+            "8 MiB buffer".into(),
+            format!("{:.1}ms", m_sha.median_ns / 1e6),
+            format!("{mbps:.0} MB/s"),
+        ]);
+        report.push("sha256", "8MiB", 1, 1, m_sha.median_ns);
+        report.metric("sha256_mb_per_s", mbps);
+
+        let dir = std::env::temp_dir().join(format!("dss-microhot-art-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("bench artifact dir");
+        let mut arng = Rng::new(7);
+        let aset = ExpertSet::synthetic(4_096, 128, 8, 1.5, &mut arng);
+        write_artifact_dir(&dir, "microhot", &aset, &[0.125; 8]).expect("write artifact");
+        stamp(&dir, Some(1)).expect("stamp artifact");
+        let blob = dir.join("packed.bin");
+        let expect = hash::sha256_hex(&std::fs::read(&blob).expect("read blob"));
+        let blob_mb = std::fs::metadata(&blob).expect("blob size").len() as f64 / 1e6;
+        let m_raw = bench("blob raw load", 5, 100, || {
+            std::hint::black_box(std::fs::read(&blob).expect("raw read"));
+        });
+        let m_ver = bench("blob verified load", 5, 100, || {
+            std::hint::black_box(hash::read_verified(&blob, &expect).expect("verified read"));
+        });
+        table.row(vec![
+            "blob raw load".into(),
+            format!("{blob_mb:.1} MB"),
+            format!("{:.1}µs", m_raw.median_ns / 1e3),
+            "-".into(),
+        ]);
+        table.row(vec![
+            "blob verified load".into(),
+            format!("{blob_mb:.1} MB"),
+            format!("{:.1}µs", m_ver.median_ns / 1e3),
+            format!("(raw {:.2}x)", m_ver.median_ns / m_raw.median_ns.max(1.0)),
+        ]);
+        report.push("artifact-raw-load", "packed.bin", 1, 1, m_raw.median_ns);
+        report.push("artifact-verified-load", "packed.bin", 1, 1, m_ver.median_ns);
+        report.metric("verify_load_overhead_x", m_ver.median_ns / m_raw.median_ns.max(1.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     table.print();
     // counters + quantiles exported the same way `dss serve` does on
     // shutdown — keeps the bench's JSON trail machine-readable

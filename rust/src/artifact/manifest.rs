@@ -1,0 +1,382 @@
+//! Manifest v2: the integrity-checked superset of `manifest.json`.
+//!
+//! A v2 manifest is a strict superset of the v1 format `artifacts.rs`
+//! parses — every v1 field survives untouched, so `Manifest::load`
+//! still works on a stamped directory — plus:
+//!
+//! - `manifest_version: 2` — format gate;
+//! - `generation: N` — monotone rollout ordinal; the watcher only
+//!   installs strictly newer generations;
+//! - per-weight `sha256` and a `files_sha256` map for the HLO texts —
+//!   every byte the loader will touch has a recorded digest;
+//! - `compat: {d, n_classes, k}` — the shape contract a running
+//!   engine checks *before* reading any blob;
+//! - `self_sha256` — digest of the manifest's own canonical rendering
+//!   with `self_sha256` set to `""`.  The in-house `Json` renders
+//!   objects in `BTreeMap` order with no insignificant whitespace, so
+//!   stamping and verification canonicalize identically and a single
+//!   flipped bit anywhere in the file either breaks the parse or
+//!   breaks this digest.
+//!
+//! `stamp` (behind `dss pack`) upgrades a directory in place and is
+//! idempotent: re-stamping an already-stamped directory rewrites the
+//! byte-identical file.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::artifact::hash;
+use crate::artifacts::Manifest;
+use crate::sparse::ExpertSet;
+use crate::util::json::Json;
+
+/// The shape-compatibility block checked against a serving engine
+/// before any blob is read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Compat {
+    pub d: usize,
+    pub n_classes: usize,
+    pub k: usize,
+}
+
+/// A parsed, self-hash-verified v2 manifest.
+#[derive(Clone, Debug)]
+pub struct ManifestV2 {
+    /// The v1 view (blob metadata, shapes, loader methods).
+    pub base: Manifest,
+    pub generation: u64,
+    pub compat: Compat,
+    /// weight name → expected blob sha256 (hex).
+    pub blob_sha: BTreeMap<String, String>,
+    /// logical HLO name → expected file sha256 (hex).
+    pub file_sha: BTreeMap<String, String>,
+    pub self_sha256: String,
+    /// sha256 of the manifest file's raw on-disk bytes — the identity
+    /// the rollout watcher keys seen/rejected candidates on.
+    pub raw_sha256: String,
+}
+
+/// Canonical self-hash of a parsed manifest object: render with
+/// `self_sha256` forced to `""`, digest the rendering.
+fn self_hash(j: &Json) -> Result<String> {
+    let mut m = j.as_obj().map_err(anyhow::Error::from)?.clone();
+    m.insert("self_sha256".to_string(), Json::Str(String::new()));
+    Ok(hash::sha256_hex(Json::Obj(m).to_string().as_bytes()))
+}
+
+impl ManifestV2 {
+    /// Load and structurally verify a v2 manifest: version gate,
+    /// self-hash, v1 shape validation.  Blob hashes are *not* checked
+    /// here — that happens while streaming in `load_verified_set` /
+    /// `verify_blobs`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let raw = std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+        let raw_sha256 = hash::sha256_hex(&raw);
+        let text = std::str::from_utf8(&raw)
+            .with_context(|| format!("{} is not UTF-8", path.display()))?;
+        let j = Json::parse(text).with_context(|| format!("parse {}", path.display()))?;
+
+        let version = match j.opt("manifest_version") {
+            Some(v) => v.as_usize().map_err(anyhow::Error::from)?,
+            None => 1,
+        };
+        anyhow::ensure!(
+            version == 2,
+            "{}: manifest_version {} (need 2 — run `dss pack` to stamp)",
+            path.display(),
+            version
+        );
+        let self_sha256 = j
+            .get("self_sha256")
+            .map_err(anyhow::Error::from)?
+            .as_str()
+            .map_err(anyhow::Error::from)?
+            .to_string();
+        let computed = self_hash(&j)?;
+        anyhow::ensure!(
+            computed == self_sha256,
+            "{}: self_sha256 mismatch: manifest claims {}, canonical rendering hashes to {} \
+             (manifest tampered or hand-edited after stamping)",
+            path.display(),
+            self_sha256,
+            computed
+        );
+
+        let base = Manifest::load(&dir)?;
+        let generation = j.get("generation").map_err(anyhow::Error::from)?.as_f64()? as u64;
+        let c = j.get("compat").map_err(anyhow::Error::from)?;
+        let compat = Compat {
+            d: c.get("d")?.as_usize()?,
+            n_classes: c.get("n_classes")?.as_usize()?,
+            k: c.get("k")?.as_usize()?,
+        };
+        anyhow::ensure!(
+            compat.d == base.d && compat.n_classes == base.n_classes && compat.k == base.k,
+            "{}: compat block {:?} disagrees with manifest body (d={}, n_classes={}, k={})",
+            path.display(),
+            compat,
+            base.d,
+            base.n_classes,
+            base.k
+        );
+
+        let mut blob_sha = BTreeMap::new();
+        for (name, w) in j.get("weights").map_err(anyhow::Error::from)?.as_obj()? {
+            let sha = w
+                .opt("sha256")
+                .ok_or_else(|| anyhow::anyhow!("{}: weight '{name}' has no sha256", path.display()))?
+                .as_str()?
+                .to_string();
+            blob_sha.insert(name.clone(), sha);
+        }
+        let mut file_sha = BTreeMap::new();
+        if let Some(fs) = j.opt("files_sha256") {
+            for (name, v) in fs.as_obj()? {
+                file_sha.insert(name.clone(), v.as_str()?.to_string());
+            }
+        }
+        Ok(Self { base, generation, compat, blob_sha, file_sha, self_sha256, raw_sha256 })
+    }
+
+    /// True when this artifact can replace an engine serving the
+    /// given shape.
+    pub fn compatible_with(&self, d: usize, n_classes: usize, k: usize) -> bool {
+        self.compat == Compat { d, n_classes, k }
+    }
+
+    /// Load the expert set with every blob streamed through a
+    /// `HashingReader` — one read pass, hash-verified against the
+    /// manifest before any byte is trusted.
+    pub fn load_verified_set(&self) -> Result<ExpertSet> {
+        // Resolve weight-name-keyed digests to the concrete blob
+        // paths the loader will open (store manifests use relative
+        // `../../objects/<hex>` files, so key on the joined path).
+        let mut by_path: BTreeMap<PathBuf, &str> = BTreeMap::new();
+        for (name, info) in &self.base.weights {
+            let sha = self
+                .blob_sha
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("no recorded sha256 for weight '{name}'"))?;
+            by_path.insert(self.base.dir.join(&info.file), sha.as_str());
+        }
+        let mut read = |path: &Path| -> Result<Vec<u8>> {
+            let expect = by_path
+                .get(path)
+                .ok_or_else(|| anyhow::anyhow!("no recorded sha256 for blob {}", path.display()))?;
+            hash::read_verified(path, expect)
+        };
+        let set = self.base.expert_set_with(&mut read)?;
+        set.validate().map_err(|e| anyhow::anyhow!("artifact expert set invalid: {e}"))?;
+        Ok(set)
+    }
+
+    /// Stream-verify every recorded digest (all weight blobs and all
+    /// HLO files) without building an engine.  Used by `dss pack
+    /// --check`.  Returns the number of files verified.
+    pub fn verify_blobs(&self) -> Result<usize> {
+        let mut n = 0;
+        for (name, info) in &self.base.weights {
+            let expect = self
+                .blob_sha
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("no recorded sha256 for weight '{name}'"))?;
+            hash::read_verified(&self.base.dir.join(&info.file), expect)?;
+            n += 1;
+        }
+        for (logical, file) in &self.base.files {
+            let expect = self
+                .file_sha
+                .get(logical)
+                .ok_or_else(|| anyhow::anyhow!("no recorded sha256 for file '{logical}'"))?;
+            hash::read_verified(&self.base.dir.join(file), expect)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+/// Stamp (or re-stamp) an artifact directory as manifest v2: hash
+/// every blob and HLO file, attach the compat block, set the
+/// generation, and seal with the canonical self-hash.
+///
+/// `generation`: `Some(g)` forces the ordinal; `None` keeps an
+/// existing one (already-v2 manifest) or starts at 1 (v1 manifest).
+/// Re-stamping with `None` is byte-idempotent.
+pub fn stamp(dir: impl AsRef<Path>, generation: Option<u64>) -> Result<ManifestV2> {
+    let dir = dir.as_ref().to_path_buf();
+    let path = dir.join("manifest.json");
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("read {}", path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+    let mut m = j.as_obj().map_err(anyhow::Error::from)?.clone();
+
+    let gen = match generation {
+        Some(g) => g,
+        None => match m.get("generation") {
+            Some(g) => g.as_f64()? as u64,
+            None => 1,
+        },
+    };
+    anyhow::ensure!(gen >= 1, "generation must be >= 1 (got {gen})");
+
+    // Per-weight blob digests, streamed.
+    let weights = m
+        .get("weights")
+        .ok_or_else(|| anyhow::anyhow!("{}: no weights table", path.display()))?
+        .as_obj()?
+        .clone();
+    let mut stamped_weights = BTreeMap::new();
+    for (name, w) in weights {
+        let mut wo = w.as_obj()?.clone();
+        let file = wo
+            .get("file")
+            .ok_or_else(|| anyhow::anyhow!("weight '{name}' has no file"))?
+            .as_str()?
+            .to_string();
+        let sha = hash_file(&dir.join(&file))
+            .with_context(|| format!("hash blob for weight '{name}'"))?;
+        wo.insert("sha256".to_string(), Json::Str(sha));
+        stamped_weights.insert(name, Json::Obj(wo));
+    }
+    m.insert("weights".to_string(), Json::Obj(stamped_weights));
+
+    // HLO file digests.
+    let mut files_sha = BTreeMap::new();
+    if let Some(files) = m.get("files") {
+        for (logical, file) in files.as_obj()?.clone() {
+            let sha = hash_file(&dir.join(file.as_str()?))
+                .with_context(|| format!("hash file '{logical}'"))?;
+            files_sha.insert(logical, Json::Str(sha));
+        }
+    }
+    m.insert("files_sha256".to_string(), Json::Obj(files_sha));
+
+    // Compat block from the manifest body.
+    let field = |k: &str| -> Result<usize> {
+        Ok(m.get(k)
+            .ok_or_else(|| anyhow::anyhow!("{}: no '{k}'", path.display()))?
+            .as_usize()?)
+    };
+    let compat = Json::obj(vec![
+        ("d", field("d")?.into()),
+        ("n_classes", field("n_classes")?.into()),
+        ("k", field("k")?.into()),
+    ]);
+    m.insert("compat".to_string(), compat);
+    m.insert("manifest_version".to_string(), Json::Num(2.0));
+    m.insert("generation".to_string(), Json::Num(gen as f64));
+
+    // Seal: self-hash over the canonical rendering with an empty
+    // self_sha256 slot, then write exactly that canonical text.
+    let sealed = self_hash(&Json::Obj(m.clone()))?;
+    m.insert("self_sha256".to_string(), Json::Str(sealed));
+    std::fs::write(&path, format!("{}\n", Json::Obj(m)))
+        .with_context(|| format!("write {}", path.display()))?;
+
+    // Re-load through the verifying path: proves the stamp is
+    // self-consistent before anyone trusts it.
+    ManifestV2::load(&dir)
+}
+
+fn hash_file(path: &PathBuf) -> Result<String> {
+    use std::io::Read;
+    let file =
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut reader = hash::HashingReader::new(file);
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        let n = reader.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+    }
+    Ok(hash::hex(&reader.digest()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::write_artifact_dir;
+    use crate::util::rng::Rng;
+
+    fn mk_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dss-manifest2-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn mk_artifact(dir: &Path, seed: u64) -> ExpertSet {
+        let mut rng = Rng::new(seed);
+        let set = ExpertSet::synthetic(40, 8, 4, 2.0, &mut rng);
+        write_artifact_dir(dir, "v2test", &set, &[0.25; 4]).unwrap();
+        set
+    }
+
+    #[test]
+    fn stamp_then_load_verifies() {
+        let dir = mk_dir("stamp");
+        let set = mk_artifact(&dir, 3);
+        // v1 load refuses nothing; v2 load refuses unstamped.
+        assert!(ManifestV2::load(&dir).is_err());
+        let m2 = stamp(&dir, None).unwrap();
+        assert_eq!(m2.generation, 1);
+        assert_eq!(m2.compat, Compat { d: 8, n_classes: 40, k: 4 });
+        assert_eq!(m2.verify_blobs().unwrap(), 4);
+        let loaded = m2.load_verified_set().unwrap();
+        assert_eq!(loaded.gate.data, set.gate.data);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stamp_is_idempotent_and_generation_sticks() {
+        let dir = mk_dir("idem");
+        mk_artifact(&dir, 4);
+        stamp(&dir, Some(7)).unwrap();
+        let first = std::fs::read(dir.join("manifest.json")).unwrap();
+        let again = stamp(&dir, None).unwrap();
+        assert_eq!(again.generation, 7);
+        let second = std::fs::read(dir.join("manifest.json")).unwrap();
+        assert_eq!(first, second, "re-stamp must be byte-identical");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_tamper_is_rejected() {
+        let dir = mk_dir("tamper");
+        mk_artifact(&dir, 5);
+        stamp(&dir, Some(2)).unwrap();
+        let path = dir.join("manifest.json");
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit mid-file: either the parse breaks or the
+        // canonical rendering changes and the self-hash catches it.
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ManifestV2::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn blob_tamper_is_rejected_at_stream_time() {
+        let dir = mk_dir("blobflip");
+        mk_artifact(&dir, 6);
+        let m2 = stamp(&dir, None).unwrap();
+        let blob = dir.join("packed.bin");
+        let mut bytes = std::fs::read(&blob).unwrap();
+        bytes[17] ^= 0x01;
+        std::fs::write(&blob, &bytes).unwrap();
+        // Structural load still passes (manifest untouched)…
+        let m2b = ManifestV2::load(&dir).unwrap();
+        assert_eq!(m2b.raw_sha256, m2.raw_sha256);
+        // …but the streaming verify names the file.
+        let err = m2b.load_verified_set().unwrap_err();
+        assert!(format!("{err:#}").contains("packed.bin"), "{err:#}");
+        assert!(format!("{err:#}").contains("sha256 mismatch"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

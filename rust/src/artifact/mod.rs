@@ -1,0 +1,44 @@
+//! The content-addressed artifact plane: verified model rollout and
+//! rollback as live engine swaps.
+//!
+//! DS-Softmax is learning-based — weights are retrained continuously,
+//! so a production serve must ingest trained-elsewhere models as its
+//! steady state.  This plane is the trust boundary between "bytes on
+//! disk" and "the serving engine":
+//!
+//! - [`hash`] — dependency-free, test-vectored SHA-256 plus a
+//!   streaming [`hash::HashingReader`], so blobs are verified *while*
+//!   being read (one pass, no post-hoc window where unverified bytes
+//!   were already trusted);
+//! - [`manifest`] — manifest v2: per-blob digests, a monotone
+//!   `generation`, a `dim`/`n_classes`/`k` compatibility block
+//!   checked before any blob is read, and a canonical self-hash that
+//!   makes the manifest itself tamper-evident; `dss pack` stamps a
+//!   directory, idempotently;
+//! - [`store`] — a content-addressed store (`.store/objects/<sha>`)
+//!   in which any number of verified generations coexist, sharing
+//!   unchanged blobs, so rollback is a load, not a restore;
+//! - [`rollout`] — the background watcher behind
+//!   `dss serve --watch-artifacts <dir>`: detect → verify → build
+//!   off-thread → canary → [`swap_engine`] install → post-swap canary
+//!   with automatic rollback, plus `dss rollback` honoring explicit
+//!   requests.
+//!
+//! [`swap_engine`]: crate::coordinator::Coordinator::swap_engine
+//!
+//! The install half reuses the epoch-versioned
+//! [`EngineCell`](crate::runtime::reload::EngineCell) machinery —
+//! a rollout is "a [`Replanner`](crate::runtime::reload::Replanner)
+//! swap whose engine came from disk", and the same
+//! one-mutator-per-serve contract applies (the CLI rejects arming the
+//! watcher together with the replanner or adapter).
+
+pub mod hash;
+pub mod manifest;
+pub mod rollout;
+pub mod store;
+
+pub use hash::{sha256, sha256_hex, HashingReader, Sha256};
+pub use manifest::{stamp, Compat, ManifestV2};
+pub use rollout::{Rollout, RolloutPolicy};
+pub use store::Store;

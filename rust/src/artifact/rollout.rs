@@ -1,0 +1,573 @@
+//! The background rollout watcher: the structural twin of
+//! [`crate::runtime::reload::Replanner`] and
+//! [`crate::adapt::Adapter`], but sourcing its replacement engines
+//! from *disk* — a watched directory that trained-elsewhere models
+//! are pushed into — instead of from in-process counters.
+//!
+//! Per tick the watcher (all off the serving threads):
+//!
+//! 1. honors a pending `rollback.json` request (written by
+//!    `dss rollback`), re-installing a previous verified generation;
+//! 2. scans the watch directory (and its immediate subdirectories)
+//!    for `manifest.json` candidates it has not yet seen, and walks
+//!    each through the admission pipeline:
+//!    structural verify ([`ManifestV2::load`]: version gate +
+//!    self-hash) → generation monotonicity → shape compatibility
+//!    against the *serving* engine (before any blob is read) →
+//!    streaming blob verification ([`ManifestV2::load_verified_set`])
+//!    → off-thread engine build → pre-swap canary (the fresh engine
+//!    must answer a recorded probe set with structurally valid
+//!    distributions) → ingest into the content-addressed store →
+//!    [`Coordinator::swap_engine`] → post-swap canary through the
+//!    live coordinator, with *automatic rollback* if the installed
+//!    engine fails it.
+//!
+//! Every admission decision is a typed `obs::event`
+//! (`artifact_verified`, `artifact_rejected{reason,file}`,
+//! `rollout_swap`, `rollback`), and the installed generation is
+//! exported as the `artifact_generation` gauge in
+//! `Metrics::snapshot()`.
+//!
+//! Rejections are remembered by the manifest file's raw-bytes digest,
+//! so a bad push is reported once, not once per poll — and a *fixed*
+//! re-push (different bytes) is re-examined from scratch.
+//!
+//! **Push protocol.**  Writers must assemble an artifact directory
+//! elsewhere and `rename(2)` it into the watch directory (or write
+//! `manifest.json` last): the watcher treats any unreadable or
+//! unverifiable candidate as a rejection keyed by the bytes it saw.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::artifact::hash;
+use crate::artifact::manifest::ManifestV2;
+use crate::artifact::store::Store;
+use crate::coordinator::{Coordinator, NativeBatchEngine};
+use crate::model::dssoftmax::DsSoftmax;
+use crate::model::SoftmaxEngine;
+use crate::obs;
+use crate::query::{RowPack, TopKBuf};
+use crate::shard::{ShardPlan, ShardedEngine};
+use crate::sparse::ExpertSet;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Knobs for the rollout watcher.
+#[derive(Clone, Debug)]
+pub struct RolloutPolicy {
+    /// Directory poll cadence.
+    pub poll: Duration,
+    /// Recorded probe-set size for the pre/post-swap canary.
+    pub canary: usize,
+    /// Top-k requested by canary probes.
+    pub canary_k: usize,
+    /// Probe-set seed (deterministic canaries).
+    pub seed: u64,
+    /// In-memory rollback history bound (generations kept hot; older
+    /// ones remain reachable through the store).
+    pub keep: usize,
+}
+
+impl Default for RolloutPolicy {
+    fn default() -> Self {
+        Self { poll: Duration::from_millis(200), canary: 32, canary_k: 10, seed: 42, keep: 4 }
+    }
+}
+
+/// One installed generation the watcher can roll back to.
+struct GenRecord {
+    generation: u64,
+    set: ExpertSet,
+    /// Raw-bytes digest of the manifest this generation came from
+    /// (empty for the startup engine, which may predate the plane).
+    raw_sha256: String,
+}
+
+/// Background artifact-rollout watcher.  `stop()` runs one final scan
+/// (so a push landed just before shutdown — or before a short CI run
+/// ends — still installs deterministically), then returns the number
+/// of rollout swaps installed.
+///
+/// Exactly one engine mutator may watch a coordinator: the CLI rejects
+/// arming the rollout watcher together with the replanner or adapter.
+pub struct Rollout {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<u64>>,
+}
+
+impl Rollout {
+    /// Spawn the watcher.  `initial` is the currently-serving expert
+    /// set (the rollback floor) and `initial_gen` its generation (0
+    /// for a pre-plane engine: any stamped push wins).  `plan`
+    /// selects the rebuild flavor, exactly as for the adapter.
+    pub fn spawn(
+        coord: Arc<Coordinator>,
+        watch: PathBuf,
+        initial: ExpertSet,
+        initial_gen: u64,
+        initial_raw_sha256: String,
+        plan: Option<ShardPlan>,
+        policy: RolloutPolicy,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("dss-rollout".into())
+            .spawn(move || {
+                let mut w = Watcher::new(coord, watch, initial, initial_gen, initial_raw_sha256, plan, policy);
+                loop {
+                    let stopping = stop2.load(Ordering::Acquire);
+                    if !stopping {
+                        std::thread::sleep(w.policy.poll);
+                    }
+                    w.tick();
+                    if stopping {
+                        break;
+                    }
+                }
+                w.swaps
+            })
+            .expect("spawn rollout watcher");
+        Self { stop, thread: Some(thread) }
+    }
+
+    /// Stop the watcher after one final scan; returns the number of
+    /// rollout swaps it installed over its lifetime.
+    pub fn stop(mut self) -> u64 {
+        self.stop.store(true, Ordering::Release);
+        self.thread.take().map(|t| t.join().unwrap_or(0)).unwrap_or(0)
+    }
+}
+
+impl Drop for Rollout {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Watcher state living on the rollout thread.
+struct Watcher {
+    coord: Arc<Coordinator>,
+    watch: PathBuf,
+    plan: Option<ShardPlan>,
+    policy: RolloutPolicy,
+    store: Option<Store>,
+    /// Installed generations, oldest → newest; last is serving.
+    history: Vec<GenRecord>,
+    /// Raw-bytes digests of manifests already rejected.
+    rejected: HashSet<String>,
+    /// Recorded probe set (seeded, fixed for the watcher's lifetime).
+    probes: Vec<Vec<f32>>,
+    swaps: u64,
+}
+
+impl Watcher {
+    fn new(
+        coord: Arc<Coordinator>,
+        watch: PathBuf,
+        initial: ExpertSet,
+        initial_gen: u64,
+        initial_raw_sha256: String,
+        plan: Option<ShardPlan>,
+        policy: RolloutPolicy,
+    ) -> Self {
+        let store = match Store::open(&watch) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                obs::event::error(
+                    "artifact_store_unavailable",
+                    vec![("err", Json::Str(format!("{e:#}")))],
+                );
+                None
+            }
+        };
+        let mut rng = Rng::new(policy.seed);
+        let d = initial.dim();
+        let probes = (0..policy.canary.max(1)).map(|_| rng.normal_vec(d, 1.0)).collect();
+        coord.metrics.set_artifact_generation(initial_gen);
+        let history = vec![GenRecord {
+            generation: initial_gen,
+            set: initial,
+            raw_sha256: initial_raw_sha256,
+        }];
+        Self {
+            coord,
+            watch,
+            plan,
+            policy,
+            store,
+            history,
+            rejected: HashSet::new(),
+            probes,
+            swaps: 0,
+        }
+    }
+
+    fn tick(&mut self) {
+        self.check_rollback_request();
+        for dir in self.candidate_dirs() {
+            self.consider(&dir);
+        }
+    }
+
+    // ---- candidate discovery -------------------------------------------
+
+    /// The watch directory itself plus its immediate subdirectories
+    /// (skipping the store), each a potential artifact directory.
+    fn candidate_dirs(&self) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        if self.watch.join("manifest.json").is_file() {
+            out.push(self.watch.clone());
+        }
+        if let Ok(entries) = std::fs::read_dir(&self.watch) {
+            for entry in entries.flatten() {
+                let path = entry.path();
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with('.') {
+                    continue; // .store and editor droppings
+                }
+                if path.is_dir() && path.join("manifest.json").is_file() {
+                    out.push(path);
+                }
+            }
+        }
+        // Deterministic scan order; generation monotonicity does the
+        // real ordering (each successful install raises the floor).
+        out.sort();
+        out
+    }
+
+    // ---- admission pipeline --------------------------------------------
+
+    fn consider(&mut self, dir: &Path) {
+        let manifest_path = dir.join("manifest.json");
+        let raw = match std::fs::read(&manifest_path) {
+            Ok(b) => b,
+            Err(_) => return, // racing writer; next tick sees it
+        };
+        let raw_sha = hash::sha256_hex(&raw);
+        if self.rejected.contains(&raw_sha)
+            || self.history.iter().any(|g| g.raw_sha256 == raw_sha)
+        {
+            return;
+        }
+        if let Err((reason, err)) = self.admit(dir, &raw_sha) {
+            self.rejected.insert(raw_sha);
+            obs::event::warn(
+                "artifact_rejected",
+                vec![
+                    ("reason", Json::Str(reason.to_string())),
+                    ("file", Json::Str(manifest_path.display().to_string())),
+                    ("err", Json::Str(err)),
+                ],
+            );
+        }
+    }
+
+    /// The full admission pipeline for one candidate.  `Err((reason,
+    /// detail))` is a typed rejection; `Ok(())` covers both "installed"
+    /// and "not a candidate right now" (stale generation already seen).
+    fn admit(&mut self, dir: &Path, raw_sha: &str) -> std::result::Result<(), (&'static str, String)> {
+        // 1. structural verify: version gate + manifest self-hash
+        let m2 = ManifestV2::load(dir).map_err(|e| {
+            let msg = format!("{e:#}");
+            let reason = if msg.contains("self_sha256 mismatch") {
+                "manifest_self_hash"
+            } else if msg.contains("manifest_version") {
+                "manifest_version"
+            } else {
+                "manifest_parse"
+            };
+            (reason, msg)
+        })?;
+
+        // 2. generation monotonicity
+        let current_gen = self.history.last().map(|g| g.generation).unwrap_or(0);
+        if m2.generation <= current_gen {
+            return Err((
+                "stale_generation",
+                format!("generation {} <= installed {current_gen}", m2.generation),
+            ));
+        }
+
+        // 3. shape compatibility against the serving engine, before
+        //    any blob is read
+        let (d, n_classes, k) = {
+            let engine = self.coord.engine_handle().load();
+            (engine.dim(), engine.n_classes(), engine.k_experts())
+        };
+        if !m2.compatible_with(d, n_classes, k) {
+            return Err((
+                "shape",
+                format!(
+                    "artifact compat {:?} vs serving engine d={d} n_classes={n_classes} k={k}",
+                    m2.compat
+                ),
+            ));
+        }
+
+        // 4. streaming blob verification — the one read pass
+        let set = m2
+            .load_verified_set()
+            .map_err(|e| ("blob_sha256", format!("{e:#}")))?;
+
+        // 5. off-thread engine build + pre-swap canary
+        let engine = self
+            .build_engine(set.clone())
+            .map_err(|e| ("build", format!("{e:#}")))?;
+        self.canary_direct(engine.as_ref())
+            .map_err(|e| ("canary", format!("{e:#}")))?;
+
+        obs::event::info(
+            "artifact_verified",
+            vec![
+                ("generation", Json::Num(m2.generation as f64)),
+                ("manifest_sha256", Json::Str(raw_sha.to_string())),
+                ("dir", Json::Str(dir.display().to_string())),
+            ],
+        );
+
+        // 6. durable home: ingest into the content-addressed store
+        //    (failure is loud but not fatal — the push dir itself
+        //    still serves; only rollback depth is reduced)
+        if let Some(store) = &self.store {
+            if let Err(e) = store.ingest(&m2) {
+                obs::event::warn(
+                    "artifact_store_ingest_failed",
+                    vec![("err", Json::Str(format!("{e:#}")))],
+                );
+            }
+        }
+
+        // 7. live install
+        let epoch = self
+            .coord
+            .swap_engine(engine)
+            .map_err(|e| ("swap_rejected", format!("{e:#}")))?;
+        self.swaps += 1;
+        self.coord.metrics.set_artifact_generation(m2.generation);
+        obs::event::info(
+            "rollout_swap",
+            vec![
+                ("generation", Json::Num(m2.generation as f64)),
+                ("epoch", Json::Num(epoch as f64)),
+            ],
+        );
+        self.history.push(GenRecord {
+            generation: m2.generation,
+            set,
+            raw_sha256: raw_sha.to_string(),
+        });
+        if self.history.len() > self.policy.keep.max(2) {
+            self.history.remove(0);
+        }
+
+        // 8. post-swap canary through the live coordinator; failure
+        //    triggers automatic rollback to the previous generation
+        if let Err(e) = self.canary_live() {
+            self.rejected.insert(raw_sha.to_string());
+            obs::event::error(
+                "artifact_post_swap_canary_failed",
+                vec![
+                    ("generation", Json::Num(m2.generation as f64)),
+                    ("err", Json::Str(format!("{e:#}"))),
+                ],
+            );
+            self.rollback_to(None, true);
+        }
+        Ok(())
+    }
+
+    fn build_engine(&self, set: ExpertSet) -> Result<Arc<dyn SoftmaxEngine>> {
+        Ok(match &self.plan {
+            Some(p) => Arc::new(ShardedEngine::new(set, p.clone()).context("shard rebuild")?),
+            None => Arc::new(NativeBatchEngine::new(DsSoftmax::new(set))),
+        })
+    }
+
+    /// Pre-swap canary: the candidate engine, standalone, must answer
+    /// the recorded probe set with structurally valid top-k
+    /// distributions (finite, in (0, 1], descending).  A panic in the
+    /// engine is a rejection, not a watcher crash.
+    fn canary_direct(&self, engine: &dyn SoftmaxEngine) -> Result<()> {
+        let probes = &self.probes;
+        let k = self.policy.canary_k;
+        let checked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut pack = RowPack::default();
+            pack.reset(engine.dim());
+            for p in probes {
+                pack.push_row(p);
+            }
+            let mut out = TopKBuf::default();
+            engine.query_batch(pack.view(), k, &mut out);
+            for row in 0..out.rows() {
+                let (ids, probs) = out.row(row);
+                if ids.is_empty() {
+                    anyhow::bail!("probe {row}: empty top-k");
+                }
+                let mut prev = f32::INFINITY;
+                for (i, &p) in probs.iter().enumerate() {
+                    anyhow::ensure!(
+                        p.is_finite() && p > 0.0 && p <= 1.0,
+                        "probe {row} rank {i}: prob {p} outside (0, 1]"
+                    );
+                    anyhow::ensure!(p <= prev, "probe {row} rank {i}: probs not descending");
+                    prev = p;
+                }
+            }
+            Ok(())
+        }));
+        match checked {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("candidate engine panicked on canary probes"),
+        }
+    }
+
+    /// Post-swap canary: the same probes, through the live
+    /// coordinator — proves the installed generation answers real
+    /// traffic end to end.
+    fn canary_live(&self) -> Result<()> {
+        let k = self.policy.canary_k;
+        for (i, p) in self.probes.iter().enumerate() {
+            self.coord
+                .query(p.clone(), k)
+                .map_err(|e| anyhow::anyhow!("post-swap probe {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    // ---- rollback -------------------------------------------------------
+
+    /// Consume a pending `rollback.json` request, if any.
+    fn check_rollback_request(&mut self) {
+        let req_path = self.watch.join("rollback.json");
+        let text = match std::fs::read_to_string(&req_path) {
+            Ok(t) => t,
+            Err(_) => return,
+        };
+        // Consume the request before acting: a malformed or
+        // unsatisfiable request must not wedge the watcher in a loop.
+        let _ = std::fs::remove_file(&req_path);
+        let to = Json::parse(&text)
+            .ok()
+            .and_then(|j| j.opt("to").and_then(|v| v.as_f64().ok()))
+            .map(|g| g as u64);
+        self.rollback_to(to, false);
+    }
+
+    /// Re-install a previous generation: the explicit target `to`, or
+    /// the one before the current install.  Sources the set from the
+    /// in-memory history when hot, else from the store.
+    fn rollback_to(&mut self, to: Option<u64>, auto: bool) {
+        let current_gen = self.history.last().map(|g| g.generation).unwrap_or(0);
+        let target_gen = match to {
+            Some(g) => g,
+            None => match self.history.len() {
+                0 | 1 => {
+                    obs::event::warn(
+                        "rollback_failed",
+                        vec![(
+                            "err",
+                            Json::Str(format!(
+                                "no previous generation to roll back to (current {current_gen})"
+                            )),
+                        )],
+                    );
+                    return;
+                }
+                n => self.history[n - 2].generation,
+            },
+        };
+        let set = match self.lookup_generation(target_gen) {
+            Ok(s) => s,
+            Err(e) => {
+                obs::event::warn(
+                    "rollback_failed",
+                    vec![
+                        ("to", Json::Num(target_gen as f64)),
+                        ("err", Json::Str(format!("{e:#}"))),
+                    ],
+                );
+                return;
+            }
+        };
+        let engine = match self.build_engine(set.clone()) {
+            Ok(e) => e,
+            Err(e) => {
+                obs::event::error(
+                    "rollback_failed",
+                    vec![
+                        ("to", Json::Num(target_gen as f64)),
+                        ("err", Json::Str(format!("{e:#}"))),
+                    ],
+                );
+                return;
+            }
+        };
+        match self.coord.swap_engine(engine) {
+            Ok(epoch) => {
+                // The rolled-back-from record leaves the history; the
+                // target becomes (or stays) the newest entry.
+                while self
+                    .history
+                    .last()
+                    .is_some_and(|g| g.generation > target_gen)
+                {
+                    self.history.pop();
+                }
+                if self.history.last().map(|g| g.generation) != Some(target_gen) {
+                    self.history.push(GenRecord {
+                        generation: target_gen,
+                        set,
+                        raw_sha256: String::new(),
+                    });
+                }
+                self.coord.metrics.set_artifact_generation(target_gen);
+                obs::event::info(
+                    "rollback",
+                    vec![
+                        ("from", Json::Num(current_gen as f64)),
+                        ("to", Json::Num(target_gen as f64)),
+                        ("epoch", Json::Num(epoch as f64)),
+                        ("auto", Json::Bool(auto)),
+                    ],
+                );
+            }
+            Err(e) => {
+                obs::event::error(
+                    "rollback_failed",
+                    vec![
+                        ("to", Json::Num(target_gen as f64)),
+                        ("err", Json::Str(format!("{e:#}"))),
+                    ],
+                );
+            }
+        }
+    }
+
+    /// Find a generation's expert set: in-memory history first, then
+    /// the content-addressed store (load is hash-verified, as always).
+    fn lookup_generation(&self, generation: u64) -> Result<ExpertSet> {
+        if let Some(g) = self.history.iter().rev().find(|g| g.generation == generation) {
+            return Ok(g.set.clone());
+        }
+        let store = self
+            .store
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("generation {generation} not in history and store unavailable"))?;
+        let dir = store
+            .manifest_dir(generation)?
+            .ok_or_else(|| anyhow::anyhow!("generation {generation} not found in store"))?;
+        ManifestV2::load(&dir)?.load_verified_set()
+    }
+}

@@ -1,0 +1,214 @@
+//! Content-addressed artifact store: the durable home of every
+//! verified generation.
+//!
+//! Layout, rooted at `<watch-dir>/.store/`:
+//!
+//! ```text
+//! .store/
+//!   objects/<sha256-hex>              raw blobs, named by content
+//!   manifests/gen-<g>-<hash8>/
+//!     manifest.json                   v2, weight files -> ../../objects/<hex>
+//! ```
+//!
+//! Blobs are named by their own digest, so two generations that share
+//! a weight share the bytes on disk, and any number of generations
+//! coexist — rollback is "load the previous manifest dir", not
+//! "restore a backup".  Objects are written via temp-file + rename so
+//! a crashed ingest never leaves a half-written blob under a final
+//! name.  Store manifests are re-stamped after the file fields are
+//! rewritten, so everything in the store passes the same
+//! `ManifestV2::load` + streaming verification as a fresh push.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::artifact::hash;
+use crate::artifact::manifest::{stamp, ManifestV2};
+use crate::util::json::Json;
+
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    /// Open (creating if needed) the store under a watch directory.
+    pub fn open(watch: impl AsRef<Path>) -> Result<Self> {
+        let root = watch.as_ref().join(".store");
+        std::fs::create_dir_all(root.join("objects"))
+            .with_context(|| format!("create {}", root.join("objects").display()))?;
+        std::fs::create_dir_all(root.join("manifests"))
+            .with_context(|| format!("create {}", root.join("manifests").display()))?;
+        Ok(Self { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Ingest a verified manifest: copy every blob into `objects/`
+    /// (deduplicated by content), write a store manifest whose file
+    /// fields point at the objects, and re-stamp it.  Idempotent: a
+    /// generation already ingested under the same pushed-manifest
+    /// identity is returned as-is.
+    pub fn ingest(&self, m2: &ManifestV2) -> Result<ManifestV2> {
+        let dir = self.root.join("manifests").join(format!(
+            "gen-{}-{}",
+            m2.generation,
+            &m2.raw_sha256[..8]
+        ));
+        if dir.join("manifest.json").is_file() {
+            return ManifestV2::load(&dir);
+        }
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
+
+        // Re-read the pushed manifest and rewrite blob references.
+        let src_path = m2.base.dir.join("manifest.json");
+        let text = std::fs::read_to_string(&src_path)
+            .with_context(|| format!("read {}", src_path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {}", src_path.display()))?;
+        let mut m = j.as_obj().map_err(anyhow::Error::from)?.clone();
+
+        let mut weights = std::collections::BTreeMap::new();
+        for (name, w) in m
+            .get("weights")
+            .ok_or_else(|| anyhow::anyhow!("no weights table"))?
+            .as_obj()?
+            .clone()
+        {
+            let mut wo = w.as_obj()?.clone();
+            let file = wo
+                .get("file")
+                .ok_or_else(|| anyhow::anyhow!("weight '{name}' has no file"))?
+                .as_str()?
+                .to_string();
+            let expect = m2
+                .blob_sha
+                .get(&name)
+                .ok_or_else(|| anyhow::anyhow!("no recorded sha256 for weight '{name}'"))?;
+            let bytes = hash::read_verified(&m2.base.dir.join(&file), expect)?;
+            self.put_object(expect, &bytes)?;
+            wo.insert(
+                "file".to_string(),
+                Json::Str(format!("../../objects/{expect}")),
+            );
+            weights.insert(name, Json::Obj(wo));
+        }
+        m.insert("weights".to_string(), Json::Obj(weights));
+
+        // HLO texts ride along the same way.
+        let mut files = std::collections::BTreeMap::new();
+        if let Some(fs) = m.get("files") {
+            for (logical, file) in fs.as_obj()?.clone() {
+                let expect = m2
+                    .file_sha
+                    .get(&logical)
+                    .ok_or_else(|| anyhow::anyhow!("no recorded sha256 for file '{logical}'"))?;
+                let bytes = hash::read_verified(&m2.base.dir.join(file.as_str()?), expect)?;
+                self.put_object(expect, &bytes)?;
+                files.insert(logical, Json::Str(format!("../../objects/{expect}")));
+            }
+        }
+        m.insert("files".to_string(), Json::Obj(files));
+        // Stale against the rewritten file fields; stamp() recomputes.
+        m.remove("files_sha256");
+        m.remove("self_sha256");
+
+        std::fs::write(dir.join("manifest.json"), format!("{}\n", Json::Obj(m)))
+            .with_context(|| format!("write {}", dir.join("manifest.json").display()))?;
+        stamp(&dir, Some(m2.generation))
+    }
+
+    /// Write one object by digest, atomically, skipping if present.
+    fn put_object(&self, sha_hex: &str, bytes: &[u8]) -> Result<()> {
+        let path = self.root.join("objects").join(sha_hex);
+        if path.is_file() {
+            return Ok(());
+        }
+        let tmp = self
+            .root
+            .join("objects")
+            .join(format!(".tmp-{}-{sha_hex}", std::process::id()));
+        std::fs::write(&tmp, bytes).with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("rename to {}", path.display()))?;
+        Ok(())
+    }
+
+    /// All stored generations, ascending, with their manifest dirs.
+    pub fn generations(&self) -> Result<Vec<(u64, PathBuf)>> {
+        let mut out = Vec::new();
+        let dir = self.root.join("manifests");
+        for entry in
+            std::fs::read_dir(&dir).with_context(|| format!("read {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name.strip_prefix("gen-") {
+                if let Some((g, _hash8)) = rest.split_once('-') {
+                    if let Ok(g) = g.parse::<u64>() {
+                        out.push((g, entry.path()));
+                    }
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Manifest dir of one stored generation, if present.
+    pub fn manifest_dir(&self, generation: u64) -> Result<Option<PathBuf>> {
+        Ok(self
+            .generations()?
+            .into_iter()
+            .find(|(g, _)| *g == generation)
+            .map(|(_, p)| p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::write_artifact_dir;
+    use crate::sparse::ExpertSet;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ingest_dedups_and_generations_coexist() {
+        let base = std::env::temp_dir().join(format!("dss-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let push1 = base.join("push1");
+        let push2 = base.join("push2");
+        let mut rng = Rng::new(21);
+        let set1 = ExpertSet::synthetic(40, 8, 4, 2.0, &mut rng);
+        let set2 = ExpertSet::synthetic(40, 8, 4, 2.0, &mut rng);
+        write_artifact_dir(&push1, "g1", &set1, &[0.25; 4]).unwrap();
+        write_artifact_dir(&push2, "g2", &set2, &[0.25; 4]).unwrap();
+        let m1 = stamp(&push1, Some(1)).unwrap();
+        let m2 = stamp(&push2, Some(2)).unwrap();
+
+        let store = Store::open(base.join("watch")).unwrap();
+        let s1 = store.ingest(&m1).unwrap();
+        let s2 = store.ingest(&m2).unwrap();
+        assert_eq!(s1.generation, 1);
+        assert_eq!(s2.generation, 2);
+        // Both generations verifiable and loadable from the store.
+        assert_eq!(s1.verify_blobs().unwrap(), 4);
+        assert_eq!(
+            s1.load_verified_set().unwrap().gate.data,
+            set1.gate.data
+        );
+        assert_eq!(
+            s2.load_verified_set().unwrap().gate.data,
+            set2.gate.data
+        );
+        let gens = store.generations().unwrap();
+        assert_eq!(gens.iter().map(|(g, _)| *g).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(store.manifest_dir(2).unwrap().is_some());
+        assert!(store.manifest_dir(9).unwrap().is_none());
+        // Idempotent re-ingest.
+        let s1b = store.ingest(&m1).unwrap();
+        assert_eq!(s1b.self_sha256, s1.self_sha256);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -25,6 +25,90 @@ pub fn artifacts_root() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
+/// A pluggable byte source for blob loads.  The default
+/// (`Manifest::load_f32` etc.) is a plain `std::fs::read`; the
+/// artifact plane substitutes a streaming-hash reader so integrity
+/// checking rides along with the single pass that loads each blob.
+pub type BlobReader<'a> = dyn FnMut(&Path) -> Result<Vec<u8>> + 'a;
+
+fn plain_read(path: &Path) -> Result<Vec<u8>> {
+    std::fs::read(path).with_context(|| format!("read {}", path.display()))
+}
+
+/// Export an `ExpertSet` as a v1 artifact directory (manifest.json +
+/// raw little-endian blobs), the exact inverse of
+/// `Manifest::expert_set`.  This is the pure-Rust counterpart of the
+/// Python exporter, used by `dss gen --out` so CI and tests can mint
+/// artifacts without a Python toolchain.  No HLO graphs and no
+/// `w_full` are written — the packed two-level structure is the whole
+/// serving contract.
+pub fn write_artifact_dir(
+    dir: impl AsRef<Path>,
+    name: &str,
+    set: &ExpertSet,
+    utilization: &[f64],
+) -> Result<PathBuf> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let (k, d, p) = (set.k(), set.dim(), set.p());
+    anyhow::ensure!(
+        utilization.len() == k,
+        "utilization has {} entries but k={k}",
+        utilization.len()
+    );
+
+    let mut packed = Vec::with_capacity(k * p * d);
+    let mut class_ids = Vec::with_capacity(k * p);
+    let mut valid = Vec::with_capacity(k);
+    for e in &set.experts {
+        packed.extend_from_slice(&e.weights.data);
+        class_ids.extend_from_slice(&e.class_ids);
+        valid.push(e.valid as i32);
+    }
+    let f32s = |xs: &[f32]| -> Vec<u8> { xs.iter().flat_map(|x| x.to_le_bytes()).collect() };
+    let i32s = |xs: &[i32]| -> Vec<u8> { xs.iter().flat_map(|x| x.to_le_bytes()).collect() };
+    std::fs::write(dir.join("u.bin"), f32s(&set.gate.data))?;
+    std::fs::write(dir.join("packed.bin"), f32s(&packed))?;
+    std::fs::write(dir.join("class_ids.bin"), i32s(&class_ids))?;
+    std::fs::write(dir.join("valid.bin"), i32s(&valid))?;
+
+    let sizes = set.expert_sizes();
+    let weight = |file: &str, shape: &[usize], dtype: &str| {
+        Json::obj(vec![
+            ("file", file.into()),
+            ("shape", Json::arr_usize(shape)),
+            ("dtype", dtype.into()),
+        ])
+    };
+    let mean_size = sizes.iter().sum::<usize>() as f64 / k as f64;
+    let speedup = set.n_classes as f64 / (k as f64 + mean_size).max(1.0);
+    let manifest = Json::obj(vec![
+        ("name", name.into()),
+        ("n_classes", set.n_classes.into()),
+        ("d", d.into()),
+        ("k", k.into()),
+        ("p", p.into()),
+        ("buckets", Json::arr_usize(&[1])),
+        ("files", Json::Obj(BTreeMap::new())),
+        (
+            "weights",
+            Json::obj(vec![
+                ("u", weight("u.bin", &[k, d], "f32")),
+                ("packed", weight("packed.bin", &[k, p, d], "f32")),
+                ("class_ids", weight("class_ids.bin", &[k, p], "i32")),
+                ("valid", weight("valid.bin", &[k], "i32")),
+            ]),
+        ),
+        ("utilization", Json::arr_f64(utilization)),
+        ("expert_sizes", Json::arr_usize(&sizes)),
+        ("speedup_theoretical", speedup.into()),
+    ]);
+    let path = dir.join("manifest.json");
+    std::fs::write(&path, format!("{manifest}\n"))
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
 /// One weight blob's metadata.
 #[derive(Clone, Debug)]
 pub struct WeightInfo {
@@ -99,7 +183,7 @@ impl Manifest {
             }),
             None => None,
         };
-        Ok(Self {
+        let m = Self {
             name: j.get("name")?.as_str()?.to_string(),
             n_classes: j.get("n_classes")?.as_usize()?,
             d: j.get("d")?.as_usize()?,
@@ -113,7 +197,39 @@ impl Manifest {
             weights,
             lstm,
             dir,
-        })
+        };
+        m.validate_shape()
+            .with_context(|| format!("invalid manifest {}", path.display()))?;
+        Ok(m)
+    }
+
+    /// Cross-field shape validation, applied at parse time so a bad
+    /// manifest fails with a clear error instead of surfacing later
+    /// deep inside `expert_set()`.
+    fn validate_shape(&self) -> Result<()> {
+        anyhow::ensure!(self.d > 0, "artifact '{}': d must be > 0", self.name);
+        anyhow::ensure!(
+            self.n_classes > 0,
+            "artifact '{}': n_classes must be > 0",
+            self.name
+        );
+        anyhow::ensure!(self.k > 0, "artifact '{}': k must be > 0", self.name);
+        anyhow::ensure!(self.p > 0, "artifact '{}': p must be > 0", self.name);
+        anyhow::ensure!(
+            self.expert_sizes.len() == self.k,
+            "artifact '{}': expert_sizes has {} entries but k={}",
+            self.name,
+            self.expert_sizes.len(),
+            self.k
+        );
+        anyhow::ensure!(
+            self.utilization.len() == self.k,
+            "artifact '{}': utilization has {} entries but k={}",
+            self.name,
+            self.utilization.len(),
+            self.k
+        );
+        Ok(())
     }
 
     /// Path of one logical HLO graph (e.g. `gate_b8`).
@@ -125,14 +241,17 @@ impl Manifest {
         Ok(self.dir.join(f))
     }
 
-    fn blob(&self, name: &str) -> Result<(Vec<u8>, &WeightInfo)> {
+    fn blob_with(
+        &self,
+        name: &str,
+        read: &mut BlobReader<'_>,
+    ) -> Result<(Vec<u8>, &WeightInfo)> {
         let info = self
             .weights
             .get(name)
             .ok_or_else(|| anyhow!("artifact '{}' has no weight '{name}'", self.name))?;
         let path = self.dir.join(&info.file);
-        let bytes =
-            std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+        let bytes = read(&path)?;
         anyhow::ensure!(
             bytes.len() == info.elems() * 4,
             "{name}: {} bytes but shape {:?} needs {}",
@@ -145,7 +264,14 @@ impl Manifest {
 
     /// Load a little-endian f32 blob by weight name.
     pub fn load_f32(&self, name: &str) -> Result<Vec<f32>> {
-        let (bytes, info) = self.blob(name)?;
+        self.load_f32_with(name, &mut plain_read)
+    }
+
+    /// `load_f32` with a caller-supplied byte source (the artifact
+    /// plane routes this through a `HashingReader` so blobs are
+    /// verified while streaming, in the one pass that loads them).
+    pub fn load_f32_with(&self, name: &str, read: &mut BlobReader<'_>) -> Result<Vec<f32>> {
+        let (bytes, info) = self.blob_with(name, read)?;
         anyhow::ensure!(info.dtype == "f32", "{name}: dtype {} != f32", info.dtype);
         Ok(bytes
             .chunks_exact(4)
@@ -155,7 +281,12 @@ impl Manifest {
 
     /// Load a little-endian i32 blob by weight name.
     pub fn load_i32(&self, name: &str) -> Result<Vec<i32>> {
-        let (bytes, info) = self.blob(name)?;
+        self.load_i32_with(name, &mut plain_read)
+    }
+
+    /// `load_i32` with a caller-supplied byte source.
+    pub fn load_i32_with(&self, name: &str, read: &mut BlobReader<'_>) -> Result<Vec<i32>> {
+        let (bytes, info) = self.blob_with(name, read)?;
         anyhow::ensure!(info.dtype == "i32", "{name}: dtype {} != i32", info.dtype);
         Ok(bytes
             .chunks_exact(4)
@@ -171,10 +302,16 @@ impl Manifest {
 
     /// Reassemble the packed two-level structure exported by `ds_pack`.
     pub fn expert_set(&self) -> Result<ExpertSet> {
-        let u = self.load_f32("u")?;
-        let packed = self.load_f32("packed")?;
-        let class_ids = self.load_i32("class_ids")?;
-        let valid = self.load_i32("valid")?;
+        self.expert_set_with(&mut plain_read)
+    }
+
+    /// `expert_set` with a caller-supplied byte source; every blob is
+    /// read exactly once through `read`.
+    pub fn expert_set_with(&self, read: &mut BlobReader<'_>) -> Result<ExpertSet> {
+        let u = self.load_f32_with("u", read)?;
+        let packed = self.load_f32_with("packed", read)?;
+        let class_ids = self.load_i32_with("class_ids", read)?;
+        let valid = self.load_i32_with("valid", read)?;
         let (k, p, d) = (self.k, self.p, self.d);
         anyhow::ensure!(u.len() == k * d, "gate shape mismatch");
         anyhow::ensure!(packed.len() == k * p * d, "packed shape mismatch");
@@ -276,5 +413,56 @@ mod tests {
     fn missing_dir_is_clean_error() {
         let err = Manifest::load("/definitely/not/here").unwrap_err();
         assert!(err.to_string().contains("manifest.json"));
+    }
+
+    /// Shape mismatches must fail at parse time with a clear error,
+    /// not later inside `expert_set()`.
+    #[test]
+    fn load_rejects_inconsistent_shapes() {
+        let dir = std::env::temp_dir().join(format!("dss-artifact-badshape-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let good = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+
+        let cases = [
+            // (broken manifest text, expected error fragment)
+            (good.replace("\"expert_sizes\": [2, 2]", "\"expert_sizes\": [2]"), "expert_sizes"),
+            (good.replace("\"utilization\": [0.5, 0.5]", "\"utilization\": [0.5]"), "utilization"),
+            (good.replace("\"d\": 2", "\"d\": 0"), "d must be > 0"),
+            (good.replace("\"n_classes\": 4", "\"n_classes\": 0"), "n_classes must be > 0"),
+            (good.replace("\"p\": 2", "\"p\": 0"), "p must be > 0"),
+            (good.replace("\"k\": 2", "\"k\": 0"), "k must be > 0"),
+        ];
+        for (text, frag) in cases {
+            std::fs::write(dir.join("manifest.json"), &text).unwrap();
+            let err = Manifest::load(&dir).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(frag), "expected '{frag}' in: {msg}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `write_artifact_dir` is the exact inverse of `expert_set`.
+    #[test]
+    fn export_roundtrip() {
+        use crate::util::rng::Rng;
+        let dir = std::env::temp_dir().join(format!("dss-artifact-export-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(11);
+        let set = ExpertSet::synthetic(40, 8, 4, 2.0, &mut rng);
+        let util = vec![0.25; 4];
+        write_artifact_dir(&dir, "roundtrip", &set, &util).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.name, "roundtrip");
+        assert_eq!((m.n_classes, m.d, m.k, m.p), (40, 8, 4, set.p()));
+        let back = m.expert_set().unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.gate.data, set.gate.data);
+        for (a, b) in back.experts.iter().zip(set.experts.iter()) {
+            assert_eq!(a.weights.data, b.weights.data);
+            assert_eq!(a.class_ids, b.class_ids);
+            assert_eq!(a.valid, b.valid);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -56,6 +56,9 @@ pub struct Metrics {
     pub swaps: AtomicU64,
     /// current engine generation (`runtime::reload::Epoch` gauge)
     pub engine_epoch: AtomicU64,
+    /// installed artifact generation (the rollout plane's gauge; 0
+    /// until an artifact-sourced engine is serving)
+    pub artifact_generation: AtomicU64,
     /// per-expert routing counts at the last swap — the baseline that
     /// makes [`Metrics::routed_counts_generation`] generation-local
     gen_base: Mutex<Vec<u64>>,
@@ -192,6 +195,13 @@ impl Metrics {
         *self.fabric.lock().unwrap() = Some(fabric);
     }
 
+    /// Publish the installed artifact generation (the rollout
+    /// watcher's gauge — set at serve startup and on every
+    /// rollout/rollback swap).
+    pub fn set_artifact_generation(&self, generation: u64) {
+        self.artifact_generation.store(generation, Ordering::Relaxed);
+    }
+
     pub fn set_queue_depth(&self, depth: usize) {
         self.queue_depth.store(depth as u64, Ordering::Relaxed);
     }
@@ -293,6 +303,7 @@ impl Metrics {
             hot_queue_depth: self.hot_queue_depth.load(Ordering::Relaxed),
             swaps: self.swaps.load(Ordering::Relaxed),
             engine_epoch: self.engine_epoch.load(Ordering::Relaxed),
+            artifact_generation: self.artifact_generation.load(Ordering::Relaxed),
             per_expert: self.routed_counts(),
             per_expert_generation: self.routed_counts_generation(),
             class_hits_total,
@@ -499,6 +510,8 @@ pub struct MetricsSnapshot {
     pub swaps: u64,
     /// current engine generation (epoch gauge)
     pub engine_epoch: u64,
+    /// installed artifact generation (0 = not artifact-sourced)
+    pub artifact_generation: u64,
     pub per_expert: Vec<u64>,
     /// routing counts since the last swap (the re-plan input)
     pub per_expert_generation: Vec<u64>,
@@ -535,6 +548,7 @@ impl MetricsSnapshot {
             ("hot_queue_depth", Json::Num(self.hot_queue_depth as f64)),
             ("swaps", Json::Num(self.swaps as f64)),
             ("engine_epoch", Json::Num(self.engine_epoch as f64)),
+            ("artifact_generation", Json::Num(self.artifact_generation as f64)),
             ("per_expert", arr_u64(&self.per_expert)),
             ("per_expert_generation", arr_u64(&self.per_expert_generation)),
             ("class_hits_total", Json::Num(self.class_hits_total as f64)),
@@ -748,5 +762,20 @@ mod tests {
             j.get("per_expert_generation").unwrap().usize_vec().unwrap(),
             vec![0, 0, 0]
         );
+    }
+
+    /// The artifact-generation gauge: 0 until set, survives engine
+    /// swaps (rollout sets it explicitly, `on_swap` must not clear
+    /// it), and exports through snapshot + JSON.
+    #[test]
+    fn artifact_generation_gauge() {
+        let m = Metrics::with_topology(2, 1, 0);
+        assert_eq!(m.snapshot().artifact_generation, 0);
+        m.set_artifact_generation(3);
+        m.on_swap(1, 1);
+        let s = m.snapshot();
+        assert_eq!(s.artifact_generation, 3);
+        let j = Json::parse(&s.render()).unwrap();
+        assert_eq!(j.get("artifact_generation").unwrap().as_usize().unwrap(), 3);
     }
 }

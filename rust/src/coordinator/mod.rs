@@ -53,6 +53,20 @@
 //!       structured events (obs::event JSONL: swap/replan/failover/…)
 //!       scrape surface (obs::export behind Stats/Scrape/TraceFetch
 //!           frames — `dss top`, `dss trace`, Prometheus text)
+//!
+//!   artifact plane (artifact) — trained-elsewhere pushes as swaps:
+//!
+//!   model push ──▶ watch dir ──▶ Rollout watcher (dss serve
+//!          │ manifest v2          --watch-artifacts), off-thread:
+//!          ▼                     self-hash → generation → compat →
+//!       .store/objects/<sha>     streaming blob verify (HashingReader)
+//!       (content-addressed,      → build engine → canary probes →
+//!        generations coexist)    swap_engine → post-swap canary
+//!          ▲                              │ fail → automatic rollback
+//!          └── dss rollback ◀─────────────┘ (previous generation,
+//!              (rollback.json)              verified again from store)
+//!       events: artifact_verified / artifact_rejected{reason,file} /
+//!       rollout_swap / rollback; artifact_generation gauge in snapshot
 //! ```
 //!
 //! The gate runs *before* batching so requests are grouped by expert —

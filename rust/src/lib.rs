@@ -29,6 +29,13 @@
 //!   watches per-class hit counters and applies online expert mitosis
 //!   and cold-class pruning as live engine swaps, with drift scenarios
 //!   in [`benchlib::drift`] to measure it),
+//!   the content-addressed artifact plane ([`artifact`]: a
+//!   test-vectored streaming SHA-256 ([`artifact::hash`]) verifies
+//!   manifest-v2 model pushes while loading, a
+//!   [`artifact::Rollout`] watcher behind `dss serve
+//!   --watch-artifacts` installs trained-elsewhere generations as
+//!   live engine swaps with canary checks, and `dss rollback`
+//!   re-installs any stored generation),
 //!   the PJRT runtime that executes the AOT
 //!   artifacts (`pjrt` feature), native fallback engines, all paper
 //!   baselines (full softmax, SVD-softmax, D-softmax), FLOPs
@@ -86,6 +93,7 @@
 //! generations inside a batch.
 
 pub mod adapt;
+pub mod artifact;
 pub mod artifacts;
 pub mod benchlib;
 pub mod coordinator;

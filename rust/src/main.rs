@@ -16,6 +16,12 @@
 //!   inspect       print an artifact set's structure (expert sizes,
 //!                 redundancy, theoretical speedup)
 //!   gen           generate a synthetic ExpertSet and report its stats
+//!                 (--out <dir> exports it as a loadable artifact)
+//!   pack          stamp an artifact directory with a v2 manifest
+//!                 (per-blob sha256, generation, self-hash); --check
+//!                 re-verifies every blob against its digest
+//!   rollback      ask a `serve --watch-artifacts` front to roll back
+//!                 to the previous (or --to N) generation
 //!   bench         quick engine micro-bench (full vs DS at given sizes)
 
 use std::net::TcpListener;
@@ -23,7 +29,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use ds_softmax::adapt::{expert_skew, AdaptPolicy, Adapter};
-use ds_softmax::artifacts::{artifacts_root, Manifest};
+use ds_softmax::artifact::{self, ManifestV2, Rollout, RolloutPolicy};
+use ds_softmax::artifacts::{artifacts_root, write_artifact_dir, Manifest};
 use ds_softmax::benchlib;
 use ds_softmax::benchlib::drift::{self, DriftGen, DriftScenario};
 use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, FabricMetrics, NativeBatchEngine};
@@ -46,7 +53,7 @@ use ds_softmax::util::rng::Rng;
 const USAGE: &str = "\
 dss — Doubly Sparse Softmax serving CLI
 
-USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|bench> [options]
+USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|pack|rollback|bench> [options]
 
   serve    --artifact <name> --queries N --k K --pjrt
            --shards S --shard-plan <contiguous|greedy|weighted|file.json>
@@ -87,6 +94,13 @@ USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|bench> [option
             $DSS_LOG_FILE / stderr)
            --snapshot-interval S emit a metrics_snapshot event every S
             seconds while serving
+           --watch-artifacts <dir>  arm the artifact-rollout watcher:
+            v2-stamped manifests dropped into <dir> (or its immediate
+            subdirs) are hash-verified, canaried, and hot-swapped in;
+            post-swap canary failure rolls back automatically
+            [--rollout-interval-ms MS] [--canary N]
+            (mutually exclusive with --replan-*/--adapt-* — one engine
+             mutator per serve — and with --pjrt/--workers)
            (without an artifact set, serves a synthetic index:
             --n N --d D --experts K --redundancy M --gen-seed S)
   shard-worker  --listen <addr> --shard I --shards S
@@ -104,7 +118,18 @@ USAGE: dss <serve|shard-worker|client|query|top|trace|inspect|gen|bench> [option
            (pull up to N recent sampled span trees, print waterfalls)
   query    --artifact <name> --k K [--seed S]
   inspect  --artifact <name>
-  gen      --n N --d D --experts K --redundancy M
+  gen      --n N --d D --experts K --redundancy M [--out <dir>]
+           (--out writes the set as a loadable artifact directory;
+            stamp it with `dss pack --dir <dir>` before pushing)
+  pack     --dir <artifact-dir> | --artifact <name>
+           [--generation N] [--check]
+           (writes manifest v2 in place: per-blob sha256 digests, a
+            monotone generation, and a canonical self-hash;
+            idempotent — re-packing an already-stamped dir is a no-op)
+  rollback --dir <watch-dir> [--to N]
+           (drops rollback.json into the watch dir; the serving
+            front's rollout watcher re-installs the previous — or
+            generation N — from its content-addressed store)
   bench    --n N --d D --experts K [--iters I] [--batch B] [--shards S]
            [--fast] [--json <path>]   (machine-readable BENCH_*.json
             trail; every entry records kernel_mode/isa/tile)
@@ -128,6 +153,8 @@ fn main() -> anyhow::Result<()> {
         "trace",
         "inspect",
         "gen",
+        "pack",
+        "rollback",
         "bench",
     ]);
     match args.subcommand.as_deref() {
@@ -139,6 +166,8 @@ fn main() -> anyhow::Result<()> {
         Some("trace") => trace_cmd(&args),
         Some("inspect") => inspect(&args),
         Some("gen") => gen(&args),
+        Some("pack") => pack(&args),
+        Some("rollback") => rollback(&args),
         Some("bench") => bench(&args),
         _ => {
             print!("{USAGE}");
@@ -277,9 +306,30 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         );
     }
 
+    // artifact-rollout watcher: a third engine mutator, same
+    // one-mutator-per-serve contract as the adapter/replanner pair
+    let watch = args.get("watch-artifacts").map(std::path::PathBuf::from);
+    if watch.is_some() {
+        anyhow::ensure!(
+            !replan_requested && !adapt_requested,
+            "--watch-artifacts and --replan-*/--adapt-* are mutually exclusive \
+             (one engine mutator per serve; a rollout swap would revert the \
+             other's adapted set and vice versa)"
+        );
+        anyhow::ensure!(
+            !args.flag("pjrt"),
+            "--watch-artifacts rebuilds native engines; not supported with --pjrt"
+        );
+        anyhow::ensure!(
+            args.get("workers").is_none(),
+            "--watch-artifacts swaps the in-process engine; it does not apply \
+             to --workers (fabric-worker artifact push is a roadmap item)"
+        );
+    }
+
     // artifact set when available; otherwise a synthetic index so the
     // serving path (including --shards) runs without the Python export
-    let (set, util, label) = match manifest_from(args) {
+    let (set, util, label, init_gen, init_raw) = match manifest_from(args) {
         Ok(m) => {
             let set = m.expert_set()?;
             println!(
@@ -293,22 +343,41 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             );
             if args.flag("pjrt") {
                 let engine = pjrt_engine(&m)?;
-                return drive(args, engine, set.dim(), n_queries, k, shards, None, None, None);
+                return drive(args, engine, set.dim(), n_queries, k, shards, None, None, None, None);
             }
-            (set, m.utilization.clone(), m.name.clone())
+            // a v2-stamped serving dir seeds the rollout watcher's
+            // generation floor (and its manifest digest, so the
+            // watcher never re-installs what it booted from)
+            let (init_gen, init_raw) = match ManifestV2::load(&m.dir) {
+                Ok(m2) => (m2.generation, m2.raw_sha256.clone()),
+                Err(_) => (0, String::new()), // v1 dir: any stamped push wins
+            };
+            (set, m.utilization.clone(), m.name.clone(), init_gen, init_raw)
         }
         Err(e) => {
             if args.get("artifact").is_some() || args.flag("pjrt") {
                 return Err(e);
             }
             let (set, util) = synthetic_set(args)?;
+            // typed event so log pipelines can alert on a serve that
+            // silently fell back to synthetic weights; the println
+            // stays for humans
+            obs::event::warn(
+                "artifact_fallback_synthetic",
+                vec![
+                    ("err", Json::Str(format!("{e:#}"))),
+                    ("n", set.n_classes.into()),
+                    ("d", set.dim().into()),
+                    ("k", set.k().into()),
+                ],
+            );
             println!(
                 "no artifact set ({e:#}); serving a synthetic index N={} d={} K={}",
                 set.n_classes,
                 set.dim(),
                 set.k()
             );
-            (set, util, "synthetic".to_string())
+            (set, util, "synthetic".to_string(), 0, String::new())
         }
     };
 
@@ -372,13 +441,24 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         };
         let engine = RemoteShardEngine::connect(&set, rplan, &addrs, opts)?;
         let fabric = engine.metrics();
-        return drive(args, Arc::new(engine), d, n_queries, k, shards, None, None, Some(fabric));
+        return drive(args, Arc::new(engine), d, n_queries, k, shards, None, None, None, Some(fabric));
     }
 
-    let (engine, replan, adapt): (
+    let mk_rollout = |plan: Option<&ShardPlan>, set: &ExpertSet| {
+        watch.as_ref().map(|w| RolloutSetup {
+            watch: w.clone(),
+            set: set.clone(),
+            generation: init_gen,
+            raw_sha256: init_raw.clone(),
+            plan: plan.cloned(),
+            policy: rollout_policy(args),
+        })
+    };
+    let (engine, replan, adapt, rollout): (
         Arc<dyn SoftmaxEngine>,
         Option<ReplanSetup>,
         Option<AdaptSetup>,
+        Option<RolloutSetup>,
     ) = if shards > 1 {
         let plan = shard_plan_from(args, &set, shards, &util, plan_file)?;
         println!(
@@ -408,24 +488,27 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             plan: Some(plan.clone()),
             policy: adapt_policy(args),
         });
+        let rollout = mk_rollout(Some(&plan), &set);
         // serial dispatch: the coordinator's worker pool is the
         // parallelism at this layer (its per-expert flushes call
         // `run_expert_batch`, which is inline and shard-local); per-
         // shard pools only serve the direct `query_batch` path
-        (Arc::new(ShardedEngine::new(set, plan)?), replan, adapt)
+        (Arc::new(ShardedEngine::new(set, plan)?), replan, adapt, rollout)
     } else {
         let adapt = adapt_requested.then(|| AdaptSetup {
             set: set.clone(),
             plan: None,
             policy: adapt_policy(args),
         });
+        let rollout = mk_rollout(None, &set);
         (
             Arc::new(NativeBatchEngine::new(DsSoftmax::with_utilization(set, util))),
             None,
             adapt,
+            rollout,
         )
     };
-    drive(args, engine, d, n_queries, k, shards, replan, adapt, None)
+    drive(args, engine, d, n_queries, k, shards, replan, adapt, rollout, None)
 }
 
 /// Arm the observability plane from the CLI: the structured event log
@@ -650,6 +733,27 @@ struct AdaptSetup {
     policy: AdaptPolicy,
 }
 
+/// Artifact-rollout configuration carried from `serve` into the
+/// driver.  `set`/`generation`/`raw_sha256` describe the engine the
+/// serve booted with — the watcher's rollback floor; `plan: Some`
+/// rebuilds pushed generations sharded under the same plan.
+struct RolloutSetup {
+    watch: std::path::PathBuf,
+    set: ExpertSet,
+    generation: u64,
+    raw_sha256: String,
+    plan: Option<ShardPlan>,
+    policy: RolloutPolicy,
+}
+
+fn rollout_policy(args: &Args) -> RolloutPolicy {
+    RolloutPolicy {
+        poll: Duration::from_millis(args.u64_or("rollout-interval-ms", 200).max(1)),
+        canary: args.usize_or("canary", 32),
+        ..Default::default()
+    }
+}
+
 fn adapt_policy(args: &Args) -> AdaptPolicy {
     AdaptPolicy {
         split_skew: args.f64_or("adapt-split-skew", 1.5),
@@ -678,6 +782,7 @@ fn drive(
     shards: usize,
     replan: Option<ReplanSetup>,
     adapt: Option<AdaptSetup>,
+    rollout: Option<RolloutSetup>,
     fabric: Option<Arc<FabricMetrics>>,
 ) -> anyhow::Result<()> {
     let engine_name = engine.name();
@@ -749,6 +854,16 @@ fn drive(
         );
         Adapter::spawn(c.clone(), a.set, a.plan, a.policy)
     });
+    let rollout = rollout.map(|r| {
+        println!(
+            "rollout watcher armed: watching {} (poll {:?}, canary {} probes, serving generation {})",
+            r.watch.display(),
+            r.policy.poll,
+            r.policy.canary,
+            r.generation
+        );
+        Rollout::spawn(c.clone(), r.watch, r.set, r.generation, r.raw_sha256, r.plan, r.policy)
+    });
 
     // --listen: serve fabric clients instead of a local workload; runs
     // until a client sends Shutdown (or the process is killed)
@@ -770,6 +885,10 @@ fn drive(
         if let Some(ad) = adapter {
             let swaps = ad.stop();
             println!("adaptations completed: {swaps} (engine epoch {})", c.engine_epoch());
+        }
+        if let Some(ro) = rollout {
+            let swaps = ro.stop();
+            println!("rollouts completed: {swaps} (engine epoch {})", c.engine_epoch());
         }
         println!("{}", c.metrics.report());
         c.shutdown();
@@ -817,6 +936,12 @@ fn drive(
         // same final-evaluation contract as the replanner
         let swaps = ad.stop();
         println!("adaptations completed: {swaps} (engine epoch {})", c.engine_epoch());
+    }
+    if let Some(ro) = rollout {
+        // stop() runs one final scan, so a push landed during a short
+        // local run still installs before the report
+        let swaps = ro.stop();
+        println!("rollouts completed: {swaps} (engine epoch {})", c.engine_epoch());
     }
     println!("{}", c.metrics.report());
     c.shutdown();
@@ -880,6 +1005,87 @@ fn gen(args: &Args) -> anyhow::Result<()> {
         set.p(),
         set.speedup(&uniform)
     );
+    // --out: export as a loadable artifact directory (v1 manifest +
+    // raw blobs) — the input side of the `dss pack` → push pipeline
+    if let Some(out) = args.get("out") {
+        let name = args.get_or("name", "synthetic");
+        let dir = write_artifact_dir(out, name, &set, &uniform)?;
+        println!("artifact written to {} (stamp it with `dss pack --dir {}`)", dir.display(), out);
+    }
+    Ok(())
+}
+
+/// `dss pack` — stamp an artifact directory with a v2 manifest:
+/// per-blob sha256 digests, a monotone generation, a shape-compat
+/// block, and a canonical self-hash sealing the manifest itself.
+/// Idempotent: re-packing an already-stamped directory rewrites the
+/// same bytes.  `--check` additionally re-streams every blob against
+/// its digest and loads the expert set through the verifying reader.
+fn pack(args: &Args) -> anyhow::Result<()> {
+    let dir = match args.get("dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => {
+            let root = args
+                .get("artifacts-dir")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(artifacts_root);
+            root.join(args.get_or("artifact", "lm"))
+        }
+    };
+    let generation = args
+        .get("generation")
+        .map(|g| g.parse::<u64>())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("bad --generation: {e}"))?;
+    let m2 = artifact::stamp(&dir, generation)?;
+    println!(
+        "packed '{}' generation {}: {} blobs, N={} d={} K={}, manifest sha256 {}…",
+        m2.base.name,
+        m2.generation,
+        m2.blob_sha.len(),
+        m2.base.n_classes,
+        m2.base.d,
+        m2.base.k,
+        &m2.self_sha256[..16]
+    );
+    if args.flag("check") {
+        let n = m2.verify_blobs()?;
+        let set = m2.load_verified_set()?;
+        println!(
+            "check ok: {n} blobs verified, expert set loads through the verifying reader \
+             (N={} d={} K={})",
+            set.n_classes,
+            set.dim(),
+            set.k()
+        );
+    }
+    Ok(())
+}
+
+/// `dss rollback` — ask a `serve --watch-artifacts` front to roll
+/// back by dropping `rollback.json` into its watch directory.  The
+/// watcher consumes the file (removes it before acting) and
+/// re-installs the previous generation — or `--to N` — from its
+/// in-memory history or the content-addressed store.
+fn rollback(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .get("dir")
+        .ok_or_else(|| anyhow::anyhow!("rollback needs --dir <watch-dir>"))?;
+    let to = args
+        .get("to")
+        .map(|g| g.parse::<u64>())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("bad --to: {e}"))?;
+    let body = match to {
+        Some(g) => format!("{}\n", Json::obj(vec![("to", Json::Num(g as f64))])),
+        None => "{}\n".to_string(),
+    };
+    let path = std::path::Path::new(dir).join("rollback.json");
+    std::fs::write(&path, body)?;
+    match to {
+        Some(g) => println!("rollback to generation {g} requested via {}", path.display()),
+        None => println!("rollback to previous generation requested via {}", path.display()),
+    }
     Ok(())
 }
 

@@ -1,0 +1,337 @@
+//! Properties of the content-addressed artifact plane (`artifact`):
+//! the SHA-256 core matches the FIPS 180-4 vectors and streams
+//! identically to one-shot hashing, corrupted pushes (blob or
+//! manifest) are rejected without an engine swap, a valid push is
+//! verified, canaried, and installed live with no lost queries and
+//! results bit-identical to a direct load, rollback restores the
+//! prior generation bit-identically, and `stamp` is idempotent.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ds_softmax::artifact::hash;
+use ds_softmax::artifact::{
+    sha256_hex, stamp, HashingReader, ManifestV2, Rollout, RolloutPolicy, Sha256,
+};
+use ds_softmax::artifacts::write_artifact_dir;
+use ds_softmax::coordinator::{Coordinator, CoordinatorConfig, NativeBatchEngine, SoftmaxEngine};
+use ds_softmax::model::dssoftmax::DsSoftmax;
+use ds_softmax::sparse::ExpertSet;
+use ds_softmax::util::rng::Rng;
+
+fn mk_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dss-artprops-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a small artifact (same shape every time, contents per seed)
+/// into `dir`.  All generations in a test share N=40 d=8 K=4, so
+/// shape compat always passes and rejections are attributable to
+/// hashing alone.
+fn mk_artifact(dir: &Path, seed: u64) -> ExpertSet {
+    let mut rng = Rng::new(seed);
+    let set = ExpertSet::synthetic(40, 8, 4, 2.0, &mut rng);
+    write_artifact_dir(dir, "artprops", &set, &[0.25; 4]).unwrap();
+    set
+}
+
+fn fast_policy() -> RolloutPolicy {
+    RolloutPolicy {
+        poll: Duration::from_millis(5),
+        canary: 8,
+        canary_k: 5,
+        seed: 1,
+        keep: 4,
+    }
+}
+
+/// Spin until `cond` holds; the coordinator keeps serving probe
+/// queries meanwhile so a swap always lands under live traffic.
+/// Returns (submitted, ok) for the lost-query assertion.
+fn drive_until(
+    c: &Arc<Coordinator>,
+    d: usize,
+    mut cond: impl FnMut() -> bool,
+    what: &str,
+) -> (u64, u64) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut rng = Rng::new(0xD21_7E);
+    let (mut submitted, mut ok) = (0u64, 0u64);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        let h = rng.normal_vec(d, 1.0);
+        submitted += 1;
+        if c.query(h, 5).is_ok() {
+            ok += 1;
+        }
+    }
+    (submitted, ok)
+}
+
+// ---------------------------------------------------------------- hash
+
+/// FIPS 180-4 test vectors, including the one-million-'a' vector that
+/// exercises many compression blocks and the length counter.
+#[test]
+fn sha256_matches_fips_vectors() {
+    assert_eq!(
+        sha256_hex(b""),
+        "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+    );
+    assert_eq!(
+        sha256_hex(b"abc"),
+        "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+    );
+    assert_eq!(
+        sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+        "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+    );
+    // 1,000,000 × 'a', fed through the incremental interface in
+    // deliberately awkward chunk sizes
+    let mut h = Sha256::new();
+    let chunk = [b'a'; 997];
+    let mut fed = 0usize;
+    while fed < 1_000_000 {
+        let n = chunk.len().min(1_000_000 - fed);
+        h.update(&chunk[..n]);
+        fed += n;
+    }
+    assert_eq!(
+        hash::hex(&h.finalize()),
+        "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+    );
+}
+
+/// The streaming reader produces the same digest as one-shot hashing
+/// regardless of how the consumer chops its reads — the property that
+/// makes verify-while-load safe to trust.
+#[test]
+fn streaming_reader_matches_one_shot_for_any_chunking() {
+    let data: Vec<u8> = (0..100_003u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect();
+    let want = sha256_hex(&data);
+    for chunk in [1usize, 7, 63, 64, 65, 4096, 100_003] {
+        let mut r = HashingReader::new(&data[..]);
+        let mut buf = vec![0u8; chunk];
+        let mut out = Vec::new();
+        loop {
+            use std::io::Read;
+            let n = r.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            out.extend_from_slice(&buf[..n]);
+        }
+        assert_eq!(out, data, "reader altered the bytes (chunk {chunk})");
+        assert_eq!(hash::hex(&r.digest()), want, "digest diverged at chunk {chunk}");
+    }
+}
+
+// ------------------------------------------------------------- manifest
+
+/// `stamp` is byte-idempotent and the generation ordinal sticks
+/// across re-stamps — repacking a published artifact is a no-op.
+#[test]
+fn pack_is_idempotent() {
+    let dir = mk_dir("idem");
+    mk_artifact(&dir, 11);
+    stamp(&dir, Some(3)).unwrap();
+    let first = std::fs::read(dir.join("manifest.json")).unwrap();
+    let m2 = stamp(&dir, None).unwrap();
+    assert_eq!(m2.generation, 3, "re-stamp must keep the generation");
+    let second = std::fs::read(dir.join("manifest.json")).unwrap();
+    assert_eq!(first, second, "re-stamp must be byte-identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -------------------------------------------------------------- rollout
+
+/// The e2e rollout property: a v2-stamped generation dropped into the
+/// watch directory is verified, canaried, and installed as a live
+/// swap — the epoch advances, no query is lost across the swap, the
+/// generation gauge follows, and the served results are bit-identical
+/// to a coordinator built directly from the same verified artifact.
+#[test]
+fn watch_verify_swap_e2e() {
+    let serve_dir = mk_dir("e2e-serve");
+    let watch = mk_dir("e2e-watch");
+
+    let set1 = mk_artifact(&serve_dir, 21);
+    let m1 = stamp(&serve_dir, Some(1)).unwrap();
+    let engine: Arc<dyn SoftmaxEngine> =
+        Arc::new(NativeBatchEngine::new(DsSoftmax::new(set1.clone())));
+    let c = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
+    let ro = Rollout::spawn(
+        c.clone(),
+        watch.clone(),
+        set1,
+        m1.generation,
+        m1.raw_sha256.clone(),
+        None,
+        fast_policy(),
+    );
+
+    // push generation 2 (atomically enough for the test: the watcher
+    // retries a half-written manifest on the next tick)
+    let gen2 = watch.join("push-gen2");
+    std::fs::create_dir_all(&gen2).unwrap();
+    mk_artifact(&gen2, 22);
+    stamp(&gen2, Some(2)).unwrap();
+
+    let (submitted, ok) = drive_until(&c, 8, || c.engine_epoch() >= 1, "rollout swap");
+    assert_eq!(ok, submitted, "queries lost across the rollout swap");
+    assert_eq!(c.engine_epoch(), 1, "exactly one swap expected");
+    assert_eq!(c.metrics.snapshot().artifact_generation, 2, "generation gauge did not follow");
+
+    // served results must be bit-identical to a coordinator built
+    // directly from the verified artifact — the watcher's load path
+    // adds verification, never transformation
+    let direct_set = ManifestV2::load(&gen2).unwrap().load_verified_set().unwrap();
+    let reference = Arc::new(Coordinator::start(
+        Arc::new(NativeBatchEngine::new(DsSoftmax::new(direct_set))),
+        CoordinatorConfig::default(),
+    ));
+    let mut rng = Rng::new(77);
+    for _ in 0..16 {
+        let h = rng.normal_vec(8, 1.0);
+        let got = c.query(h.clone(), 5).expect("post-swap query");
+        let want = reference.query(h, 5).expect("reference query");
+        assert_eq!(got, want, "rolled-out engine diverged from a direct load");
+    }
+    reference.shutdown();
+
+    let swaps = ro.stop();
+    assert_eq!(swaps, 1);
+    c.shutdown();
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.completed, snap.submitted, "queries lost at shutdown");
+    let _ = std::fs::remove_dir_all(&serve_dir);
+    let _ = std::fs::remove_dir_all(&watch);
+}
+
+/// A single flipped bit — in a weight blob or in the manifest itself —
+/// must reject the push without touching the serving engine, and the
+/// watcher must stay live: a subsequent valid push still installs.
+#[test]
+fn corrupt_push_is_rejected_without_swap() {
+    let serve_dir = mk_dir("corrupt-serve");
+    let watch = mk_dir("corrupt-watch");
+
+    let set1 = mk_artifact(&serve_dir, 31);
+    let m1 = stamp(&serve_dir, Some(1)).unwrap();
+    let engine: Arc<dyn SoftmaxEngine> =
+        Arc::new(NativeBatchEngine::new(DsSoftmax::new(set1.clone())));
+    let c = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
+    let ro = Rollout::spawn(
+        c.clone(),
+        watch.clone(),
+        set1,
+        m1.generation,
+        m1.raw_sha256.clone(),
+        None,
+        fast_policy(),
+    );
+
+    // push A: valid manifest, one bit flipped in a weight blob
+    let bad_blob = watch.join("push-badblob");
+    std::fs::create_dir_all(&bad_blob).unwrap();
+    mk_artifact(&bad_blob, 32);
+    stamp(&bad_blob, Some(2)).unwrap();
+    let blob = bad_blob.join("packed.bin");
+    let mut bytes = std::fs::read(&blob).unwrap();
+    bytes[17] ^= 0x01;
+    std::fs::write(&blob, &bytes).unwrap();
+
+    // push B: valid blobs, one bit flipped mid-manifest
+    let bad_manifest = watch.join("push-badmanifest");
+    std::fs::create_dir_all(&bad_manifest).unwrap();
+    mk_artifact(&bad_manifest, 33);
+    stamp(&bad_manifest, Some(3)).unwrap();
+    let mpath = bad_manifest.join("manifest.json");
+    let mut mbytes = std::fs::read(&mpath).unwrap();
+    let mid = mbytes.len() / 2;
+    mbytes[mid] ^= 0x01;
+    std::fs::write(&mpath, &mbytes).unwrap();
+
+    // give the watcher many poll periods to examine (and reject) both
+    std::thread::sleep(Duration::from_millis(150));
+    assert_eq!(c.engine_epoch(), 0, "a corrupted push must never swap");
+    assert_eq!(c.metrics.snapshot().artifact_generation, 1, "gauge moved on a rejected push");
+
+    // the watcher is not wedged: a valid push into the same watch dir
+    // still verifies and installs
+    let good = watch.join("push-good");
+    std::fs::create_dir_all(&good).unwrap();
+    mk_artifact(&good, 34);
+    stamp(&good, Some(4)).unwrap();
+    let (submitted, ok) = drive_until(&c, 8, || c.engine_epoch() >= 1, "post-rejection rollout");
+    assert_eq!(ok, submitted, "queries lost across the rollout swap");
+    assert_eq!(c.metrics.snapshot().artifact_generation, 4);
+
+    let swaps = ro.stop();
+    assert_eq!(swaps, 1, "only the valid push may install");
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&serve_dir);
+    let _ = std::fs::remove_dir_all(&watch);
+}
+
+/// `dss rollback` semantics: after a rollout, dropping `rollback.json`
+/// into the watch dir re-installs the previous generation — epoch
+/// advances again, the gauge returns, and served results are
+/// bit-identical to the pre-rollout engine.
+#[test]
+fn rollback_restores_prior_generation_bit_identically() {
+    let serve_dir = mk_dir("rb-serve");
+    let watch = mk_dir("rb-watch");
+
+    let set1 = mk_artifact(&serve_dir, 41);
+    let m1 = stamp(&serve_dir, Some(1)).unwrap();
+    let engine: Arc<dyn SoftmaxEngine> =
+        Arc::new(NativeBatchEngine::new(DsSoftmax::new(set1.clone())));
+    let c = Arc::new(Coordinator::start(engine, CoordinatorConfig::default()));
+
+    // record the generation-1 answers before anything swaps
+    let mut rng = Rng::new(99);
+    let probes: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(8, 1.0)).collect();
+    let before: Vec<_> = probes
+        .iter()
+        .map(|h| c.query(h.clone(), 5).expect("gen-1 query"))
+        .collect();
+
+    let ro = Rollout::spawn(
+        c.clone(),
+        watch.clone(),
+        set1,
+        m1.generation,
+        m1.raw_sha256.clone(),
+        None,
+        fast_policy(),
+    );
+
+    let gen2 = watch.join("push-gen2");
+    std::fs::create_dir_all(&gen2).unwrap();
+    mk_artifact(&gen2, 42);
+    stamp(&gen2, Some(2)).unwrap();
+    drive_until(&c, 8, || c.engine_epoch() >= 1, "rollout swap");
+    assert_eq!(c.metrics.snapshot().artifact_generation, 2);
+
+    // explicit rollback request, exactly what `dss rollback` writes
+    std::fs::write(watch.join("rollback.json"), "{}\n").unwrap();
+    let (submitted, ok) = drive_until(&c, 8, || c.engine_epoch() >= 2, "rollback swap");
+    assert_eq!(ok, submitted, "queries lost across the rollback");
+    assert_eq!(c.metrics.snapshot().artifact_generation, 1, "gauge did not return to gen 1");
+
+    let after: Vec<_> = probes
+        .iter()
+        .map(|h| c.query(h.clone(), 5).expect("post-rollback query"))
+        .collect();
+    assert_eq!(before, after, "rollback did not restore generation 1 bit-identically");
+
+    let swaps = ro.stop();
+    assert_eq!(swaps, 1, "rollback must not count as a rollout swap");
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&serve_dir);
+    let _ = std::fs::remove_dir_all(&watch);
+}
